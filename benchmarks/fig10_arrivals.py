@@ -1,0 +1,49 @@
+"""Fig 10 / Fig 12(c) — hour-of-week arrival profile: the clustered
+interarrival sampler must reproduce the weekday/weekend and peak-hour
+structure of the platform traces."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import empirical_workload, fitted_params, timeit_us
+from repro.core.fitting import cluster_of_time
+from repro.core.synthesizer import sample_clustered_arrivals
+from repro.core.trace import arrivals_per_hour
+
+
+def rows():
+    wl = empirical_workload()
+    params = fitted_params()
+    out = []
+
+    horizon = 7 * 86400.0
+    us, t = timeit_us(
+        lambda: np.asarray(sample_clustered_arrivals(
+            params.interarrival_clusters, jax.random.PRNGKey(0),
+            n_max=int(horizon / 20.0))))
+    t = t[t < horizon]
+    sim_prof = arrivals_per_hour(t).reshape(-1)
+    emp_prof = arrivals_per_hour(np.asarray(wl.arrival)).reshape(-1)
+    r = float(np.corrcoef(sim_prof, emp_prof)[0, 1])
+    out.append(("fig10_hourofweek_profile_corr", us, f"{r:.4f}"))
+
+    wk = emp_prof.reshape(7, 24)
+    sim_wk = sim_prof.reshape(7, 24)
+    out.append(("fig10_weekend_damping_emp", us,
+                f"{wk[5:].mean() / wk[:5].mean():.3f}"))
+    out.append(("fig10_weekend_damping_sim", us,
+                f"{sim_wk[5:].mean() / sim_wk[:5].mean():.3f}"))
+    out.append(("fig10_peak_hour_emp", us, str(int(wk[:5].mean(0).argmax()))))
+    out.append(("fig10_peak_hour_sim", us,
+                str(int(sim_wk[:5].mean(0).argmax()))))
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig 12 — simulation accuracy: Q-Q agreement (log10 seconds) between
+empirical and simulated task-duration / interarrival distributions.
+
+The paper reports visual Q-Q agreement; we quantify it as the R^2 of the Q-Q
+scatter against y=x plus max |deviation| in log10 space.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import empirical_workload, fitted_params, timeit_us
+from repro.core import model as M
+from repro.core import stats
+from repro.core.synthesizer import sample_clustered_arrivals, synthesize_workload
+
+
+def _durations(wl, ttype):
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    m = (wl.task_type == ttype) & live
+    return wl.exec_time[m]
+
+
+def rows():
+    wl = empirical_workload()
+    params = fitted_params()
+    us_syn, syn = timeit_us(lambda: synthesize_workload(
+        params, jax.random.PRNGKey(11), horizon_s=2 * 86400.0), repeat=1)
+    out = []
+
+    for ttype, nm in ((M.PREPROCESS, "preprocess"), (M.TRAIN, "train"),
+                      (M.EVALUATE, "evaluate")):
+        qq = stats.qq_stats(_durations(wl, ttype), _durations(syn, ttype))
+        out.append((f"fig12a_{nm}_qq_r2", us_syn, f"{qq['r2']:.4f}"))
+        out.append((f"fig12a_{nm}_qq_maxdev_log10", us_syn,
+                    f"{qq['max_abs_dev_log10']:.3f}"))
+
+    # interarrivals: random (global fit) and realistic (clustered) profiles
+    emp_ia = np.diff(np.sort(np.asarray(wl.arrival)))
+    us_g, s_g = timeit_us(lambda: np.asarray(
+        params.interarrival_global.sample(jax.random.PRNGKey(1), (40000,))))
+    qq = stats.qq_stats(emp_ia, s_g)
+    out.append(("fig12b_interarrival_random_qq_r2", us_g, f"{qq['r2']:.4f}"))
+
+    us_c, t = timeit_us(lambda: np.asarray(sample_clustered_arrivals(
+        params.interarrival_clusters, jax.random.PRNGKey(2), n_max=40000)))
+    qq = stats.qq_stats(emp_ia, np.diff(t))
+    out.append(("fig12b_interarrival_clustered_qq_r2", us_c,
+                f"{qq['r2']:.4f}"))
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig 9 — statistical duration models: preprocess compute-time curve fit
+(f(x) = a*b**x + c on ln(rows*cols)) and per-framework training-duration
+models. Reports the recovered curve parameters (paper's IBM fit:
+a=0.018, b=1.330, c=2.156) and per-framework median durations."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import empirical_workload, fitted_params, timeit_us
+from repro.core import model as M
+from repro.core import stats
+
+
+def rows():
+    wl = empirical_workload()
+    params = fitted_params()
+    out = []
+
+    pp = params.preproc
+    us, _ = timeit_us(lambda: params.preproc.mean_at(np.linspace(4, 20, 4096)))
+    out.append(("fig9a_preproc_curve_a", us, f"{pp.a:.4f}"))
+    out.append(("fig9a_preproc_curve_b", us, f"{pp.b:.4f}"))
+    out.append(("fig9a_preproc_curve_c", us, f"{pp.c:.4f}"))
+
+    # per-framework medians, empirical vs simulated (Fig 9b: 50% of TF jobs
+    # < 180 s vs 50% of SparkML < 10 s in the paper's production data)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    mtr = (wl.task_type == M.TRAIN) & live
+    fw_of_train = np.broadcast_to(wl.framework[:, None], wl.task_type.shape)[mtr]
+    dur = wl.exec_time[mtr]
+    for f in (M.SPARKML, M.TENSORFLOW):
+        emp_med = float(np.median(dur[fw_of_train == f]))
+        us, s = timeit_us(
+            lambda f=f: np.exp(np.asarray(params.train_loggmm[f].sample(
+                jax.random.PRNGKey(0), 4000))[:, 0]))
+        sim_med = float(np.median(s))
+        name = M.FRAMEWORK_NAMES[f]
+        out.append((f"fig9b_{name}_median_emp_s", us, f"{emp_med:.2f}"))
+        out.append((f"fig9b_{name}_median_sim_s", us, f"{sim_med:.2f}"))
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

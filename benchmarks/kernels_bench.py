@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: interpret-mode parity timing is meaningless for
+perf, so we report the jnp-reference wall time (the XLA path the dry-run
+uses) plus analytic kernel arithmetic intensities for the §Roofline story."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit_us
+from repro.kernels import ref
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    B, S, H, D = 4, 1024, 8, 128
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    jax.block_until_ready(f(q, k, v))
+    us, _ = timeit_us(lambda: jax.block_until_ready(f(q, k, v)))
+    flops = 4 * B * H * S * S * D
+    out.append(("kernel_attention_ref_1k_gflops_per_s", us,
+                f"{flops / us / 1e3:.1f}"))
+    # arithmetic intensity of the flash kernel working set
+    ai = flops / ((3 * B * S * H * D + B * S * H * D) * 2)
+    out.append(("kernel_attention_arith_intensity_flops_per_byte", us,
+                f"{ai:.0f}"))
+
+    Bz, S2, Hm, P, N = 4, 1024, 8, 64, 64
+    x = jax.random.normal(ks[0], (Bz, S2, Hm, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S2, Hm))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (Hm,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bz, S2, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (Bz, S2, N)) * 0.3
+    g = jax.jit(lambda *a: ref.mamba2_scan_ref(*a)[0])
+    jax.block_until_ready(g(x, dt, A, Bm, Cm))
+    us, _ = timeit_us(lambda: jax.block_until_ready(g(x, dt, A, Bm, Cm)))
+    chunk = 128
+    flops_ssd = 2 * Bz * (S2 * chunk * (N + Hm * P) + S2 * Hm * P * N * 2)
+    out.append(("kernel_mamba2_ref_1k_gflops_per_s", us,
+                f"{flops_ssd / us / 1e3:.2f}"))
+
+    R, NJ, c = 64, 2048, 8
+    rng = np.random.default_rng(0)
+    rdy = jnp.asarray(np.sort(rng.uniform(0, 1e5, (R, NJ)), 1), jnp.float32)
+    svc = jnp.asarray(rng.exponential(30.0, (R, NJ)), jnp.float32)
+    h = jax.jit(lambda r, s: ref.queue_scan_ref(r, s, capacity=c)[0])
+    jax.block_until_ready(h(rdy, svc))
+    us, _ = timeit_us(lambda: jax.block_until_ready(h(rdy, svc)))
+    out.append(("kernel_queue_scan_jobs_per_s", us,
+                f"{R * NJ / (us / 1e6):.0f}"))
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

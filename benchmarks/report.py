@@ -1,0 +1,65 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from the
+artifacts. (EXPERIMENTS.md §Perf is written by hand from the hillclimb log.)
+
+  PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs as CN
+from repro.configs.shapes import SHAPES
+from repro.core import costmodel as CM
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [f"### Mesh: {mesh} "
+             f"({'2x16x16 = 512 chips' if mesh == 'multi' else '16x16 = 256 chips'})",
+             "",
+             "| arch | shape | status | flops/dev (raw) | bytes/dev (raw) | "
+             "arg GiB | temp GiB | all-reduce | all-gather | reduce-scatter "
+             "| all-to-all | permute | compile s |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in CN.ARCHS:
+        for shape in SHAPES:
+            rec = CM.load_cell(mesh, arch, shape)
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | | | | | | |")
+                continue
+            if rec["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | SKIP (quadratic attn "
+                             f"@524k) | | | | | | | | | | |")
+                continue
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | | | | | |")
+                continue
+            m = rec["memory"]
+            c = rec["collectives"]
+            gb = lambda v: f"{v / 2**30:.2f}"
+            cb = lambda k: (f"{c[k]['count']}x/"
+                            f"{c[k]['bytes'] / 2**20:.0f}MiB"
+                            if c[k]["count"] else "—")
+            lines.append(
+                f"| {arch} | {shape} | ok | {rec['flops_per_device']:.2e} "
+                f"| {rec['bytes_accessed_per_device']:.2e} "
+                f"| {gb(m.get('argument_size_in_bytes', 0))} "
+                f"| {gb(m.get('temp_size_in_bytes', 0))} "
+                f"| {cb('all-reduce')} | {cb('all-gather')} "
+                f"| {cb('reduce-scatter')} | {cb('all-to-all')} "
+                f"| {cb('collective-permute')} | {rec['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    from benchmarks.roofline import table
+    print("## §Dry-run\n")
+    print(dryrun_table("single"))
+    print()
+    print(dryrun_table("multi"))
+    print("\n## §Roofline (single pod, scan-corrected audit)\n")
+    print(table("single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""§Roofline — per (arch x shape) three-term roofline from the dry-run
+artifacts + scan-corrected audit (benchmarks/audit.py).
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_bytes / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Also reports MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (serve), the
+useful-compute ratio, and the dominant term per cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.configs.shapes import SHAPES
+from repro.core import costmodel as CM
+
+
+def cell_row(mesh: str, arch: str, shape: str) -> Optional[dict]:
+    rec = CM.load_cell(mesh, arch, shape)
+    if rec is None:
+        return None
+    if rec.get("status") == "skip":
+        return {"arch": arch, "shape": shape, "status": "skip",
+                "reason": rec.get("skip_reason", "")}
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "status": "error"}
+    audit = CM.load_audit(mesh, arch, shape)
+    if audit is not None and audit.get("status") != "ok":
+        audit = None
+    terms = CM.roofline_terms(rec, CM.V5E, audit)
+    return {"arch": arch, "shape": shape, "status": "ok",
+            "audited": audit is not None, **terms}
+
+
+def rows():
+    out = []
+    from repro import configs as CN
+    for arch in CN.ARCHS:
+        for shape in SHAPES:
+            r = cell_row("single", arch, shape)
+            if r is None:
+                continue
+            tag = f"roofline_{arch}_{shape}"
+            if r["status"] == "skip":
+                out.append((tag, 0.0, "SKIP_subquadratic_only"))
+                continue
+            if r["status"] != "ok":
+                out.append((tag, 0.0, "ERROR"))
+                continue
+            out.append((f"{tag}_dominant", 0.0, r["dominant"]))
+            out.append((f"{tag}_step_ms", 0.0, f"{r['step_s'] * 1e3:.3f}"))
+            out.append((f"{tag}_roofline_fraction", 0.0,
+                        f"{r['roofline_fraction']:.3f}"))
+    return out
+
+
+def table(mesh: str = "single") -> str:
+    from repro import configs as CN
+    lines = ["| arch | shape | compute_ms | memory_ms | collective_ms | "
+             "dominant | MODEL_TF | useful | roofline_frac | audited |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in CN.ARCHS:
+        for shape in SHAPES:
+            r = cell_row(mesh, arch, shape)
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING "
+                             "| - | - | - | - |")
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP "
+                             "(quadratic attn @524k) | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | - | - | ERROR | - "
+                             "| - | - | - |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {r['compute_s'] * 1e3:.3f} | {r['memory_s'] * 1e3:.3f} "
+                f"| {r['collective_s'] * 1e3:.3f} | **{r['dominant']}** "
+                f"| {r['model_flops'] / 1e12:.1f} "
+                f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+                f"| {'y' if r['audited'] else 'raw'} |")
+    return "\n".join(lines)
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--table" in sys.argv:
+        print(table())
+    else:
+        main()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured quantity).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig13      # one suite
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = [
+    ("table1", "benchmarks.table1_compression"),
+    ("fig9", "benchmarks.fig9_task_durations"),
+    ("fig10", "benchmarks.fig10_arrivals"),
+    ("fig11", "benchmarks.fig11_saturation"),
+    ("fig12", "benchmarks.fig12_accuracy"),
+    ("fig13", "benchmarks.fig13_scalability"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    which = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for tag, modname in SUITES:
+        if which and which != tag:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for row in mod.rows():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{tag}_FAILED,0,{type(e).__name__}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Table I — model-compression effects on accuracy / size / inference time.
+
+Validates that the compression-effect model reproduces the paper's measured
+pruning table exactly at the knots (interp mode) and reports the quadratic
+regression residual (the paper: "the relative changes … could be described
+by a regression model")."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit_us
+from repro.core.metrics import (PRUNE_LEVELS, TABLE1, apply_compression,
+                                compression_effect)
+
+
+def rows():
+    out = []
+    for arch in ("googlenet", "resnet50"):
+        for metric in ("accuracy", "size_mb", "inference_ms"):
+            tab = TABLE1[arch][metric]
+            us, got = timeit_us(
+                lambda a=arch, m=metric: compression_effect(
+                    PRUNE_LEVELS, a, m, mode="interp") * TABLE1[a][m][0])
+            knot_err = float(np.max(np.abs(got - tab)))
+            us2, got2 = timeit_us(
+                lambda a=arch, m=metric: compression_effect(
+                    PRUNE_LEVELS, a, m, mode="poly") * TABLE1[a][m][0])
+            poly_rmse = float(np.sqrt(np.mean((got2 - tab) ** 2)))
+            out.append((f"table1_{arch}_{metric}_knot_maxerr", us,
+                        f"{knot_err:.4g}"))
+            out.append((f"table1_{arch}_{metric}_poly_rmse", us2,
+                        f"{poly_rmse:.3f}"))
+
+    # end-to-end asset mutation at 40% pruning (resnet50 row)
+    rng = np.random.default_rng(0)
+    perf = np.full(1000, 0.813)
+    size = np.full(1000, 91.1e6)
+    us, (p2, s2) = timeit_us(
+        lambda: apply_compression(perf, size, np.full(1000, 0.4),
+                                  "resnet50", rng))
+    out.append(("table1_apply_40pct_acc_rel", us,
+                f"{float(p2.mean() / 0.813):.4f}"))
+    out.append(("table1_apply_40pct_size_rel", us,
+                f"{float(s2.mean() / 91.1e6):.4f}"))
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

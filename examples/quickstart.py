@@ -1,0 +1,40 @@
+"""Quickstart: the PipeSim loop in ~40 lines.
+
+1. Generate empirical platform traces (the "real system");
+2. fit simulation parameters (GMMs, duration curves, clustered arrivals);
+3. synthesize a workload and simulate it on a modeled platform;
+4. read the analytics.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (PlatformConfig, ResourceConfig, des,
+                        fit_simulation_params, generate_empirical_workload,
+                        synthesize_workload)
+from repro.core.trace import flatten_trace, summarize
+
+# 1. two days of "production" traces
+wl = generate_empirical_workload(seed=0, horizon_s=2 * 86400.0)
+print(f"empirical traces: {wl.n} pipelines, "
+      f"mean interarrival {np.diff(np.sort(wl.arrival)).mean():.1f}s")
+
+# 2. fit -> export (the paper's scipy/scikit-learn offline step, in JAX)
+params = fit_simulation_params(wl, interarrival_families=(0,),
+                               asset_components=16, em_iters=30,
+                               max_cluster_fit_n=500)
+
+# 3. simulate one day on a smaller platform than production
+platform = PlatformConfig(resources=(
+    ResourceConfig("compute_cluster", 24),
+    ResourceConfig("learning_cluster", 12)))
+syn = synthesize_workload(params, jax.random.PRNGKey(1),
+                          horizon_s=86400.0, platform=platform)
+trace = des.simulate(syn, platform)
+
+# 4. analytics (the dashboard numbers)
+rec = flatten_trace(trace, syn)
+import json
+print(json.dumps(summarize(rec, platform.capacities, 86400.0), indent=2,
+                 default=float))

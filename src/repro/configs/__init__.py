@@ -1,0 +1,86 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig + input specs.
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of the lowered step (train / prefill / decode) — weak-type
+correct, shardable, no device allocation. Modality frontends are stubs: the
+VLM receives precomputed patch embeddings, the audio model precomputed frame
+embeddings (assignment spec).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported  # noqa: F401
+from repro.models.common import shape_mode
+from repro.models.transformer import DTYPES, ModelConfig, get_model
+
+_MODULES = {
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "granite-20b": "repro.configs.granite_20b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "llama-3.2-vision-90b": "repro.configs.llama3_2_vision_90b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large",
+}
+
+ARCHS = list(_MODULES)
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).config(**overrides)
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for the step inputs of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = DTYPES[cfg.compute_dtype]
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["ctx"] = _sds((B, cfg.n_ctx, cfg.d_ctx), cdt)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, S // 4, cfg.d_model), cdt)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), i32)}
+        if cfg.family == "vlm":
+            out["ctx"] = _sds((B, cfg.n_ctx, cfg.d_ctx), cdt)
+        if cfg.family == "audio":
+            out["ctx"] = _sds((B, cfg.n_ctx, cfg.d_model), cdt)
+        return out
+
+    # decode: one new token against a cache holding S entries
+    model = get_model(cfg)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "tokens": _sds((B, 1), i32),
+        "cache": cache_shapes,
+        "pos": _sds((), i32),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    """(ShapeDtypeStruct param tree, logical axes tree) — zero allocation."""
+    model = get_model(cfg)
+    with shape_mode():
+        shapes, axes = model.init(None)
+    return shapes, axes

@@ -1,0 +1,27 @@
+"""PipeSim core: trace-driven simulation of AI operations platforms.
+
+The paper's contribution as a composable JAX library:
+
+- :mod:`repro.core.model` — conceptual system model (pipelines, tasks,
+  resources, assets) as struct-of-arrays;
+- :mod:`repro.core.stats`, :mod:`repro.core.gmm` — fit/export/sample
+  statistical machinery (Dist records, JAX EM GMM);
+- :mod:`repro.core.workload` — ground-truth "real system" trace generator;
+- :mod:`repro.core.fitting` — trace -> SimulationParams fitting;
+- :mod:`repro.core.synthesizer` — pipeline & data synthesizer (JAX);
+- :mod:`repro.core.des` / :mod:`repro.core.vdes` — exact reference engine and
+  the vectorized JAX engine;
+- :mod:`repro.core.metrics`, :mod:`repro.core.runtime` — model metrics,
+  drift, triggers, feedback co-simulation;
+- :mod:`repro.core.trace` — columnar trace store + analytics;
+- :mod:`repro.core.experiment` — experiment runner / sweeps;
+- :mod:`repro.core.costmodel` — roofline-grounded task durations from the
+  Level-1 dry-run (the trace link between simulator and real system).
+"""
+
+from repro.core.des import POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF  # noqa: F401
+from repro.core.experiment import Experiment, run_experiment, sweep  # noqa: F401
+from repro.core.fitting import SimulationParams, fit_simulation_params  # noqa: F401
+from repro.core.model import PlatformConfig, ResourceConfig, Workload  # noqa: F401
+from repro.core.synthesizer import synthesize_workload  # noqa: F401
+from repro.core.workload import generate_empirical_workload  # noqa: F401

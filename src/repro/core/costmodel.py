@@ -1,0 +1,138 @@
+"""Roofline cost model: the trace link between the Level-1 stack and PipeSim.
+
+Reads the dry-run artifacts (launch/dryrun.py JSONs, plus the scan-corrected
+FLOP audit from benchmarks/roofline.py when available) and derives per-cell
+step-time estimates from the three roofline terms. These feed back into the
+simulator as *grounded* task-duration models: a "train deepseek-v3 for K
+steps" pipeline task gets its duration from the compiled artifact instead of
+a fitted black-box GMM — the paper's §IV "link that reconciles the
+experimentation environment to the real system".
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import stats
+
+ARTIFACT_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts"))
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """TPU v5e (target hardware)."""
+
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+V5E = HardwareSpec()
+
+
+def roofline_terms(rec: Dict, hw: HardwareSpec = V5E,
+                   audit: Optional[Dict] = None) -> Dict:
+    """Three roofline terms (seconds) for one dry-run cell record.
+
+    Uses the scan-corrected audit (benchmarks/roofline.py) when provided:
+    XLA's cost_analysis counts while/scan bodies once, so raw dry-run
+    numbers underestimate layer-stacked models.
+    """
+    n_dev = rec.get("n_devices", 256)
+    if audit is not None:
+        flops = audit["flops_per_device"]
+        bytes_acc = audit["bytes_per_device"]
+        coll_bytes = audit["collective_bytes_per_device"]
+    else:
+        flops = rec.get("flops_per_device", 0.0)
+        bytes_acc = rec.get("bytes_accessed_per_device", 0.0)
+        coll_bytes = sum(v["bytes"] for v in rec.get("collectives",
+                                                     {}).values())
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_acc / hw.hbm_bw
+    collective_s = coll_bytes / hw.ici_bw  # per-device link-bytes / link bw
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    # MODEL_FLOPS: 6*N*D total across devices (dense) / active for MoE
+    n_active = rec.get("active_params", rec.get("params", 0))
+    tokens = rec.get("seq_len", 0) * rec.get("global_batch", 0)
+    if rec.get("kind") == "train":
+        model_flops = 6.0 * n_active * tokens
+    elif rec.get("kind") == "prefill":
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        model_flops = 2.0 * n_active * rec.get("global_batch", 0)
+    useful_ratio = (model_flops / (flops * n_dev)) if flops > 0 else 0.0
+    step_s = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "step_s": step_s,
+        "model_flops": model_flops,
+        "hlo_flops_total": flops * n_dev,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": (model_flops / n_dev / hw.peak_flops) / step_s
+        if step_s > 0 else 0.0,
+    }
+
+
+def load_cell(mesh: str, arch: str, shape: str,
+              tag: Optional[str] = None) -> Optional[Dict]:
+    suffix = f"__{tag}" if tag else ""
+    p = os.path.join(ARTIFACT_ROOT, "dryrun", mesh,
+                     f"{arch}__{shape}{suffix}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def load_audit(mesh: str, arch: str, shape: str) -> Optional[Dict]:
+    p = os.path.join(ARTIFACT_ROOT, "roofline",
+                     f"{mesh}__{arch}__{shape}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def arch_task_duration(arch: str, shape: str = "train_4k",
+                       mesh: str = "single", n_steps: int = 1000,
+                       jitter_sigma: float = 0.25,
+                       hw: HardwareSpec = V5E) -> Optional[stats.Dist]:
+    """Duration distribution for an accelerator-cluster task of ``n_steps``
+    train steps (or decode steps) of ``arch`` — lognormal around the
+    roofline step-time estimate. None if the cell wasn't dry-run yet."""
+    rec = load_cell(mesh, arch, shape)
+    if rec is None or rec.get("status") != "ok":
+        return None
+    audit = load_audit(mesh, arch, shape)
+    terms = roofline_terms(rec, hw, audit)
+    total = max(terms["step_s"] * n_steps, 1e-3)
+    return stats._scalar_dist(stats.LOGNORMAL, float(np.log(total)),
+                              jitter_sigma, 0.0)
+
+
+def accelerator_workload_catalog(mesh: str = "single",
+                                 n_steps: int = 1000) -> Dict[str, stats.Dist]:
+    """All archs with completed dry-runs -> grounded train-duration dists
+    (the simulator's workload classes for an accelerator platform)."""
+    out = {}
+    for p in glob.glob(os.path.join(ARTIFACT_ROOT, "dryrun", mesh,
+                                    "*__train_4k.json")):
+        arch = os.path.basename(p).split("__")[0]
+        d = arch_task_duration(arch, "train_4k", mesh, n_steps)
+        if d is not None:
+            out[arch] = d
+    return out

@@ -1,0 +1,112 @@
+"""Reference discrete-event engine (SimPy semantics, numpy + heapq).
+
+This is the oracle for the vectorized JAX engine: capacity-constrained
+resources with queue admission ordered by a pluggable policy
+(FIFO / PRIORITY / SJF), pipelines as sequential task chains.
+
+Wave semantics (shared with ``vdes``): all events at the same timestamp are
+retired together — finishes first (slots released, successor tasks become
+ready at the same instant), then arrivals, then one admission round per
+resource. Admission order key: (policy key, ready time, pipeline id).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core import model as M
+
+POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF = 0, 1, 2
+POLICY_NAMES = ["fifo", "priority", "sjf"]
+
+
+def _policy_key(policy: int, wl: M.Workload, service: np.ndarray,
+                pid: int, tidx: int) -> float:
+    if policy == POLICY_PRIORITY:
+        return -float(wl.priority[pid])
+    if policy == POLICY_SJF:
+        return float(service[pid, tidx])
+    return 0.0
+
+
+def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
+             policy: int = POLICY_FIFO) -> M.SimTrace:
+    platform = platform or M.PlatformConfig()
+    service = wl.service_time(platform.datastore)
+    n, T = wl.task_type.shape
+    caps = platform.capacities
+    nres = caps.shape[0]
+
+    start = np.full((n, T), np.nan)
+    finish = np.full((n, T), np.nan)
+    ready = np.full((n, T), np.nan)
+
+    free = caps.astype(np.int64).copy()
+    waiting: list[list] = [[] for _ in range(nres)]  # heaps of (key, t, pid, tidx)
+    task_idx = np.zeros(n, np.int64)
+
+    # event heap: (time, kind, pid); kind 0 = finish, 1 = arrival
+    # (finishes processed before arrivals at equal time)
+    ev: list = [(float(wl.arrival[i]), 1, i) for i in range(n)]
+    heapq.heapify(ev)
+
+    def enqueue(pid: int, t: float) -> None:
+        tidx = int(task_idx[pid])
+        r = int(wl.task_res[pid, tidx])
+        ready[pid, tidx] = t
+        k = _policy_key(policy, wl, service, pid, tidx)
+        heapq.heappush(waiting[r], (k, t, pid, tidx))
+
+    def admit(t: float) -> None:
+        for r in range(nres):
+            while free[r] > 0 and waiting[r]:
+                _, _, pid, tidx = heapq.heappop(waiting[r])
+                free[r] -= 1
+                s = float(service[pid, tidx])
+                start[pid, tidx] = t
+                finish[pid, tidx] = t + s
+                heapq.heappush(ev, (t + s, 0, pid))
+
+    while ev:
+        t_star = ev[0][0]
+        wave = []
+        while ev and ev[0][0] == t_star:
+            wave.append(heapq.heappop(ev))
+        for _, kind, pid in wave:          # finishes sort before arrivals
+            if kind == 0:
+                tidx = int(task_idx[pid])
+                free[int(wl.task_res[pid, tidx])] += 1
+                task_idx[pid] += 1
+                if task_idx[pid] < wl.n_tasks[pid]:
+                    enqueue(pid, t_star)
+            else:
+                enqueue(pid, t_star)
+        admit(t_star)
+
+    return M.SimTrace(
+        start=start, finish=finish, ready=ready,
+        n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
+        task_type=wl.task_type, arrival=np.asarray(wl.arrival, np.float64),
+        capacities=caps,
+    )
+
+
+def single_station_fifo(ready: np.ndarray, service: np.ndarray,
+                        capacity: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exact c-server FIFO queue for ONE resource: jobs sorted by ready time.
+
+    Oracle for the ``queue_scan`` Pallas kernel. Returns (start, finish).
+    """
+    order = np.argsort(ready, kind="stable")
+    slots = np.zeros(capacity)
+    start = np.empty_like(ready)
+    finish = np.empty_like(ready)
+    for j in order:
+        k = int(np.argmin(slots))
+        s = max(ready[j], slots[k])
+        start[j] = s
+        finish[j] = s + service[j]
+        slots[k] = finish[j]
+    return start, finish

@@ -1,0 +1,143 @@
+"""Multivariate Gaussian mixture model — fit (EM) and sample, pure JAX.
+
+The paper fits a 50-component full-covariance GMM on log-transformed
+(rows, cols, bytes) asset observations with scikit-learn and exports it to the
+simulator (§V-A.1). We implement the same estimator natively in JAX so fitting
+can run on-device (and so the E-step can be served by the Pallas
+``gmm_logpdf`` kernel), and we reproduce the paper's log-transform +
+out-of-bound rejection sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_LOG2PI = 1.8378770664093453
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GMM:
+    log_weights: jnp.ndarray  # [K]
+    means: jnp.ndarray        # [K, D]
+    chol: jnp.ndarray         # [K, D, D] lower Cholesky of covariance
+
+    def tree_flatten(self):
+        return (self.log_weights, self.means, self.chol), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_components(self) -> int:
+        return self.means.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.means.shape[1]
+
+    def component_log_prob(self, x: jnp.ndarray) -> jnp.ndarray:
+        """log N(x | mu_k, Sigma_k) + log w_k for all k.  x: [N, D] -> [N, K]."""
+        return _component_log_prob(self.log_weights, self.means, self.chol, x)
+
+    def log_prob(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.scipy.special.logsumexp(self.component_log_prob(x), axis=-1)
+
+    def sample(self, key: jax.Array, n: int) -> jnp.ndarray:
+        kc, kz = jax.random.split(key)
+        comp = jax.random.categorical(kc, self.log_weights, shape=(n,))
+        z = jax.random.normal(kz, (n, self.dim), dtype=self.means.dtype)
+        mu = self.means[comp]
+        L = self.chol[comp]
+        return mu + jnp.einsum("nij,nj->ni", L, z)
+
+
+def _component_log_prob(log_w, means, chol, x):
+    # diff: [N, K, D]; y = L^{-1} diff per component -> Mahalanobis.
+    d = means.shape[-1]
+    eye = jnp.eye(d, dtype=chol.dtype)
+    inv_chol = jax.vmap(
+        lambda L: jax.scipy.linalg.solve_triangular(L, eye, lower=True))(chol)
+    diff = x[:, None, :] - means[None, :, :]
+    y = jnp.einsum("kij,nkj->nki", inv_chol, diff)
+    maha = jnp.sum(y * y, axis=-1)
+    logdet = jnp.sum(jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), axis=-1)
+    d = means.shape[-1]
+    return log_w[None, :] - 0.5 * (maha + d * _LOG2PI) - logdet[None, :]
+
+
+def _kmeanspp_init(key, x, k):
+    """k-means++ seeding for EM means."""
+    n = x.shape[0]
+
+    def body(carry, i):
+        key, means, mind = carry
+        key, kp = jax.random.split(key)
+        logits = jnp.log(jnp.maximum(mind, 1e-12))
+        idx = jax.random.categorical(kp, logits)
+        c = x[idx]
+        means = means.at[i].set(c)
+        d = jnp.sum((x - c[None]) ** 2, axis=-1)
+        return (key, means, jnp.minimum(mind, d)), None
+
+    key, k0 = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+    means0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    mind0 = jnp.sum((x - first[None]) ** 2, axis=-1)
+    (_, means, _), _ = jax.lax.scan(body, (key, means0, mind0), jnp.arange(1, k))
+    return means
+
+
+@partial(jax.jit, static_argnames=("n_components", "n_iter"))
+def fit_gmm(key: jax.Array, x: jnp.ndarray, n_components: int = 50,
+            n_iter: int = 60, reg: float = 1e-5) -> GMM:
+    """EM for a full-covariance GMM (scikit-learn ``GaussianMixture``
+    equivalent; the paper uses K=50, full covariance, on log data)."""
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    k = n_components
+    means = _kmeanspp_init(key, x, k)
+    var0 = jnp.var(x, axis=0) + reg
+    chol = jnp.tile(jnp.diag(jnp.sqrt(var0))[None], (k, 1, 1))
+    log_w = jnp.full((k,), -jnp.log(k))
+
+    def em_step(carry, _):
+        log_w, means, chol = carry
+        logp = _component_log_prob(log_w, means, chol, x)      # [N, K]
+        logz = jax.scipy.special.logsumexp(logp, axis=1, keepdims=True)
+        r = jnp.exp(logp - logz)                               # [N, K]
+        nk = jnp.sum(r, axis=0) + 1e-8                         # [K]
+        means_new = (r.T @ x) / nk[:, None]
+        diff = x[:, None, :] - means_new[None]                 # [N, K, D]
+        cov = jnp.einsum("nk,nki,nkj->kij", r, diff, diff) / nk[:, None, None]
+        cov = cov + reg * jnp.eye(d, dtype=x.dtype)[None]
+        chol_new = jnp.linalg.cholesky(cov)
+        log_w_new = jnp.log(nk / n)
+        ll = jnp.mean(logz)
+        return (log_w_new, means_new, chol_new), ll
+
+    (log_w, means, chol), lls = jax.lax.scan(
+        em_step, (log_w, means, chol), None, length=n_iter)
+    return GMM(log_w, means, chol)
+
+
+def sample_log_gmm_rejecting(gmm: GMM, key: jax.Array, n: int,
+                             lo: jnp.ndarray, hi: jnp.ndarray,
+                             oversample: int = 4) -> jnp.ndarray:
+    """Paper §V-A.1: the GMM is fit on log-transformed data; at simulation
+    time we transform back and *reject out-of-bound values*. Vectorized
+    rejection: draw ``oversample*n``, keep the first n in-bound (fall back to
+    clipping for any shortfall so the shape stays static)."""
+    m = oversample * n
+    raw = gmm.sample(key, m)
+    val = jnp.exp(raw)
+    ok = jnp.all((val >= lo[None]) & (val <= hi[None]), axis=-1)
+    # stable order: indices of accepted draws first, rejected after.
+    order = jnp.argsort(~ok, stable=True)
+    picked = val[order[:n]]
+    clipped = jnp.clip(picked, lo[None], hi[None])
+    return clipped

@@ -1,0 +1,93 @@
+"""ML model metrics (paper §III-A, §V-A.2d Table I).
+
+Static metrics (assigned at build time): accuracy/AUC, size, CLEVER
+robustness. Dynamic metrics (run-time): staleness, drift, confidence.
+Includes the Table I compression-effect model: the paper publishes measured
+pruning effects for GoogleNet / ResNet50 on Food101 and notes "the relative
+changes in model metrics could be described by a regression model" — we fit
+that regression (quadratic in prune level, exact at the published knots via
+piecewise-linear option) and use it to mutate model assets in compress tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+
+# Table I (prune %, accuracy %, size MB, inference ms)
+PRUNE_LEVELS = np.array([0.0, 0.2, 0.4, 0.6, 0.8])
+TABLE1 = {
+    "googlenet": {
+        "accuracy": np.array([80.7, 80.9, 80.0, 77.7, 69.8]),
+        "size_mb": np.array([42.5, 28.7, 20.9, 14.6, 8.5]),
+        "inference_ms": np.array([128.0, 117.0, 100.0, 84.0, 71.0]),
+    },
+    "resnet50": {
+        "accuracy": np.array([81.3, 80.9, 80.8, 79.5, 69.8]),
+        "size_mb": np.array([91.1, 83.5, 65.2, 41.9, 8.5]),
+        "inference_ms": np.array([223.0, 200.0, 169.0, 141.0, 72.0]),
+    },
+}
+
+
+def compression_effect(prune: np.ndarray, arch: str = "resnet50",
+                       metric: str = "accuracy",
+                       mode: Literal["interp", "poly"] = "interp") -> np.ndarray:
+    """Relative multiplier on a model metric after pruning ``prune`` in [0,1].
+
+    ``interp`` reproduces Table I exactly at the knots; ``poly`` is the
+    quadratic regression the paper suggests.
+    """
+    tab = TABLE1[arch][metric]
+    rel = tab / tab[0]
+    prune = np.asarray(prune, np.float64)
+    if mode == "interp":
+        return np.interp(prune, PRUNE_LEVELS, rel)
+    coef = np.polyfit(PRUNE_LEVELS, rel, 2)
+    return np.polyval(coef, np.clip(prune, 0.0, 0.8))
+
+
+def apply_compression(perf: np.ndarray, size: np.ndarray, prune: np.ndarray,
+                      arch: str = "resnet50", rng: np.random.Generator | None = None):
+    """Mutate (performance, size) of model assets for a compress task; the
+    Gaussian jitter mirrors §V-A.2d."""
+    rng = rng or np.random.default_rng(0)
+    f_acc = compression_effect(prune, arch, "accuracy")
+    f_sz = compression_effect(prune, arch, "size_mb")
+    jitter = rng.normal(1.0, 0.01, np.shape(prune))
+    return np.clip(perf * f_acc * jitter, 0.0, 1.0), size * f_sz
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    """Run-time view of one deployed model (Fig 7)."""
+
+    model_id: int
+    perf0: float                 # performance right after (re)training
+    deployed_at: float           # seconds
+    gradual_rate: float          # perf loss per second (concept drift, slow)
+    jump_rate: float             # sudden-drift events per second
+    jump_scale: float            # mean magnitude of sudden drops
+    seasonal_amp: float = 0.0    # recurring-drift amplitude (Fig 2 bottom)
+    seasonal_period: float = 7 * 24 * 3600.0
+    last_jumps: float = 0.0      # accumulated sudden losses
+
+    def performance(self, t: float) -> float:
+        dt = max(t - self.deployed_at, 0.0)
+        season = self.seasonal_amp * 0.5 * (1 - np.cos(2 * np.pi * dt / self.seasonal_period))
+        return float(np.clip(
+            self.perf0 - self.gradual_rate * dt - self.last_jumps - season,
+            0.0, 1.0))
+
+    def staleness(self, t: float) -> float:
+        """Staleness in [0, 1]: decrease in predictive performance over time
+        relative to the freshly deployed model (§III-A)."""
+        return float(np.clip(self.perf0 - self.performance(t), 0.0, 1.0))
+
+    def potential_improvement(self, t: float, new_data_fraction: float) -> float:
+        """§III-A: potential ~ f(current performance p(M), newly labeled data
+        since last retraining)."""
+        p = self.performance(t)
+        return float(np.clip((1.0 - p) * 0.6 + self.staleness(t) * 0.3
+                             + new_data_fraction * 0.1, 0.0, 1.0))

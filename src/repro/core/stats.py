@@ -1,0 +1,212 @@
+"""Statistical distributions for trace-driven simulation (paper §V-A).
+
+The paper's pattern: fit distributions with scipy/sklearn *offline*, export the
+parameters, and *sample* inside the simulator. We keep that split:
+
+  - ``fit_*`` functions run host-side (numpy/scipy) on empirical trace arrays;
+  - every fitted family is exported as a :class:`Dist` — a dtype-uniform
+    ``(family, p0, p1, p2)`` record that samples via inverse-CDF in pure JAX,
+    so per-cluster sampling (168 hour-of-week clusters) is a gather +
+    branchless transform, TPU-friendly.
+
+Families (ids must stay stable — they are serialized):
+  0 LOGNORMAL  x = exp(p0 + p1 * z)                      (p2 unused)
+  1 EXPONWEIB  F(x) = (1 - exp(-(x/p2)**p1))**p0  -> ppf
+  2 PARETO     x = p1 + p2 * ((1-u)**(-1/p0) - 1) + p2   (scipy param.)
+  3 NORMAL     x = p0 + p1 * z
+  4 EXPONENTIAL x = -p0 * log1p(-u)                      (p0 = scale)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOGNORMAL, EXPONWEIB, PARETO, NORMAL, EXPONENTIAL = 0, 1, 2, 3, 4
+
+_FAMILY_NAMES = {
+    LOGNORMAL: "lognormal",
+    EXPONWEIB: "exponweib",
+    PARETO: "pareto",
+    NORMAL: "normal",
+    EXPONENTIAL: "exponential",
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """A (batched) parametric distribution; fields may carry leading axes."""
+
+    family: jnp.ndarray  # int32 []... or [C]
+    p0: jnp.ndarray
+    p1: jnp.ndarray
+    p2: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.family, self.p0, self.p1, self.p2), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def name(self) -> str:
+        fam = np.asarray(self.family)
+        if fam.ndim == 0:
+            return _FAMILY_NAMES[int(fam)]
+        return f"clustered[{fam.shape}]"
+
+    def sample(self, key: jax.Array, shape=()) -> jnp.ndarray:
+        """Draw samples; ``self`` must be scalar-parameterized."""
+        u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0 - 1e-7)
+        z = jax.random.normal(jax.random.fold_in(key, 1), shape)
+        return dist_transform(self.family, self.p0, self.p1, self.p2, u, z)
+
+    def mean_estimate(self, key: jax.Array, n: int = 20000) -> float:
+        return float(jnp.mean(self.sample(key, (n,))))
+
+
+def dist_transform(family, p0, p1, p2, u, z):
+    """Branchless inverse-CDF / reparameterized transform (broadcasts)."""
+    ln = jnp.exp(p0 + p1 * z)
+    a = jnp.maximum(p0, 1e-6)
+    c = jnp.maximum(p1, 1e-6)
+    scale = jnp.maximum(p2, 1e-30)
+    inner = -jnp.log1p(-jnp.power(u, 1.0 / a))
+    ew = scale * jnp.power(jnp.maximum(inner, 1e-30), 1.0 / c)
+    par = p1 + jnp.maximum(p2, 1e-30) * jnp.power(1.0 - u, -1.0 / jnp.maximum(p0, 1e-6))
+    nrm = p0 + p1 * z
+    expo = -jnp.maximum(p0, 1e-30) * jnp.log1p(-u)
+    out = jnp.where(family == LOGNORMAL, ln, 0.0)
+    out = jnp.where(family == EXPONWEIB, ew, out)
+    out = jnp.where(family == PARETO, par, out)
+    out = jnp.where(family == NORMAL, nrm, out)
+    out = jnp.where(family == EXPONENTIAL, expo, out)
+    return out
+
+
+def sample_clustered(dist: Dist, cluster: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Sample x[i] ~ dist[cluster[i]] for a batched `Dist` (one gather)."""
+    fam = dist.family[cluster]
+    p0 = dist.p0[cluster]
+    p1 = dist.p1[cluster]
+    p2 = dist.p2[cluster]
+    u = jax.random.uniform(key, cluster.shape, minval=1e-7, maxval=1.0 - 1e-7)
+    z = jax.random.normal(jax.random.fold_in(key, 1), cluster.shape)
+    return dist_transform(fam, p0, p1, p2, u, z)
+
+
+# ---------------------------------------------------------------------------
+# Host-side fitting (scipy), mirroring the paper's offline fit-export flow.
+# ---------------------------------------------------------------------------
+
+def fit_lognormal(x: np.ndarray) -> Dist:
+    lx = np.log(np.maximum(np.asarray(x, np.float64), 1e-12))
+    return _scalar_dist(LOGNORMAL, float(lx.mean()), float(lx.std() + 1e-9), 0.0)
+
+
+def fit_normal(x: np.ndarray) -> Dist:
+    x = np.asarray(x, np.float64)
+    return _scalar_dist(NORMAL, float(x.mean()), float(x.std() + 1e-9), 0.0)
+
+
+def fit_exponential(x: np.ndarray) -> Dist:
+    return _scalar_dist(EXPONENTIAL, float(np.mean(x)), 0.0, 0.0)
+
+
+def fit_exponweib(x: np.ndarray) -> Dist:
+    from scipy import stats as sps
+
+    x = np.asarray(x, np.float64)
+    a, c, _loc, scale = sps.exponweib.fit(x, floc=0.0)
+    return _scalar_dist(EXPONWEIB, float(a), float(c), float(scale))
+
+
+def fit_pareto(x: np.ndarray) -> Dist:
+    from scipy import stats as sps
+
+    x = np.asarray(x, np.float64)
+    b, loc, scale = sps.pareto.fit(x)
+    return _scalar_dist(PARETO, float(b), float(loc - scale), float(scale))
+
+
+_FITTERS = {
+    LOGNORMAL: fit_lognormal,
+    EXPONWEIB: fit_exponweib,
+    PARETO: fit_pareto,
+    NORMAL: fit_normal,
+    EXPONENTIAL: fit_exponential,
+}
+
+
+def _scalar_dist(family: int, p0: float, p1: float, p2: float) -> Dist:
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    return Dist(jnp.asarray(family, jnp.int32), f32(p0), f32(p1), f32(p2))
+
+
+def histogram_sse(x: np.ndarray, dist: Dist, bins: int = 60, n_mc: int = 30000) -> float:
+    """Sum-of-squared-errors between the empirical histogram density and the
+    fitted density (estimated by Monte-Carlo histogram on the same bins) —
+    the paper's model-selection criterion (§V-A.3)."""
+    x = np.asarray(x, np.float64)
+    lo, hi = np.percentile(x, [0.5, 99.5])
+    if hi <= lo:
+        hi = lo + 1.0
+    edges = np.linspace(lo, hi, bins + 1)
+    emp, _ = np.histogram(x, bins=edges, density=True)
+    s = np.asarray(dist.sample(jax.random.PRNGKey(0), (n_mc,)))
+    s = s[np.isfinite(s)]
+    mod, _ = np.histogram(s, bins=edges, density=True)
+    return float(np.sum((emp - mod) ** 2))
+
+
+def best_fit(x: np.ndarray, candidates: Sequence[int] = (LOGNORMAL, EXPONWEIB, PARETO)) -> Dist:
+    """Fit every candidate family and keep the lowest-SSE one (paper §V-A.3)."""
+    best, best_sse = None, np.inf
+    for fam in candidates:
+        try:
+            d = _FITTERS[fam](x)
+            sse = histogram_sse(x, d)
+        except Exception:  # a family can fail to converge on odd strata
+            continue
+        if np.isfinite(sse) and sse < best_sse:
+            best, best_sse = d, sse
+    if best is None:
+        best = fit_lognormal(x)
+    return best
+
+
+def stack_dists(dists: Sequence[Dist]) -> Dist:
+    """Stack scalar Dists into a batched (clustered) Dist."""
+    return Dist(
+        jnp.stack([d.family for d in dists]),
+        jnp.stack([d.p0 for d in dists]),
+        jnp.stack([d.p1 for d in dists]),
+        jnp.stack([d.p2 for d in dists]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Q-Q agreement (Fig 12 machinery): quantile comparison between two samples.
+# ---------------------------------------------------------------------------
+
+def qq_stats(empirical: np.ndarray, simulated: np.ndarray, n_q: int = 99) -> dict:
+    """Quantile-quantile agreement in log10-space, as plotted in Fig 12.
+
+    Returns R^2 of the Q-Q scatter against the y=x line plus max abs deviation
+    (both in log10 seconds) — a scalar summary of the paper's visual check.
+    """
+    qs = np.linspace(0.01, 0.99, n_q)
+    e = np.log10(np.maximum(np.quantile(np.asarray(empirical, np.float64), qs), 1e-9))
+    s = np.log10(np.maximum(np.quantile(np.asarray(simulated, np.float64), qs), 1e-9))
+    ss_res = float(np.sum((e - s) ** 2))
+    ss_tot = float(np.sum((e - e.mean()) ** 2)) + 1e-12
+    return {
+        "r2": 1.0 - ss_res / ss_tot,
+        "max_abs_dev_log10": float(np.max(np.abs(e - s))),
+        "mean_abs_dev_log10": float(np.mean(np.abs(e - s))),
+    }

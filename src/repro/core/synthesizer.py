@@ -1,0 +1,178 @@
+"""Pipeline & data synthesizer (paper §IV-B): sample workloads from fitted
+``SimulationParams`` — all draws in JAX, exported to numpy ``Workload``
+structures for the simulation engines.
+
+All stochastic trace content (structures, assets, durations, arrivals) is
+pre-sampled as dense tensors: the TPU-native decomposition (DESIGN.md §3) —
+sampling is embarrassingly parallel; only queueing is resolved by the DES.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as M
+from repro.core import stats
+from repro.core.fitting import SimulationParams
+from repro.core.gmm import sample_log_gmm_rejecting
+from repro.core.workload import MAX_TASKS
+
+
+# ---------------------------------------------------------------------------
+# Arrival sampling: sequential semantics, vectorized as a scan (§V-A.3:
+# "map real timestamps to simulation time, and use that to sample from the
+# respective cluster").
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_max",))
+def sample_clustered_arrivals(params_clusters: stats.Dist, key: jax.Array,
+                              n_max: int, interarrival_factor: float = 1.0,
+                              t0: float = 0.0) -> jnp.ndarray:
+    """Draw up to ``n_max`` arrival times; cluster = hour-of-week of the
+    *previous* arrival. Returns [n_max] float32 times (monotone)."""
+    u = jax.random.uniform(key, (n_max,), minval=1e-7, maxval=1.0 - 1e-7)
+    z = jax.random.normal(jax.random.fold_in(key, 1), (n_max,))
+
+    def body(t, uz):
+        ui, zi = uz
+        c = (jnp.floor(t / 3600.0).astype(jnp.int32)) % 168
+        delta = stats.dist_transform(
+            params_clusters.family[c], params_clusters.p0[c],
+            params_clusters.p1[c], params_clusters.p2[c], ui, zi)
+        delta = jnp.clip(delta, 1e-3, 24 * 3600.0) * interarrival_factor
+        t_new = t + delta
+        return t_new, t_new
+
+    _, times = jax.lax.scan(body, jnp.float32(t0), (u, z))
+    return times
+
+
+# ---------------------------------------------------------------------------
+# Full workload synthesis.
+# ---------------------------------------------------------------------------
+
+def synthesize_workload(
+    params: SimulationParams,
+    key: jax.Array,
+    horizon_s: float,
+    platform: Optional[M.PlatformConfig] = None,
+    interarrival_factor: float = 1.0,
+    n_max: Optional[int] = None,
+) -> M.Workload:
+    platform = platform or M.PlatformConfig()
+    keys = jax.random.split(key, 24)
+
+    # --- arrivals
+    mean_ia = float(np.mean(np.asarray(
+        params.interarrival_global.sample(keys[0], (4096,))))) * interarrival_factor
+    mean_ia = max(mean_ia, 1e-2)
+    if n_max is None:
+        n_max = int(horizon_s / mean_ia * 1.6) + 64
+    t = np.asarray(sample_clustered_arrivals(
+        params.interarrival_clusters, keys[1], n_max, interarrival_factor))
+    arrival = t[t < horizon_s].astype(np.float64)
+    n = arrival.shape[0]
+    if n == 0:
+        raise ValueError("horizon too short: no arrivals synthesized")
+
+    # --- structures (fitted presence probabilities, canonical order)
+    sp = params.structure_probs
+    un = jax.random.uniform(keys[2], (n, M.N_TASK_TYPES))
+    present = np.asarray(un) < sp[None, :]
+    present[:, M.TRAIN] = True
+    # deploy requires evaluate (quality gate precedes deployment)
+    present[:, M.DEPLOY] &= present[:, M.EVALUATE]
+    order = [M.PREPROCESS, M.TRAIN, M.EVALUATE, M.COMPRESS, M.HARDEN, M.DEPLOY]
+    tt = np.full((n, MAX_TASKS), -1, np.int32)
+    cnt = np.zeros(n, np.int32)
+    for ttype in order:
+        m = present[:, ttype]
+        tt[m, cnt[m]] = ttype
+        cnt[m] += 1
+
+    # --- frameworks
+    fw = np.asarray(jax.random.categorical(
+        keys[3], jnp.log(jnp.asarray(params.framework_mix) + 1e-12), shape=(n,))
+    ).astype(np.int32)
+
+    # --- assets from the log-space GMM with rejection (§V-A.1)
+    assets = np.asarray(sample_log_gmm_rejecting(
+        params.asset_gmm, keys[4], n,
+        jnp.asarray(params.asset_lo, jnp.float32),
+        jnp.asarray(params.asset_hi, jnp.float32)))
+    rows, cols, nbytes = assets[:, 0], assets[:, 1], assets[:, 2]
+
+    # --- durations
+    x = np.log(np.maximum(rows * cols, 1.0))
+    noise = np.asarray(params.preproc.noise.sample(keys[5], (n,)))
+    t_pre = params.preproc.mean_at(x) * noise
+
+    t_train = np.zeros(n)
+    for f in range(M.N_FRAMEWORKS):
+        m = fw == f
+        k = int(m.sum())
+        if k:
+            s = params.train_loggmm[f].sample(jax.random.fold_in(keys[6], f), k)
+            t_train[m] = np.exp(np.asarray(s)[:, 0])
+    t_eval = np.exp(np.asarray(params.eval_loggmm.sample(keys[7], n))[:, 0])
+    t_comp = t_train * np.clip(np.asarray(params.compress_noise.sample(keys[8], (n,))), 0.05, 10.0)
+    t_hard = t_train * np.clip(np.asarray(params.harden_ratio.sample(keys[9], (n,))), 0.05, 50.0)
+    t_depl = np.asarray(params.deploy.sample(keys[10], (n,)))
+
+    # --- model assets (materialized at train time, §V-B.b)
+    perf = np.zeros(n, np.float32)
+    for f in range(M.N_FRAMEWORKS):
+        m = fw == f
+        k = int(m.sum())
+        if k:
+            s = np.asarray(params.model_perf_loggmm[f].sample(
+                jax.random.fold_in(keys[11], f), k))[:, 0]
+            perf[m] = 1.0 / (1.0 + np.exp(-s))
+    zsz = np.asarray(jax.random.normal(keys[12], (n,)))
+    msize = np.exp(params.model_size_logmu[fw] + params.model_size_logsd[fw] * zsz)
+    clever = np.exp(np.asarray(jax.random.normal(keys[13], (n,))) * 0.5 + np.log(0.3))
+
+    per_type_time = {
+        M.PREPROCESS: t_pre, M.TRAIN: t_train, M.EVALUATE: t_eval,
+        M.COMPRESS: t_comp, M.HARDEN: t_hard, M.DEPLOY: t_depl,
+    }
+    exec_time = np.zeros((n, MAX_TASKS))
+    read_b = np.zeros((n, MAX_TASKS))
+    write_b = np.zeros((n, MAX_TASKS))
+    for j in range(MAX_TASKS):
+        col = tt[:, j]
+        for ttype, tv in per_type_time.items():
+            m = col == ttype
+            if not m.any():
+                continue
+            exec_time[m, j] = np.maximum(tv[m], 1e-2)
+            if ttype == M.PREPROCESS:
+                read_b[m, j] = nbytes[m]; write_b[m, j] = nbytes[m]
+            elif ttype == M.TRAIN:
+                read_b[m, j] = nbytes[m]; write_b[m, j] = msize[m]
+            elif ttype == M.EVALUATE:
+                read_b[m, j] = msize[m] + 0.2 * nbytes[m]
+            elif ttype == M.COMPRESS:
+                read_b[m, j] = msize[m]; write_b[m, j] = 0.4 * msize[m]
+            elif ttype == M.HARDEN:
+                read_b[m, j] = msize[m] + nbytes[m]; write_b[m, j] = msize[m]
+            elif ttype == M.DEPLOY:
+                read_b[m, j] = msize[m]
+
+    task_res = platform.route(np.maximum(tt, 0)) * (tt >= 0)
+    wl = M.Workload(
+        arrival=arrival, n_tasks=cnt, task_type=tt,
+        task_res=task_res.astype(np.int32),
+        exec_time=exec_time, read_bytes=read_b, write_bytes=write_b,
+        framework=fw, priority=np.zeros(n, np.float32),
+        model_perf=perf, model_size=msize.astype(np.float32),
+        model_clever=clever.astype(np.float32),
+    )
+    wl.asset_rows = rows   # type: ignore[attr-defined]
+    wl.asset_cols = cols   # type: ignore[attr-defined]
+    wl.asset_bytes = nbytes  # type: ignore[attr-defined]
+    return wl

@@ -1,0 +1,159 @@
+"""Columnar trace store + analytics (the paper's InfluxDB/Grafana role).
+
+The paper concludes InfluxDB "was overall a poor choice" — we persist
+synthetic traces as columnar numpy (npz) and compute the dashboard metrics
+(Fig 11) directly: resource utilization over time, queue lengths, task wait
+times, arrival counts, network traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import model as M
+
+
+@dataclasses.dataclass
+class TaskRecords:
+    """Flat per-task event records (one row per executed task)."""
+
+    pipeline: np.ndarray   # [E] i64
+    task_pos: np.ndarray   # [E]
+    task_type: np.ndarray  # [E]
+    resource: np.ndarray   # [E]
+    ready: np.ndarray      # [E] f64
+    start: np.ndarray      # [E]
+    finish: np.ndarray     # [E]
+    read_bytes: np.ndarray
+    write_bytes: np.ndarray
+    framework: np.ndarray
+
+    @property
+    def wait(self) -> np.ndarray:
+        return self.start - self.ready
+
+    @property
+    def duration(self) -> np.ndarray:
+        return self.finish - self.start
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, **dataclasses.asdict(self))
+
+    @staticmethod
+    def load(path: str) -> "TaskRecords":
+        z = np.load(path)
+        return TaskRecords(**{k: z[k] for k in z.files})
+
+
+def flatten_trace(trace: M.SimTrace, wl: M.Workload) -> TaskRecords:
+    n, T = trace.start.shape
+    idx = np.arange(T)[None, :]
+    live = idx < trace.n_tasks[:, None]
+    pid, pos = np.nonzero(live)
+    return TaskRecords(
+        pipeline=pid, task_pos=pos,
+        task_type=trace.task_type[pid, pos],
+        resource=trace.task_res[pid, pos],
+        ready=trace.ready[pid, pos],
+        start=trace.start[pid, pos],
+        finish=trace.finish[pid, pos],
+        read_bytes=wl.read_bytes[pid, pos],
+        write_bytes=wl.write_bytes[pid, pos],
+        framework=wl.framework[pid],
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytics
+# ---------------------------------------------------------------------------
+
+def utilization_timeline(rec: TaskRecords, capacities: np.ndarray,
+                         bin_s: float = 3600.0,
+                         horizon_s: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Busy-server integral per resource per time bin / (capacity * bin)."""
+    horizon = horizon_s or float(np.nanmax(rec.finish)) + 1.0
+    nbins = int(np.ceil(horizon / bin_s))
+    nres = capacities.shape[0]
+    util = np.zeros((nres, nbins))
+    edges = np.arange(nbins + 1) * bin_s
+    for r in range(nres):
+        m = rec.resource == r
+        s, f = rec.start[m], rec.finish[m]
+        for b in range(nbins):
+            lo, hi = edges[b], edges[b + 1]
+            overlap = np.clip(np.minimum(f, hi) - np.maximum(s, lo), 0.0, None)
+            util[r, b] = overlap.sum() / (capacities[r] * bin_s)
+    return {"edges": edges, "util": util}
+
+
+def mean_utilization(rec: TaskRecords, capacities: np.ndarray,
+                     horizon_s: float) -> np.ndarray:
+    nres = capacities.shape[0]
+    out = np.zeros(nres)
+    for r in range(nres):
+        m = rec.resource == r
+        busy = np.clip(np.minimum(rec.finish[m], horizon_s) - rec.start[m],
+                       0.0, None).sum()
+        out[r] = busy / (capacities[r] * horizon_s)
+    return out
+
+
+def queue_length_timeline(rec: TaskRecords, nres: int, bin_s: float = 3600.0,
+                          horizon_s: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Time-averaged number of waiting jobs per resource per bin."""
+    horizon = horizon_s or float(np.nanmax(rec.finish)) + 1.0
+    nbins = int(np.ceil(horizon / bin_s))
+    q = np.zeros((nres, nbins))
+    edges = np.arange(nbins + 1) * bin_s
+    for r in range(nres):
+        m = rec.resource == r
+        a, s = rec.ready[m], rec.start[m]
+        for b in range(nbins):
+            lo, hi = edges[b], edges[b + 1]
+            overlap = np.clip(np.minimum(s, hi) - np.maximum(a, lo), 0.0, None)
+            q[r, b] = overlap.sum() / bin_s
+    return {"edges": edges, "qlen": q}
+
+
+def arrivals_per_hour(arrival_s: np.ndarray) -> np.ndarray:
+    """[7, 24] mean arrivals per hour-of-week slot (Fig 10)."""
+    hrs = (arrival_s // 3600.0).astype(np.int64)
+    how = hrs % 168
+    n_weeks = max(1.0, (arrival_s.max() - arrival_s.min()) / (168 * 3600.0))
+    counts = np.bincount(how, minlength=168).astype(np.float64) / n_weeks
+    return counts.reshape(7, 24)
+
+
+def network_traffic(rec: TaskRecords, bin_s: float = 3600.0,
+                    horizon_s: Optional[float] = None,
+                    tcp_overhead: float = 1.05) -> Dict[str, np.ndarray]:
+    """Bytes moved to/from the data store per bin (dashboard panel; the paper
+    notes its traffic figure 'includes TCP overhead')."""
+    horizon = horizon_s or float(np.nanmax(rec.finish)) + 1.0
+    nbins = int(np.ceil(horizon / bin_s))
+    edges = np.arange(nbins + 1) * bin_s
+    b = np.clip((rec.start // bin_s).astype(np.int64), 0, nbins - 1)
+    rd = np.bincount(b, weights=rec.read_bytes, minlength=nbins) * tcp_overhead
+    wr = np.bincount(b, weights=rec.write_bytes, minlength=nbins) * tcp_overhead
+    return {"edges": edges, "read": rd, "write": wr}
+
+
+def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float) -> Dict:
+    util = mean_utilization(rec, capacities, horizon_s)
+    out = {
+        "n_tasks": int(rec.start.shape[0]),
+        "n_pipelines": int(np.unique(rec.pipeline).shape[0]),
+        "mean_wait_s": float(np.nanmean(rec.wait)),
+        "p50_wait_s": float(np.nanpercentile(rec.wait, 50)),
+        "p95_wait_s": float(np.nanpercentile(rec.wait, 95)),
+        "p99_wait_s": float(np.nanpercentile(rec.wait, 99)),
+        "utilization": {M.RESOURCE_NAMES[r] if r < len(M.RESOURCE_NAMES) else f"res{r}":
+                        float(util[r]) for r in range(capacities.shape[0])},
+    }
+    for t in range(M.N_TASK_TYPES):
+        m = rec.task_type == t
+        if m.any():
+            out[f"wait_{M.TASK_TYPE_NAMES[t]}_s"] = float(np.mean(rec.wait[m]))
+    return out

@@ -1,0 +1,62 @@
+"""Deterministic synthetic data pipeline.
+
+On-device token synthesis (hash-based PRNG of (step, position)) — zero host
+I/O, reproducible across restarts (the batch for step k is a pure function of
+(seed, k)), sharded like the training batch. This is the data substrate for
+the end-to-end examples and the fault-tolerance tests: after a crash/restore
+the stream resumes at the right step with identical contents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    n_ctx: int = 0
+    d_ctx: int = 0
+    family: str = "dense"
+    d_model: int = 0
+
+
+def synth_batch(cfg: DataConfig, step: int) -> Dict[str, jnp.ndarray]:
+    """Pure function of (cfg.seed, step): a language-like token batch.
+
+    Tokens follow a Zipf-ish marginal with local repetition structure so the
+    loss curve is non-trivial (learnable bigram statistics)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    B, S, V = cfg.batch, cfg.seq_len, cfg.vocab_size
+    # Zipf marginal via inverse-CDF on uniform
+    u = jax.random.uniform(k1, (B, S), minval=1e-6, maxval=1.0)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(V)))).astype(jnp.int32) - 1
+    base = jnp.clip(ranks, 0, V - 1)
+    # local repetition: with p=0.3 copy the previous token (shifted mix)
+    rep = jax.random.bernoulli(k2, 0.3, (B, S))
+    shifted = jnp.roll(base, 1, axis=1)
+    tokens = jnp.where(rep, shifted, base)
+    labels = jnp.roll(tokens, -1, axis=1)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.family == "vlm" and cfg.n_ctx:
+        out["ctx"] = jax.random.normal(k3, (B, cfg.n_ctx, cfg.d_ctx),
+                                       jnp.bfloat16)
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(k3, (B, S // 4, cfg.d_model),
+                                          jnp.bfloat16)
+    return out
+
+
+def data_iterator(cfg: DataConfig, start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield synth_batch(cfg, step)
+        step += 1

@@ -1,0 +1,113 @@
+"""Flash attention Pallas TPU kernel (causal, GQA-aware).
+
+Streaming online-softmax: grid = (B, H, n_q_blocks, n_kv_blocks) with the KV
+dimension innermost/sequential; the running (acc, m, l) state lives in VMEM
+scratch across KV steps. Q/K/V tiles are MXU-aligned (block_q x D,
+block_k x D); accumulation is f32. GQA maps query head h to KV head
+h // (H // Hkv) in the K/V index_maps — no repeated KV materialization.
+
+Causal handling: KV blocks strictly above the diagonal contribute nothing;
+they are masked via the position comparison (Pallas TPU grids are dense; the
+tile-skip variant is a revision documented in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, n_kv: int, causal: bool,
+                  scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)       # [bq, D]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)       # [bk, D]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)       # [bk, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # [bq]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """q: [B, S, H, D]; k, v: [B, S, Hkv, D] -> [B, S, H, D]."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    # layout: heads-major for clean [bq, D] tiles
+    qt = q.transpose(0, 2, 1, 3)      # [B, H, S, D]
+    kt = k.transpose(0, 2, 1, 3)      # [B, Hkv, S, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, n_kv=nk, causal=causal,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

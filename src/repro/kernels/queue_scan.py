@@ -1,0 +1,67 @@
+"""c-server FIFO queue scan Pallas kernel — the DES hot loop (DESIGN.md §3).
+
+Given per-resource job streams sorted by ready time, computes exact start /
+finish times of an M/G/c FIFO station: the carry is the vector of the c
+earliest server-free times, held in VMEM; each job takes the min slot.
+Grid = (n_queues,) — one program per (resource x replica), so a Monte-Carlo
+capacity sweep of thousands of stations runs as one kernel launch.
+
+The inner loop is argmin + masked update over a (c,)-vector — VPU work, not
+MXU; the win over the host engine is batching queues across the grid and
+keeping the whole job stream in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _queue_kernel(ready_ref, service_ref, start_ref, finish_ref, slots_ref,
+                  *, n_jobs: int, capacity: int):
+    slots_ref[...] = jnp.zeros_like(slots_ref)
+
+    def body(j, _):
+        slots = slots_ref[...]
+        k = jnp.argmin(slots)
+        r = ready_ref[0, j]
+        s = jnp.maximum(r, slots[k])
+        f = s + service_ref[0, j]
+        start_ref[0, j] = s
+        finish_ref[0, j] = f
+        idx = jax.lax.broadcasted_iota(jnp.int32, (capacity,), 0)
+        slots_ref[...] = jnp.where(idx == k, f, slots)
+        return 0
+
+    jax.lax.fori_loop(0, n_jobs, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def queue_scan(ready: jnp.ndarray, service: jnp.ndarray, *, capacity: int,
+               interpret: bool = False):
+    """ready, service: [R, N] (sorted by ready within each row).
+    Returns (start, finish): [R, N] f32."""
+    R, N = ready.shape
+    kernel = functools.partial(_queue_kernel, n_jobs=N, capacity=capacity)
+    start, finish = pl.pallas_call(
+        kernel,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda r: (r, 0)),
+            pl.BlockSpec((1, N), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, N), lambda r: (r, 0)),
+            pl.BlockSpec((1, N), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, N), jnp.float32),
+            jax.ShapeDtypeStruct((R, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((capacity,), jnp.float32)],
+        interpret=interpret,
+    )(ready.astype(jnp.float32), service.astype(jnp.float32))
+    return start, finish

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input shape)
+on the production meshes, record memory/cost analysis + collective bytes.
+
+This is the proof that the distribution config is coherent without hardware:
+``.lower().compile()`` must succeed for every supported cell on the 16x16
+(256-chip) single-pod mesh AND the 2x16x16 (512-chip) multi-pod mesh.
+
+Artifacts: one JSON per cell under artifacts/dryrun/<mesh>/, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as CN
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import DTYPES, get_model
+from repro.optim import adamw
+from repro.parallel import sharding as Sh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# archs large enough to need FSDP param/optimizer sharding on 16 GB HBM
+FSDP_ARCHS = {"deepseek-v3-671b", "llama4-maverick-400b-a17b",
+              "llama-3.2-vision-90b", "granite-20b"}
+BF16_MOMENT_ARCHS = {"deepseek-v3-671b", "llama4-maverick-400b-a17b"}
+# gradient-accumulation microbatches for train cells (bounds activations)
+TRAIN_MICROBATCHES = {
+    "deepseek-v3-671b": 8, "llama4-maverick-400b-a17b": 8,
+    "llama-3.2-vision-90b": 8, "granite-20b": 4, "granite-3-8b": 2,
+    "stablelm-3b": 2, "llama3.2-1b": 2, "zamba2-1.2b": 2,
+    "seamless-m4t-large-v2": 2, "xlstm-125m": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum max-shape bytes per collective category from optimized HLO."""
+    out = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        # match ops like: %all-reduce.5 = bf16[...] all-reduce(...)
+        for cat in _COLLECTIVES:
+            if f" {cat}(" in ls or f"{cat}-start(" in ls:
+                shapes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(ls)]
+                if shapes:
+                    out[cat]["bytes"] += max(shapes)
+                    out[cat]["count"] += 1
+                break
+    return out
+
+
+def _opt_specs(param_specs_tree, moment_dtype):
+    dt = DTYPES[moment_dtype] if moment_dtype in DTYPES else jnp.float32
+    mom = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt), param_specs_tree)
+    return {"m": mom,
+            "v": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, dt), param_specs_tree),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               overrides: Optional[dict] = None) -> Dict:
+    overrides = dict(overrides or {})
+    mb_override = overrides.pop("microbatches", None)
+    fsdp_override = overrides.pop("fsdp", None)
+    cfg = CN.get_config(arch, **overrides)
+    spec = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg.family, shape_name)
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": spec.kind, "seq_len": spec.seq_len,
+                 "global_batch": spec.global_batch,
+                 "n_devices": int(np.prod(list(mesh.shape.values()))),
+                 "params": cfg.param_count(),
+                 "active_params": cfg.active_param_count(),
+                 "overrides": {k: str(v) for k, v in overrides.items()}}
+    if not ok:
+        rec["status"] = "skip"
+        rec["skip_reason"] = reason
+        return rec
+
+    model = get_model(cfg)
+    pshapes, paxes = CN.param_specs(cfg)
+    fsdp = (arch in FSDP_ARCHS) if fsdp_override is None else bool(fsdp_override)
+    rec["fsdp"] = fsdp
+    rules = Sh.make_rules(fsdp=fsdp, data_axes=Sh.dp_axes(mesh))
+    psh = Sh.param_shardings(paxes, pshapes, mesh, rules)
+    ins = CN.input_specs(cfg, spec)
+    t0 = time.perf_counter()
+
+    if spec.kind == "train":
+        from repro.train.trainer import _grad_fn
+        opt_cfg = adamw.AdamWConfig(
+            moment_dtype="bfloat16" if arch in BF16_MOMENT_ARCHS
+            else "float32")
+        mb = int(mb_override if mb_override is not None
+                 else TRAIN_MICROBATCHES.get(arch, 1))
+        rec["microbatches"] = mb
+        opt_specs = _opt_specs(pshapes, opt_cfg.moment_dtype)
+        opt_sh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
+        batch_sh = Sh.batch_shardings(ins["batch"], mesh)
+        grads_of = _grad_fn(model, mb)
+
+        def step_fn(params, opt_state, batch):
+            grads, loss, _ = grads_of(params, batch)
+            new_p, new_o, m = adamw.apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+            return new_p, new_o, loss
+
+        fn = jax.jit(step_fn,
+                     in_shardings=(psh, opt_sh, batch_sh),
+                     out_shardings=(psh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        with mesh, Sh.activation_mesh(mesh):
+            lowered = fn.lower(pshapes, opt_specs, ins["batch"])
+    elif spec.kind == "prefill":
+        from repro.serving.engine import make_prefill_step
+        prefill_step, cache_sh = make_prefill_step(
+            cfg, mesh, spec.global_batch, spec.seq_len)
+        tok_sh = Sh.batch_shardings(
+            {"t": ins["tokens"]}, mesh)["t"]
+        args = [pshapes, ins["tokens"]]
+        in_sh = [psh, tok_sh]
+        if "ctx" in ins:
+            args.append(ins["ctx"])
+            in_sh.append(Sh.batch_shardings({"c": ins["ctx"]}, mesh)["c"])
+        fn = jax.jit(prefill_step, in_shardings=tuple(in_sh),
+                     out_shardings=(None, cache_sh))
+        with mesh, Sh.activation_mesh(mesh):
+            lowered = fn.lower(*args)
+    else:  # decode
+        from repro.serving.engine import make_serve_step
+        serve_step, cache_sh, tok_sh = make_serve_step(
+            cfg, mesh, spec.global_batch, spec.seq_len)
+        fn = jax.jit(serve_step,
+                     in_shardings=(psh, tok_sh, cache_sh, None),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(2,))
+        with mesh, Sh.activation_mesh(mesh):
+            lowered = fn.lower(pshapes, ins["tokens"], ins["cache"],
+                               ins["pos"])
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    rec.update({
+        "status": "ok",
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory": {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "flops_per_device": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0))
+        if cost else -1.0,
+        "cost_raw": {k: float(v) for k, v in (cost or {}).items()
+                     if isinstance(v, (int, float)) and not k.startswith("utilization")},
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    })
+    return rec
+
+
+def cell_path(mesh_name: str, arch: str, shape_name: str) -> str:
+    d = os.path.abspath(os.path.join(ARTIFACT_DIR, mesh_name))
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override k=v (ast-eval'd)")
+    ap.add_argument("--tag", default=None,
+                    help="artifact tag suffix (perf experiments)")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    mesh_name = args.mesh
+    archs = CN.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    import ast
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    for arch in archs:
+        for shape_name in shapes:
+            path = cell_path(mesh_name, arch, shape_name)
+            if args.tag:
+                path = path.replace(".json", f"__{args.tag}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-cached] {arch} x {shape_name} ({mesh_name})")
+                continue
+            print(f"[lower+compile] {arch} x {shape_name} ({mesh_name}) ...",
+                  flush=True)
+            try:
+                rec = lower_cell(arch, shape_name, mesh, mesh_name, overrides)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f" flops/dev={rec['flops_per_device']:.3e}"
+                         f" temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                         f" compile={rec['compile_s']:.1f}s")
+            elif status == "error":
+                extra = " " + rec["error"][:200]
+            print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

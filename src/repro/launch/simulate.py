@@ -1,0 +1,70 @@
+"""PipeSim experiment launcher (the paper's CLI entry point).
+
+Fits simulation parameters from (generated) empirical traces, runs an
+experiment or a sweep, prints the analytics summary.
+
+  PYTHONPATH=src python -m repro.launch.simulate --days 2 --horizon-days 1 \
+      --learning-capacity 8 --policy sjf
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import (Experiment, fit_simulation_params,
+                        generate_empirical_workload, run_experiment)
+from repro.core.des import POLICY_NAMES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=float, default=2.0,
+                    help="days of empirical traces to fit on")
+    ap.add_argument("--horizon-days", type=float, default=1.0)
+    ap.add_argument("--interarrival-factor", type=float, default=1.0)
+    ap.add_argument("--compute-capacity", type=int, default=48)
+    ap.add_argument("--learning-capacity", type=int, default=32)
+    ap.add_argument("--policy", default="fifo", choices=POLICY_NAMES)
+    ap.add_argument("--engine", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--params-cache", default="/tmp/pipesim_params.npz")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.core.fitting import SimulationParams
+    if os.path.exists(args.params_cache):
+        params = SimulationParams.load(args.params_cache)
+        print(f"[params] loaded {args.params_cache}")
+    else:
+        print(f"[fit] generating {args.days} days of empirical traces ...")
+        wl = generate_empirical_workload(seed=123,
+                                         horizon_s=args.days * 86400.0)
+        print(f"[fit] fitting on {wl.n} pipelines ...")
+        params = fit_simulation_params(wl)
+        params.save(args.params_cache)
+
+    exp = Experiment(
+        name="cli",
+        horizon_s=args.horizon_days * 86400.0,
+        interarrival_factor=args.interarrival_factor,
+        compute_capacity=args.compute_capacity,
+        learning_capacity=args.learning_capacity,
+        policy=POLICY_NAMES.index(args.policy),
+        seed=args.seed,
+        n_replicas=args.replicas,
+        engine=args.engine,
+    )
+    res = run_experiment(exp, params)
+    print(json.dumps(res.summary, indent=2, default=float))
+    if args.out:
+        res.save(args.out)
+        print(f"[saved] {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Restartable training launcher.
+
+End-to-end driver: synthetic data pipeline -> sharded train step ->
+checkpoint manager, with crash-restart (fault injection for testing),
+straggler monitoring, and elastic restore (a checkpoint from any mesh
+restores onto the current one).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 200 --batch 8 --seq 128 --smoke --fault-at 50 --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as CN
+from repro.checkpoint.manager import (CheckpointManager, FaultInjector,
+                                      StragglerMonitor)
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.launch.mesh import make_debug_mesh
+from repro.models.transformer import get_model
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def run_training(arch: str, *, steps: int, batch: int, seq: int,
+                 smoke: bool = True, ckpt_dir: str = "/tmp/repro_ckpt",
+                 ckpt_every: int = 50, fault_at=(), lr: float = 3e-4,
+                 log_every: int = 10, resume: bool = True,
+                 mesh=None, microbatches: int = 1):
+    cfg = CN.get_smoke_config(arch) if smoke else CN.get_config(arch)
+    mesh = mesh or make_debug_mesh()
+    opt_cfg = adamw.AdamWConfig(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 5))
+    model = get_model(cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, batch=batch, seq_len=seq,
+                      family=cfg.family, n_ctx=cfg.n_ctx, d_ctx=cfg.d_ctx,
+                      d_model=cfg.d_model)
+
+    step_fn, shardings = trainer.make_train_step(
+        cfg, opt_cfg, mesh, microbatches=microbatches, donate=False)
+    mgr = CheckpointManager(ckpt_dir, keep_last=3)
+    injector = FaultInjector(list(fault_at))
+    watchdog = StragglerMonitor()
+
+    params = None
+    opt_state = None
+    start_step = 0
+    history = []
+    restarts = 0
+
+    while True:  # crash-restart loop
+        try:
+            if params is None:
+                params, _ = model.init(jax.random.PRNGKey(0))
+                opt_state = adamw.init_opt_state(opt_cfg, params)
+                latest = mgr.latest_step() if resume else None
+                if latest is not None:
+                    state = mgr.restore(latest,
+                                        {"params": params,
+                                         "opt_state": opt_state})
+                    params, opt_state = state["params"], state["opt_state"]
+                    start_step = latest
+                    print(f"[restore] resumed from step {latest}")
+
+            for step in range(start_step, steps):
+                t0 = time.perf_counter()
+                batch_data = synth_batch(dcfg, step)
+                injector.maybe_fail(step)
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch_data)
+                dt = time.perf_counter() - t0
+                slow = watchdog.record(step, dt)
+                if step % log_every == 0 or step == steps - 1:
+                    loss = float(metrics["loss"])
+                    history.append({"step": step, "loss": loss,
+                                    "sec": dt, "straggler": slow})
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"{dt*1e3:7.1f} ms{' [STRAGGLER]' if slow else ''}",
+                          flush=True)
+                if ckpt_every and (step + 1) % ckpt_every == 0:
+                    mgr.save(step + 1, {"params": params,
+                                        "opt_state": opt_state})
+            break
+        except RuntimeError as e:
+            print(f"[fault] {e} -> restarting from latest checkpoint")
+            restarts += 1
+            params = None
+            opt_state = None
+            start_step = 0
+            if restarts > 8:
+                raise
+
+    mgr.save(steps, {"params": params, "opt_state": opt_state}, block=True)
+    mgr.wait()
+    return {"history": history, "restarts": restarts,
+            "straggler_steps": watchdog.flagged, "final_step": steps}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=CN.ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fault-at", type=int, action="append", default=[])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = run_training(args.arch, steps=args.steps, batch=args.batch,
+                       seq=args.seq, smoke=args.smoke,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       fault_at=args.fault_at, lr=args.lr,
+                       microbatches=args.microbatches)
+    print(json.dumps({k: v for k, v in out.items() if k != "history"},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

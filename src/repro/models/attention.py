@@ -1,0 +1,311 @@
+"""Attention variants: GQA/MQA/MHA, MLA (DeepSeek-V3), cross-attention.
+
+Three execution modes share one softmax core:
+  train    full sequence, causal
+  prefill  full sequence, causal, returns KV cache
+  decode   single query token against a cached KV prefix
+
+``impl="flash"`` routes the full-sequence causal path through the Pallas
+flash-attention kernel (TPU); ``"xla"`` is the portable reference used by the
+CPU dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder, apply_rope
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+         causal: bool, q_positions: Optional[jnp.ndarray] = None,
+         kv_valid_len: Optional[jnp.ndarray] = None,
+         impl: str = "xla", q_chunk: int = -1,
+         unroll: bool = False) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Skv, Hkv, Dh] with H % Hkv == 0.
+    ``q_positions``: absolute positions of queries (for causal masking when
+    Sq != Skv, e.g. decode). ``kv_valid_len``: [B] number of valid cache
+    entries (decode).
+    """
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if impl == "flash" and Sq == k.shape[1] and causal and kv_valid_len is None:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=True)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    qpos = q_positions if q_positions is not None else jnp.arange(Sq)
+
+    if Sq == 1 and kv_valid_len is not None:
+        # decode against a sequence-sharded cache: sequence-parallel partial
+        # softmax (§Perf pair 2) instead of gathering the cache per step,
+        # and grouped GQA without KV repeat (§Perf pair 2 iter 2: the cache
+        # is read once, not rep x; heads are replicated here so the
+        # [H]->[group, rep] reshape is sharding-safe).
+        from repro.parallel.sharding import (constrain_decode_q,
+                                             constrain_kv_cache)
+        q = constrain_decode_q(q)
+        k = constrain_kv_cache(k)
+        v = constrain_kv_cache(v)
+        return _decode_core_grouped(q, k, v, kv_valid_len, scale, rep)
+
+    # GQA via head-repeat: keeps the query-head axis intact so TP sharding
+    # over heads survives even when Hkv < mesh 'model' size (a [H]->[kv,rep]
+    # reshape would force XLA to replicate and materialize full scores).
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    # q-chunking bounds the materialized [*, q_chunk, Skv] score block (the
+    # XLA reference analogue of flash attention's streaming). The chunk loop
+    # is a sequential scan so only one score block is live; audit-mode
+    # lowering (benchmarks/roofline.py) disables chunking (q_chunk=0) so
+    # compiled cost_analysis counts the full attention exactly.
+    if q_chunk < 0:
+        q_chunk = Sq if Sq <= 2048 else max(1024, Sq // 16)
+    if q_chunk == 0 or Sq % q_chunk != 0:
+        q_chunk = Sq
+    if Sq > 1:
+        from repro.parallel.sharding import maybe_seq_shard_q
+        q = maybe_seq_shard_q(q)
+    nq = Sq // q_chunk
+    if nq == 1:
+        return _attn_core(q, k, v, qpos, causal, kv_valid_len, scale)
+
+    qcs = q.reshape(B, nq, q_chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    pcs = qpos.reshape(nq, q_chunk)
+
+    def body(_, xs):
+        qc, pc = xs
+        return 0, _attn_core(qc, k, v, pc, causal, kv_valid_len, scale)
+
+    _, outs = jax.lax.scan(body, 0, (qcs, pcs), unroll=unroll)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+def _decode_core_grouped(q, k, v, kv_valid_len, scale, rep):
+    """Single-token decode, grouped GQA: q [B,1,H,D], k/v [B,S,Hkv,D]."""
+    B, _, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qg = q.reshape(B, Hkv, rep, Dh)
+    scores = jnp.einsum("bgrd,bkgd->bgrk", qg,
+                        k).astype(jnp.float32) * scale
+    kv_idx = jnp.arange(Skv)
+    ok = kv_idx[None, :] < kv_valid_len[:, None]             # [B, Skv]
+    scores = jnp.where(ok[:, None, None], scores,
+                       jnp.asarray(-1e30, jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrk,bkgd->bgrd", probs, v)
+    return out.reshape(B, 1, H, v.shape[-1])
+
+
+def _attn_core(q, k, v, qpos, causal, kv_valid_len, scale):
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    Skv = k.shape[1]
+    kv_idx = jnp.arange(Skv)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    if causal:
+        mask = qpos[:, None] >= kv_idx[None, :]              # [Sq, Skv]
+        scores = jnp.where(mask[None, None], scores, neg)
+    if kv_valid_len is not None:
+        ok = kv_idx[None, :] < kv_valid_len[:, None]         # [B, Skv]
+        scores = jnp.where(ok[:, None, None], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention block piece
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype) -> Tuple[dict, dict]:
+    b = Builder(key, dtype)
+    b.dense("wq", (d_model, n_heads, head_dim), ("embed", "heads", "head_dim"))
+    b.dense("wk", (d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"))
+    b.dense("wv", (d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"))
+    b.dense("wo", (n_heads, head_dim, d_model), ("heads", "head_dim", "embed"))
+    return b.done()
+
+
+def apply_gqa(p: dict, x: jnp.ndarray, *, positions: jnp.ndarray,
+              rope_theta: float = 10000.0, causal: bool = True,
+              cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              impl: str = "xla", q_chunk: int = -1, unroll: bool = False):
+    """x: [B, S, D]. If ``cache`` (k,v of [B, Smax, Hkv, Dh]) is given, new
+    K/V are scattered at ``cache_pos`` (decode/prefill-into-cache) and
+    attention runs against the cache prefix. Returns (out, new_cache)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if cache is None:
+        out = sdpa(q, k, v, causal=causal, impl=impl, q_chunk=q_chunk,
+                   unroll=unroll)
+        new_cache = None
+    else:
+        from repro.parallel.sharding import constrain_kv_cache
+        ck, cv = cache
+        S = x.shape[1]
+        ck = constrain_kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), cache_pos, axis=1))
+        cv = constrain_kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), cache_pos, axis=1))
+        if S > 1:
+            # prefill (cache_pos == 0): attend against the freshly computed
+            # local K/V — keeps attention TP-sharded over heads; the
+            # sequence-sharded cache is written on the side.
+            out = sdpa(q, k, v, causal=causal, impl=impl, q_chunk=q_chunk,
+                       unroll=unroll)
+        else:
+            valid = jnp.full((x.shape[0],), cache_pos + S, jnp.int32)
+            out = sdpa(q, ck, cv, causal=causal, q_positions=positions,
+                       kv_valid_len=valid, impl=impl, q_chunk=q_chunk,
+                       unroll=unroll)
+        new_cache = (ck, cv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 §: latent-compressed KV with decoupled RoPE)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model: int, n_heads: int, *, q_rank: int = 1536,
+             kv_rank: int = 512, d_nope: int = 128, d_rope: int = 64,
+             d_v: int = 128, dtype=jnp.float32) -> Tuple[dict, dict]:
+    b = Builder(key, dtype)
+    b.dense("wq_a", (d_model, q_rank), ("embed", "latent"))
+    b.ones("q_norm", (q_rank,), ("latent",))
+    b.dense("wq_b", (q_rank, n_heads, d_nope + d_rope),
+            ("latent", "heads", "head_dim"))
+    b.dense("wkv_a", (d_model, kv_rank + d_rope), ("embed", "latent"))
+    b.ones("kv_norm", (kv_rank,), ("latent",))
+    b.dense("wkv_b", (kv_rank, n_heads, d_nope + d_v),
+            ("latent", "heads", "head_dim"))
+    b.dense("wo", (n_heads, d_v, d_model), ("heads", "head_dim", "embed"))
+    return b.done()
+
+
+def apply_mla(p: dict, x: jnp.ndarray, *, positions: jnp.ndarray,
+              d_nope: int = 128, d_rope: int = 64, d_v: int = 128,
+              kv_rank: int = 512, rope_theta: float = 10000.0,
+              cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              absorbed: bool = False, impl: str = "xla",
+              q_chunk: int = -1, unroll: bool = False):
+    """Multi-head Latent Attention. Cache holds (c_kv [B,Smax,kv_rank],
+    k_rope [B,Smax,d_rope]) — the paper's memory win: ~(512+64) per token
+    instead of 2*H*Dh.
+
+    ``absorbed=False`` (paper-faithful compute): expand K/V from the latent
+    per step. ``absorbed=True`` (beyond-paper decode optimization, §Perf):
+    fold wkv_b into the query/output projections so decode attention runs in
+    the latent space and never materializes K/V.
+    """
+    from repro.models.common import rms_norm
+
+    B, S, D = x.shape
+    H = p["wq_b"].shape[1]
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv_a[..., :kv_rank], p["kv_norm"])
+    k_rope_new = apply_rope(kv_a[..., kv_rank:][:, :, None, :],
+                            positions, rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        from repro.parallel.sharding import constrain_kv_cache
+        cc, cr = cache
+        cc = constrain_kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cc, c_kv.astype(cc.dtype), cache_pos, axis=1))
+        cr = constrain_kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cr, k_rope_new.astype(cr.dtype), cache_pos, axis=1))
+        new_cache = (cc, cr)
+        if S > 1:
+            # prefill: attend against fresh local latents (see apply_gqa)
+            c_all, r_all = c_kv, k_rope_new
+            valid = None
+        else:
+            c_all, r_all = cc, cr
+            valid = jnp.full((B,), cache_pos + S, jnp.int32)
+    else:
+        new_cache = None
+        c_all, r_all = c_kv, k_rope_new
+        valid = None
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_nope + d_rope, jnp.float32))
+    Skv = c_all.shape[1]
+    kv_idx = jnp.arange(Skv)
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    if absorbed:
+        # fold W^KV_b(K) into q: q_lat_eff[b,s,h,r] = q_nope . wkv_b[:, h, :d_nope]
+        wk_b = p["wkv_b"][..., :d_nope]                 # [r, H, d_nope]
+        wv_b = p["wkv_b"][..., d_nope:]                 # [r, H, d_v]
+        q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+        s_nope = jnp.einsum("bshr,btr->bhst", q_eff, c_all)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, r_all)
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        mask = positions[:, None] >= kv_idx[None, :]
+        scores = jnp.where(mask[None, None], scores, neg)
+        if valid is not None:
+            ok = kv_idx[None, :] < valid[:, None]
+            scores = jnp.where(ok[:, None, None], scores, neg)
+        probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_all)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, wv_b)
+    else:
+        kv = jnp.einsum("btr,rhk->bthk", c_all, p["wkv_b"])
+        k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                      (*r_all.shape[:2], H, d_rope))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = sdpa(q_full, k_full, v, causal=True, q_positions=positions,
+                   kv_valid_len=valid, impl=impl, q_chunk=q_chunk,
+                   unroll=unroll)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers, enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+               d_ctx: int, dtype) -> Tuple[dict, dict]:
+    b = Builder(key, dtype)
+    b.dense("wq", (d_model, n_heads, head_dim), ("embed", "heads", "head_dim"))
+    b.dense("wk", (d_ctx, n_kv, head_dim), ("embed", "kv_heads", "head_dim"))
+    b.dense("wv", (d_ctx, n_kv, head_dim), ("embed", "kv_heads", "head_dim"))
+    b.dense("wo", (n_heads, head_dim, d_model), ("heads", "head_dim", "embed"))
+    return b.done()
+
+
+def apply_cross(p: dict, x: jnp.ndarray, ctx: Optional[jnp.ndarray] = None, *,
+                kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                impl: str = "xla", q_chunk: int = -1, unroll: bool = False):
+    """Cross-attention; precompute (k, v) from ``ctx`` once and pass as
+    ``kv_cache`` for decode."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_cache is None:
+        k = jnp.einsum("btc,chk->bthk", ctx, p["wk"])
+        v = jnp.einsum("btc,chk->bthk", ctx, p["wv"])
+    else:
+        k, v = kv_cache
+    out = sdpa(q, k, v, causal=False, impl=impl, q_chunk=q_chunk,
+               unroll=unroll)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, (k, v)

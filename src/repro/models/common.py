@@ -1,0 +1,224 @@
+"""Shared model components: param builder with logical sharding axes,
+norms, RoPE, MLPs, embeddings.
+
+Every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the params
+pytree with tuples of *logical* axis names per dimension. The parallel layer
+(:mod:`repro.parallel.sharding`) maps logical names to mesh axes, so models
+never mention the mesh.
+
+Logical axis vocabulary:
+  "layers"   stacked scanned blocks      -> never sharded (scan axis)
+  "embed"    d_model                     -> FSDP axis for big models
+  "heads"    attention heads             -> tensor-parallel
+  "kv_heads" KV heads                    -> tensor-parallel (replicate if few)
+  "head_dim" per-head dim                -> unsharded
+  "mlp"      ffn hidden                  -> tensor-parallel
+  "vocab"    vocabulary                  -> tensor-parallel
+  "experts"  MoE experts                 -> expert-parallel
+  "state"    SSM/recurrent state dim     -> unsharded
+  "latent"   MLA compression dim         -> unsharded
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+# When True, Builders emit jax.ShapeDtypeStruct instead of arrays — used by
+# the dry-run / param_specs to build param trees with zero allocation.
+_SHAPE_ONLY = False
+
+
+class shape_mode:
+    """Context manager: all Builder inits produce ShapeDtypeStructs."""
+
+    def __enter__(self):
+        global _SHAPE_ONLY
+        self._prev = _SHAPE_ONLY
+        _SHAPE_ONLY = True
+        return self
+
+    def __exit__(self, *a):
+        global _SHAPE_ONLY
+        _SHAPE_ONLY = self._prev
+        return False
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+class Builder:
+    """Collects parameters and their logical axes in parallel pytrees."""
+
+    def __init__(self, key: Optional[jax.Array], param_dtype=jnp.float32):
+        self._key = key
+        self.params: Params = {}
+        self.axes: Axes = {}
+        self.param_dtype = param_dtype
+
+    def _next(self) -> Optional[jax.Array]:
+        if _SHAPE_ONLY or self._key is None:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def dense(self, name: str, shape: Tuple[int, ...], axes: Tuple[str, ...],
+              scale: Optional[float] = None, zero: bool = False) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if _SHAPE_ONLY:
+            arr = jax.ShapeDtypeStruct(shape, self.param_dtype)
+        elif zero:
+            arr = jnp.zeros(shape, self.param_dtype)
+        else:
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(self._next(), shape, jnp.float32) * s
+                   ).astype(self.param_dtype)
+        self.params[name] = arr
+        self.axes[name] = axes
+
+    def ones(self, name: str, shape, axes) -> None:
+        if _SHAPE_ONLY:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.param_dtype)
+        else:
+            self.params[name] = jnp.ones(shape, self.param_dtype)
+        self.axes[name] = axes
+
+    def sub(self, name: str, params: Params, axes: Axes) -> None:
+        self.params[name] = params
+        self.axes[name] = axes
+
+    def done(self) -> Tuple[Params, Axes]:
+        return self.params, self.axes
+
+
+def stack_layers(key: Optional[jax.Array], n: int, init_one
+                 ) -> Tuple[Params, Axes]:
+    """Initialize ``n`` identical blocks with stacked ('layers', ...) leaves,
+    without materializing per-layer intermediates (vmap over keys)."""
+    if _SHAPE_ONLY:
+        p0, ax = init_one(None)
+        stacked = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), p0)
+    else:
+        keys = jax.random.split(key, n)
+        _, ax = init_one(keys[0])
+        stacked = jax.vmap(lambda k: init_one(k)[0])(keys)
+    axes = jax.tree_util.tree_map(
+        lambda a: ("layers",) + tuple(a), ax, is_leaf=is_axes_leaf)
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma + beta
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up) + b_up)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> Tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    b.dense("w_gate", (d_model, d_ff), ("embed", "mlp"))
+    b.dense("w_up", (d_model, d_ff), ("embed", "mlp"))
+    b.dense("w_down", (d_ff, d_model), ("mlp", "embed"))
+    return b.done()
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype) -> Tuple[Params, Axes]:
+    b = Builder(key, dtype)
+    b.dense("w_up", (d_model, d_ff), ("embed", "mlp"))
+    b.dense("b_up", (d_ff,), ("mlp",), zero=True)
+    b.dense("w_down", (d_ff, d_model), ("mlp", "embed"))
+    b.dense("b_down", (d_model,), ("embed",), zero=True)
+    return b.done()
+
+
+def padded_vocab(v: int, tp: int = 16, align: int = 256) -> int:
+    """Pad vocab so the LM head shards over the TP axis (MaxText-style).
+    Un-shardable vocabs (e.g. granite's 49155, seamless's 256206) would
+    otherwise replicate multi-GiB logits on every device."""
+    return v if v % tp == 0 else -(-v // align) * align
+
+
+def lm_head_logits(x: jnp.ndarray, head: jnp.ndarray,
+                   vocab_size: int) -> jnp.ndarray:
+    """x: [B,S,D] @ head [D, V_pad] with padded columns masked to -1e30 (so
+    softmax/argmax/CE over the padded width are exact)."""
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    v_pad = head.shape[-1]
+    if v_pad != vocab_size:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE. logits [B,S,V] f32-cast internally; labels [B,S].
+
+    The gold logit is extracted with an iota-compare mask rather than
+    take_along_axis so a vocab-sharded logits tensor never gets all-gathered
+    (the reduction stays sharded; XLA inserts one scalar psum)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == labels[..., None]).astype(jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, shared experts (DeepSeek-V3 / Llama-4 style).
+
+Dispatch is the TPU-friendly sort formulation: replicate each token k times,
+sort by expert id, rank within expert via a cumulative-max segment trick, and
+scatter into an ``[E, C, D]`` buffer (overflow tokens drop — capacity factor
+controls the drop rate). Expert FFNs are batched ``[E, C, D] x [E, D, F]``
+matmuls that shard over the expert axis (EP on the 'model' mesh axis); XLA
+inserts the all-to-alls at the scatter/gather boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder
+
+
+def init_moe(key, d_model: int, d_ff_expert: int, n_experts: int,
+             n_shared: int, d_ff_shared: int, dtype) -> Tuple[dict, dict]:
+    b = Builder(key, dtype)
+    b.dense("router", (d_model, n_experts), ("embed", None))
+    b.dense("w_gate", (n_experts, d_model, d_ff_expert),
+            ("experts", "embed", "mlp"))
+    b.dense("w_up", (n_experts, d_model, d_ff_expert),
+            ("experts", "embed", "mlp"))
+    b.dense("w_down", (n_experts, d_ff_expert, d_model),
+            ("experts", "mlp", "embed"))
+    if n_shared > 0:
+        b.dense("ws_gate", (d_model, n_shared * d_ff_shared), ("embed", "mlp"))
+        b.dense("ws_up", (d_model, n_shared * d_ff_shared), ("embed", "mlp"))
+        b.dense("ws_down", (n_shared * d_ff_shared, d_model), ("mlp", "embed"))
+    return b.done()
+
+
+def _cummax(x):
+    return jax.lax.associative_scan(jnp.maximum, x)
+
+
+def apply_moe(p: dict, x: jnp.ndarray, *, top_k: int, n_experts: int,
+              capacity_factor: float = 1.25,
+              router_bias: Optional[jnp.ndarray] = None,
+              token_chunks: int = 1):
+    """x: [B, S, D] -> [B, S, D], plus aux metrics dict.
+
+    ``router_bias`` supports DeepSeek-V3's aux-loss-free load balancing (a
+    per-expert bias added to routing scores for *selection only*).
+
+    ``token_chunks`` > 1 streams the dispatch over token chunks (exact —
+    routing is per-token): bounds the [E, C, D] buffer residency for
+    long-sequence prefill where T*k*cf*D would not fit.
+    """
+    B, S, D = x.shape
+    T = B * S
+    if token_chunks > 1 and T % token_chunks == 0 \
+            and (T // token_chunks) >= n_experts:
+        xf = x.reshape(T // token_chunks, token_chunks, D).swapaxes(0, 1)
+
+        def body(_, xc):
+            y, aux = _moe_tokens(p, xc, top_k=top_k, n_experts=n_experts,
+                                 capacity_factor=capacity_factor,
+                                 router_bias=router_bias)
+            return 0, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, 0, xf)
+        y = ys.swapaxes(0, 1).reshape(B, S, D)
+        aux = jax.tree_util.tree_map(lambda a: jnp.mean(a), auxs)
+        return y, aux
+    y, aux = _moe_tokens(p, x.reshape(T, D), top_k=top_k,
+                         n_experts=n_experts,
+                         capacity_factor=capacity_factor,
+                         router_bias=router_bias)
+    return y.reshape(B, S, D), aux
+
+
+def _moe_tokens(p: dict, xf: jnp.ndarray, *, top_k: int, n_experts: int,
+                capacity_factor: float, router_bias):
+    T, D = xf.shape
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel_scores = probs if router_bias is None else probs + router_bias[None, :]
+    _, idx = jax.lax.top_k(sel_scores, top_k)                  # [T, k]
+    w = jnp.take_along_axis(probs, idx, axis=-1)               # [T, k]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)        # renormalize
+
+    # ---- sort-based dispatch
+    e_flat = idx.reshape(T * top_k)
+    tok_of = jnp.repeat(jnp.arange(T), top_k)
+    order = jnp.argsort(e_flat, stable=True)
+    se = e_flat[order]
+    stok = tok_of[order]
+    pos = jnp.arange(T * top_k)
+    is_start = jnp.concatenate([jnp.array([True]), se[1:] != se[:-1]])
+    seg_start = _cummax(jnp.where(is_start, pos, -1))
+    rank = pos - seg_start
+
+    cap = int(max(4, round(T * top_k / n_experts * capacity_factor)))
+    keep = rank < cap
+    rank_c = jnp.where(keep, rank, cap)  # out-of-bounds -> dropped by scatter
+
+    buf = jnp.zeros((n_experts, cap, D), xf.dtype)
+    buf = buf.at[se, rank_c].set(xf[stok], mode="drop")
+
+    # ---- batched expert SwiGLU
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # ---- gather back + combine with routing weights
+    got = out_e[se, rank_c] * keep[:, None].astype(xf.dtype)    # [T*k, D]
+    back = jnp.zeros((T * top_k, D), xf.dtype).at[order].set(got)
+    back = back.reshape(T, top_k, D)
+    y = jnp.einsum("tkd,tk->td", back, w.astype(xf.dtype))
+
+    # ---- shared experts (always-on path)
+    if "ws_gate" in p:
+        gs = jnp.einsum("td,df->tf", xf, p["ws_gate"])
+        us = jnp.einsum("td,df->tf", xf, p["ws_up"])
+        y = y + jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us, p["ws_down"])
+
+    # ---- aux metrics: load-balance loss (Switch-style) + drop fraction
+    me = jnp.mean(probs, axis=0)                               # [E]
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], n_experts), axis=0)
+    aux = {
+        "load_balance_loss": n_experts * jnp.sum(me * ce),
+        "dropped_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD) block: chunked state-space duality form for training /
+prefill, constant-size recurrent state for decode.
+
+Train/prefill uses the chunkwise algorithm (chunk length Q): intra-chunk
+quadratic term (MXU matmuls masked by the decay matrix L) plus inter-chunk
+state passing (a short scan over chunks). This is the jnp reference; the
+Pallas ``mamba2_scan`` kernel implements the same contraction with VMEM
+tiling and is parity-tested against it.
+
+Decode is the O(1) recurrence:  h <- exp(dt*A) h + dt * B ⊗ x,  y = C·h + D x.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder
+
+
+def init_mamba2(key, d_model: int, d_state: int, head_dim: int = 64,
+                expand: int = 2, d_conv: int = 4, dtype=jnp.float32
+                ) -> Tuple[dict, dict]:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    b = Builder(key, dtype)
+    # fused input projection: [z | x | B | C | dt]
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    b.dense("w_in", (d_model, d_proj), ("embed", "mlp"))
+    b.dense("conv_w", (d_conv, d_inner + 2 * d_state), (None, "mlp"))
+    b.dense("conv_b", (d_inner + 2 * d_state,), ("mlp",), zero=True)
+    b.dense("a_log", (n_heads,), ("heads",), scale=1.0)
+    b.dense("dt_bias", (n_heads,), ("heads",), zero=True)
+    b.dense("d_skip", (n_heads,), ("heads",), scale=1.0)
+    b.ones("norm", (d_inner,), ("mlp",))
+    b.dense("w_out", (d_inner, d_model), ("mlp", "embed"))
+    return b.done()
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * d_state]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. xbc: [B, S, C]; w: [K, C].
+    Returns (out [B,S,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                 # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return jax.nn.silu(out + bias), new_state
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None, chunk: int = 128,
+                unroll: bool = False):
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H] (>0); A: [H] (<0);
+    Bm, Cm: [B,S,N]. Returns (y [B,S,H,P], h_last [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    in_dtype = x.dtype
+    # SSD state math runs in f32 (decay exponentials underflow in bf16, and
+    # a mixed-dtype scan carry would break lax.scan's type invariant)
+    x, dt, Bm, Cm = (a.astype(jnp.float32) for a in (x, dt, Bm, Cm))
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = zf(x), zf(dt), zf(Bm), zf(Cm)
+    # reshape into chunks: [B, nc, Q, ...]
+    rs = lambda a: a.reshape(Bsz, nc, chunk, *a.shape[2:])
+    xc, dtc, Bc, Cc = rs(x), rs(dt), rs(Bm), rs(Cm)
+
+    dA = dtc * A[None, None, None, :]                          # [B,nc,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                               # within-chunk
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) * dt_j  for i >= j
+    Li = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Li = jnp.where(tri[None, None, :, :, None], Li, 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # [B,nc,Q,Q]
+    M = scores[..., None] * Li * dtc[:, :, None, :, :]         # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk-boundary states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,nc,Q,H]
+    state_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                         Bc, decay_to_end * dtc, xc)           # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+
+    def scan_fn(h, inp):
+        s_c, dec = inp                                         # [B,H,P,N], [B,H]
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h
+
+    h_init = (jnp.zeros((Bsz, H, P, N), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    h_last, h_prev = jax.lax.scan(
+        scan_fn, h_init,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll)
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_i += C_i · (exp(cum_i) * h_prev)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, nc * chunk, H, P)
+    return y[:, :S], h_last
+
+
+def apply_mamba2(p: dict, x: jnp.ndarray, *, d_state: int, head_dim: int = 64,
+                 chunk: int = 128,
+                 state: Optional[dict] = None, impl: str = "xla",
+                 unroll: bool = False):
+    """x: [B, S, D]. ``state`` (decode): {"conv": [B,K-1,C], "ssm": [B,H,P,N]}.
+    Returns (y, new_state)."""
+    from repro.models.common import rms_norm
+
+    B, S, D = x.shape
+    d_inner = p["w_out"].shape[0]
+    n_heads = p["a_log"].shape[0]
+    P = head_dim
+
+    proj = jnp.einsum("bsd,dp->bsp", x, p["w_in"])
+    z, xbc, dt = _split_proj(proj, d_inner, d_state, n_heads)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi = xbc[..., :d_inner].reshape(B, S, n_heads, P)
+    Bm = xbc[..., d_inner:d_inner + d_state]
+    Cm = xbc[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])        # [B,S,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # [H] < 0
+
+    if S > 1:
+        h0 = None if state is None else state["ssm"]
+        if impl == "mamba_kernel" and h0 is None:
+            from repro.kernels import ops as kops
+            y, h_last = kops.mamba2_scan(xi, dt, A, Bm, Cm, chunk=chunk)
+        else:
+            y, h_last = ssd_chunked(xi, dt, A, Bm, Cm, h0=h0, chunk=chunk,
+                                    unroll=unroll)
+    else:
+        # single-token recurrent step (decode)
+        h = (jnp.zeros((B, n_heads, P, d_state), jnp.float32)
+             if state is None else state["ssm"].astype(jnp.float32))
+
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp                              # [B,H,P],[B,H],[B,N],[B,N]
+            dtt = dtt.astype(jnp.float32)
+            dec = jnp.exp(dtt * A[None, :])                    # [B,H]
+            h = h * dec[:, :, None, None] + jnp.einsum(
+                "bhp,bn,bh->bhpn", xt.astype(jnp.float32),
+                Bt.astype(jnp.float32), dtt)
+            y = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+            return h, y
+
+        seq = (xi.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+               Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+        h, ys = jax.lax.scan(step, h, seq)
+        y = ys.transpose(1, 0, 2, 3)
+        h_last = h
+
+    y = y.astype(x.dtype) + xi * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"]).astype(x.dtype)
+    new_state = {"conv": new_conv, "ssm": h_last.astype(jnp.float32)}
+    return out, new_state

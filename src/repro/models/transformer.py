@@ -1,0 +1,865 @@
+"""Model families for the assigned architectures.
+
+All families share:
+  - scan-over-layers with stacked params (constant-size HLO regardless of L);
+  - pre-norm residual blocks;
+  - ``init`` -> (params, axes) with logical sharding axes (see common.py);
+  - ``loss_fn`` (train), ``prefill`` (full-seq, builds caches),
+    ``decode_step`` (one token against caches).
+
+Families:
+  DecoderLM   dense / MoE (MLA or GQA) / VLM cross-attn — covers llama3.2,
+              granite-3/20b, stablelm, deepseek-v3, llama4, llama-3.2-vision
+  HybridSSM   Mamba2 backbone + shared attention block (zamba2)
+  XLSTM       mLSTM/sLSTM 1:1 (xlstm-125m)
+  EncDec      encoder-decoder with cross-attention (seamless-m4t)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.common import (Builder, cross_entropy_loss, init_swiglu,
+                                 lm_head_logits, padded_vocab, rms_norm,
+                                 stack_layers, swiglu)
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+          "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 500000.0
+    # --- MoE
+    n_experts: int = 0
+    moe_top_k: int = 1
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_interleave: int = 1        # every k-th layer uses MoE FFN
+    n_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_coef: float = 0.01
+    moe_token_chunks: int = 1      # stream dispatch over token chunks
+    # --- MLA
+    use_mla: bool = False
+    q_rank: int = 1536
+    kv_rank: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    mla_absorbed: bool = False
+    # --- SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    d_conv: int = 4
+    attn_every: int = 0            # hybrid: shared attn after every k ssm blocks
+    ssd_chunk: int = 128
+    # --- VLM
+    cross_every: int = 0           # every k-th layer is a cross-attn layer
+    n_ctx: int = 0                 # context tokens (image patches / frames)
+    d_ctx: int = 0
+    # --- enc-dec
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    mlp_type: str = "swiglu"       # swiglu | gelu (2-matrix, gpt_bigcode)
+    # --- runtime
+    attn_q_chunk: int = -1         # -1 auto; 0 disable (audit mode)
+    stream_unroll: bool = False    # unroll streaming scans (audit mode)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "none"            # none | block
+    attn_impl: str = "xla"         # xla | flash
+    ssm_impl: str = "xla"          # xla | mamba_kernel
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pdt(self):
+        return DTYPES[self.param_dtype]
+
+    @property
+    def cdt(self):
+        return DTYPES[self.compute_dtype]
+
+    def param_count(self) -> int:
+        """Total parameters (for roofline MODEL_FLOPS and memory estimates)."""
+        from repro.models.common import shape_mode
+        m = get_model(self)
+        with shape_mode():
+            shapes, _ = m.init(None)
+        import math as _math
+        return sum(_math.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(
+                       shapes, is_leaf=lambda v: isinstance(
+                           v, jax.ShapeDtypeStruct)))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k routed experts)."""
+        total = self.param_count()
+        if self.n_experts == 0:
+            return total
+        per_expert = 3 * self.d_model * self.moe_d_ff
+        n_moe_layers = max(
+            (self.n_layers - self.n_dense_layers) // max(self.moe_interleave, 1), 1)
+        inactive = n_moe_layers * (self.n_experts - self.moe_top_k) * per_expert
+        return total - inactive
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+# ---------------------------------------------------------------------------
+# shared block pieces
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, *, moe_ffn: bool,
+                     cross: bool = False) -> Tuple[dict, dict]:
+    b = Builder(key, cfg.pdt)
+    b.ones("ln1", (cfg.d_model,), ("embed",))
+    b.ones("ln2", (cfg.d_model,), ("embed",))
+    if cross:
+        ap, ax = A.init_cross(b._next(), cfg.d_model, cfg.n_heads,
+                              cfg.n_kv_heads, cfg.hd, cfg.d_ctx or cfg.d_model,
+                              cfg.pdt)
+    elif cfg.use_mla:
+        ap, ax = A.init_mla(b._next(), cfg.d_model, cfg.n_heads,
+                            q_rank=cfg.q_rank, kv_rank=cfg.kv_rank,
+                            d_nope=cfg.d_nope, d_rope=cfg.d_rope, d_v=cfg.d_v,
+                            dtype=cfg.pdt)
+    else:
+        ap, ax = A.init_gqa(b._next(), cfg.d_model, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.hd, cfg.pdt)
+    b.sub("attn", ap, ax)
+    if moe_ffn:
+        mp, mx = MOE.init_moe(b._next(), cfg.d_model, cfg.moe_d_ff,
+                              cfg.n_experts, cfg.n_shared_experts,
+                              cfg.moe_d_ff, cfg.pdt)
+    elif cfg.mlp_type == "gelu":
+        from repro.models.common import init_gelu_mlp
+        mp, mx = init_gelu_mlp(b._next(), cfg.d_model, cfg.d_ff, cfg.pdt)
+    else:
+        mp, mx = init_swiglu(b._next(), cfg.d_model, cfg.d_ff, cfg.pdt)
+    b.sub("ffn", mp, mx)
+    return b.done()
+
+
+def _apply_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig, moe_ffn: bool):
+    if moe_ffn:
+        y, aux = MOE.apply_moe(p, x, top_k=cfg.moe_top_k,
+                               n_experts=cfg.n_experts,
+                               capacity_factor=cfg.capacity_factor,
+                               token_chunks=cfg.moe_token_chunks)
+        return y, aux["load_balance_loss"]
+    if cfg.mlp_type == "gelu":
+        from repro.models.common import gelu_mlp
+        return gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"],
+                        p["b_down"]), jnp.float32(0.0)
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0.0)
+
+
+def _apply_attn_block(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                      positions, cache=None, cache_pos=None, moe_ffn: bool,
+                      ctx=None, cross: bool = False, cross_kv=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kw = dict(impl=cfg.attn_impl, q_chunk=cfg.attn_q_chunk,
+              unroll=cfg.stream_unroll)
+    if cross:
+        att, new_kv = A.apply_cross(p["attn"], h, ctx, kv_cache=cross_kv,
+                                    **kw)
+        new_cache = new_kv
+    elif cfg.use_mla:
+        att, new_cache = A.apply_mla(
+            p["attn"], h, positions=positions, d_nope=cfg.d_nope,
+            d_rope=cfg.d_rope, d_v=cfg.d_v, kv_rank=cfg.kv_rank,
+            rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
+            absorbed=cfg.mla_absorbed, **kw)
+    else:
+        att, new_cache = A.apply_gqa(
+            p["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+            cache=cache, cache_pos=cache_pos, **kw)
+    x = x + att
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f, aux = _apply_ffn(p["ffn"], h2, cfg, moe_ffn)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM: dense / moe / vlm
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        c = cfg
+        # layer plan: (kind, count) stages; kinds: "dense", "moe", "cross"
+        if c.family == "vlm":
+            assert c.cross_every > 1
+            n_super = c.n_layers // c.cross_every
+            self.plan = [("vlm_super", n_super, c.cross_every - 1)]
+            rem = c.n_layers - n_super * c.cross_every
+            if rem:
+                self.plan.append(("dense", rem, 0))
+        elif c.n_experts > 0:
+            stages = []
+            if c.n_dense_layers:
+                stages.append(("dense", c.n_dense_layers, 0))
+            n_rest = c.n_layers - c.n_dense_layers
+            if c.moe_interleave > 1:
+                n_super = n_rest // c.moe_interleave
+                stages.append(("moe_super", n_super, c.moe_interleave - 1))
+                rem = n_rest - n_super * c.moe_interleave
+                if rem:
+                    stages.append(("dense", rem, 0))
+            else:
+                stages.append(("moe", n_rest, 0))
+            self.plan = stages
+        else:
+            self.plan = [("dense", c.n_layers, 0)]
+
+    # ---------------- init
+    def init(self, key) -> Tuple[dict, dict]:
+        c = self.cfg
+        b = Builder(key, c.pdt)
+        b.dense("embed", (c.vocab_size, c.d_model), ("vocab", "embed"),
+                scale=0.02)
+        b.ones("ln_f", (c.d_model,), ("embed",))
+        if not c.tie_embeddings:
+            b.dense("lm_head", (c.d_model, padded_vocab(c.vocab_size)),
+                    ("embed", "vocab"))
+        for si, (kind, n, inner) in enumerate(self.plan):
+            if kind == "dense":
+                init_one = lambda k: _init_attn_block(k, c, moe_ffn=False)
+            elif kind == "moe":
+                init_one = lambda k: _init_attn_block(k, c, moe_ffn=True)
+            elif kind == "moe_super":
+                def init_one(k, inner=inner):
+                    bb = Builder(k, c.pdt)
+                    dp, dx = stack_layers(
+                        bb._next(), inner,
+                        lambda kk: _init_attn_block(kk, c, moe_ffn=False))
+                    bb.sub("dense", dp, dx)
+                    mp, mx = _init_attn_block(bb._next(), c, moe_ffn=True)
+                    bb.sub("moe", mp, mx)
+                    return bb.done()
+            else:  # vlm_super
+                def init_one(k, inner=inner):
+                    bb = Builder(k, c.pdt)
+                    dp, dx = stack_layers(
+                        bb._next(), inner,
+                        lambda kk: _init_attn_block(kk, c, moe_ffn=False))
+                    bb.sub("selfs", dp, dx)
+                    xp, xx = _init_attn_block(bb._next(), c, moe_ffn=False,
+                                              cross=True)
+                    bb.sub("cross", xp, xx)
+                    return bb.done()
+            sp, sx = stack_layers(b._next(), n, init_one)
+            b.sub(f"stage{si}", sp, sx)
+        return b.done()
+
+    # ---------------- forward (train, no cache)
+    def _forward(self, params, tokens, ctx=None):
+        c = self.cfg
+        x = params["embed"][tokens].astype(c.cdt)
+        positions = jnp.arange(tokens.shape[1])
+        aux_total = jnp.float32(0.0)
+
+        for si, (kind, n, inner) in enumerate(self.plan):
+            sp = params[f"stage{si}"]
+
+            def body(xcarry, layer_p, kind=kind):
+                xx, aux_acc = xcarry
+                if kind == "dense":
+                    xx, _, aux = _apply_attn_block(
+                        layer_p, xx, c, positions=positions, moe_ffn=False)
+                elif kind == "moe":
+                    xx, _, aux = _apply_attn_block(
+                        layer_p, xx, c, positions=positions, moe_ffn=True)
+                elif kind == "moe_super":
+                    def inner_body(xc, ip):
+                        y, _, a = _apply_attn_block(
+                            ip, xc[0], c, positions=positions, moe_ffn=False)
+                        return (y, xc[1] + a), None
+                    (xx, aux_acc2), _ = jax.lax.scan(
+                        inner_body, (xx, jnp.float32(0.0)), layer_p["dense"],
+                        unroll=c.stream_unroll)
+                    xx, _, aux = _apply_attn_block(
+                        layer_p["moe"], xx, c, positions=positions, moe_ffn=True)
+                    aux = aux + aux_acc2
+                else:  # vlm_super
+                    def inner_body(xc, ip):
+                        y, _, a = _apply_attn_block(
+                            ip, xc, c, positions=positions, moe_ffn=False)
+                        return y, None
+                    xx, _ = jax.lax.scan(inner_body, xx, layer_p["selfs"],
+                                         unroll=c.stream_unroll)
+                    xx, _, aux = _apply_attn_block(
+                        layer_p["cross"], xx, c, positions=positions,
+                        moe_ffn=False, ctx=ctx, cross=True)
+                return (xx, aux_acc + aux), None
+
+            body = _maybe_remat(body, c)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sp,
+                                             unroll=c.stream_unroll)
+
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = lm_head_logits(x, head, c.vocab_size)
+        return logits, aux_total
+
+    def loss_fn(self, params, batch):
+        logits, aux = self._forward(params, batch["tokens"],
+                                    batch.get("ctx"))
+        loss = cross_entropy_loss(logits, batch["labels"])
+        total = loss + self.cfg.moe_aux_coef * aux
+        return total, {"ce_loss": loss, "aux_loss": aux}
+
+    # ---------------- caches
+    def init_cache(self, batch_size: int, max_len: int, ctx=None):
+        c = self.cfg
+        cache: Dict[str, Any] = {}
+        kv_dt = c.cdt
+        for si, (kind, n, inner) in enumerate(self.plan):
+            if c.use_mla:
+                mk = lambda *s: jnp.zeros(s, kv_dt)
+                cache[f"stage{si}"] = (
+                    mk(n, batch_size, max_len, c.kv_rank),
+                    mk(n, batch_size, max_len, c.d_rope))
+            elif kind in ("dense", "moe"):
+                mk = lambda *s: jnp.zeros(s, kv_dt)
+                cache[f"stage{si}"] = (
+                    mk(n, batch_size, max_len, c.n_kv_heads, c.hd),
+                    mk(n, batch_size, max_len, c.n_kv_heads, c.hd))
+            elif kind == "moe_super":
+                mk = lambda *s: jnp.zeros(s, kv_dt)
+                cache[f"stage{si}"] = {
+                    "dense": (mk(n, inner, batch_size, max_len, c.n_kv_heads, c.hd),
+                              mk(n, inner, batch_size, max_len, c.n_kv_heads, c.hd)),
+                    "moe": (mk(n, batch_size, max_len, c.n_kv_heads, c.hd),
+                            mk(n, batch_size, max_len, c.n_kv_heads, c.hd))}
+            else:  # vlm_super: self KVs + cross KVs (filled at prefill)
+                mk = lambda *s: jnp.zeros(s, kv_dt)
+                cache[f"stage{si}"] = {
+                    "selfs": (mk(n, inner, batch_size, max_len, c.n_kv_heads, c.hd),
+                              mk(n, inner, batch_size, max_len, c.n_kv_heads, c.hd)),
+                    "cross": (mk(n, batch_size, c.n_ctx, c.n_kv_heads, c.hd),
+                              mk(n, batch_size, c.n_ctx, c.n_kv_heads, c.hd))}
+        return cache
+
+    def _with_cache(self, params, tokens, cache, pos, ctx=None):
+        """Shared prefill/decode path: runs tokens (S>=1) at cache offset pos."""
+        c = self.cfg
+        x = params["embed"][tokens].astype(c.cdt)
+        S = tokens.shape[1]
+        positions = pos + jnp.arange(S)
+        new_cache: Dict[str, Any] = {}
+
+        for si, (kind, n, inner) in enumerate(self.plan):
+            sp = params[f"stage{si}"]
+            cc = cache[f"stage{si}"]
+
+            if kind in ("dense", "moe"):
+                def body(xx, scanned, kind=kind):
+                    layer_p, (ck, cv) = scanned
+                    y, ncache, _ = _apply_attn_block(
+                        layer_p, xx, c, positions=positions, cache=(ck, cv),
+                        cache_pos=pos, moe_ffn=(kind == "moe"))
+                    return y, ncache
+                x, ncc = jax.lax.scan(body, x, (sp, cc),
+                                      unroll=c.stream_unroll)
+                new_cache[f"stage{si}"] = ncc
+            elif kind == "moe_super":
+                def body(xx, scanned):
+                    layer_p, ccd = scanned
+                    def ib(xc, sc):
+                        ip, (ck, cv) = sc
+                        y, nc, _ = _apply_attn_block(
+                            ip, xc, c, positions=positions, cache=(ck, cv),
+                            cache_pos=pos, moe_ffn=False)
+                        return y, nc
+                    xx, nd = jax.lax.scan(ib, xx,
+                                          (layer_p["dense"], ccd["dense"]),
+                                          unroll=c.stream_unroll)
+                    xx, nm, _ = _apply_attn_block(
+                        layer_p["moe"], xx, c, positions=positions,
+                        cache=ccd["moe"], cache_pos=pos, moe_ffn=True)
+                    return xx, {"dense": nd, "moe": nm}
+                x, ncc = jax.lax.scan(body, x, (sp, cc),
+                                      unroll=c.stream_unroll)
+                new_cache[f"stage{si}"] = ncc
+            else:  # vlm_super
+                def body(xx, scanned):
+                    layer_p, ccd = scanned
+                    def ib(xc, sc):
+                        ip, (ck, cv) = sc
+                        y, nc, _ = _apply_attn_block(
+                            ip, xc, c, positions=positions, cache=(ck, cv),
+                            cache_pos=pos, moe_ffn=False)
+                        return y, nc
+                    xx, nself = jax.lax.scan(ib, xx, (layer_p["selfs"],
+                                                      ccd["selfs"]),
+                                             unroll=c.stream_unroll)
+                    # cross: at prefill ctx is given, at decode reuse cached kv
+                    use_cached = ctx is None
+                    xx, nkv, _ = _apply_attn_block(
+                        layer_p["cross"], xx, c, positions=positions,
+                        moe_ffn=False, ctx=ctx, cross=True,
+                        cross_kv=ccd["cross"] if use_cached else None)
+                    return xx, {"selfs": nself, "cross": nkv}
+                x, ncc = jax.lax.scan(body, x, (sp, cc),
+                                      unroll=c.stream_unroll)
+                new_cache[f"stage{si}"] = ncc
+
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = lm_head_logits(x[:, -1:], head, c.vocab_size)
+        return logits, new_cache
+
+    def prefill(self, params, tokens, max_len: int, ctx=None):
+        cache = self.init_cache(tokens.shape[0], max_len, ctx)
+        return self._with_cache(params, tokens, cache, jnp.int32(0), ctx=ctx)
+
+    def decode_step(self, params, tokens, cache, pos):
+        return self._with_cache(params, tokens, cache, pos, ctx=None)
+
+
+# ---------------------------------------------------------------------------
+# HybridSSM (zamba2): Mamba2 backbone + shared attention block
+# ---------------------------------------------------------------------------
+
+class HybridSSM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0
+        self.n_super = cfg.n_layers // cfg.attn_every
+        self.n_tail = cfg.n_layers - self.n_super * cfg.attn_every
+
+    def init(self, key):
+        c = self.cfg
+        b = Builder(key, c.pdt)
+        b.dense("embed", (c.vocab_size, c.d_model), ("vocab", "embed"),
+                scale=0.02)
+        b.ones("ln_f", (c.d_model,), ("embed",))
+        b.dense("lm_head", (c.d_model, padded_vocab(c.vocab_size)),
+                ("embed", "vocab"))
+
+        def init_super(k):
+            bb = Builder(k, c.pdt)
+            mp, mx = stack_layers(
+                bb._next(), c.attn_every,
+                lambda kk: SSM.init_mamba2(kk, c.d_model, c.ssm_state,
+                                           c.ssm_head_dim, c.ssm_expand,
+                                           c.d_conv, c.pdt))
+            bb.sub("mamba", mp, mx)
+            return bb.done()
+
+        sp, sx = stack_layers(b._next(), self.n_super, init_super)
+        b.sub("supers", sp, sx)
+        if self.n_tail:
+            tp, tx = stack_layers(
+                b._next(), self.n_tail,
+                lambda kk: SSM.init_mamba2(kk, c.d_model, c.ssm_state,
+                                           c.ssm_head_dim, c.ssm_expand,
+                                           c.d_conv, c.pdt))
+            b.sub("tail", tp, tx)
+        # the SHARED attention block (one set of weights, applied n_super x)
+        ap, ax = _init_attn_block(b._next(), c, moe_ffn=False)
+        b.sub("shared_attn", ap, ax)
+        return b.done()
+
+    def _backbone(self, params, x, positions, *, states=None, kv=None, pos=None):
+        """states/kv given -> cached mode. Returns (x, new_states, new_kv)."""
+        c = self.cfg
+        shared = params["shared_attn"]
+        cached = states is not None
+
+        def super_body(xx, scanned):
+            if cached:
+                layer_p, st, (ck, cv) = scanned
+            else:
+                layer_p = scanned
+                st, ck, cv = None, None, None
+
+            def mamba_body(xc, sc):
+                if cached:
+                    mp, ms = sc
+                else:
+                    mp, ms = sc, None
+                y, ns = SSM.apply_mamba2(
+                    mp, xc, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                    chunk=c.ssd_chunk, state=ms, impl=c.ssm_impl,
+                    unroll=c.stream_unroll)
+                return xc + y, ns
+
+            xs = (layer_p["mamba"], st["mamba"]) if cached else layer_p["mamba"]
+            xx, n_ms = jax.lax.scan(mamba_body, xx, xs,
+                                    unroll=c.stream_unroll)
+            xx, ncache, _ = _apply_attn_block(
+                shared, xx, c, positions=positions,
+                cache=(ck, cv) if cached else None,
+                cache_pos=pos, moe_ffn=False)
+            out = ({"mamba": n_ms}, ncache) if cached else None
+            return xx, out
+
+        if cached:
+            x, outs = jax.lax.scan(super_body, x,
+                                   (params["supers"], states["supers"],
+                                    kv["shared"]), unroll=c.stream_unroll)
+            new_states = {"supers": outs[0]}
+            new_kv = {"shared": outs[1]}
+        else:
+            body = _maybe_remat(super_body, c)
+            x, _ = jax.lax.scan(body, x, params["supers"],
+                                unroll=c.stream_unroll)
+            new_states, new_kv = None, None
+
+        if self.n_tail:
+            def tail_body(xc, sc):
+                if cached:
+                    mp, ms = sc
+                else:
+                    mp, ms = sc, None
+                y, ns = SSM.apply_mamba2(
+                    mp, xc, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                    chunk=c.ssd_chunk, state=ms, impl=c.ssm_impl,
+                    unroll=c.stream_unroll)
+                return xc + y, ns
+            xs = (params["tail"], states["tail"]) if cached else params["tail"]
+            x, n_tail = jax.lax.scan(tail_body, x, xs,
+                                     unroll=c.stream_unroll)
+            if cached:
+                new_states["tail"] = n_tail
+        return x, new_states, new_kv
+
+    def loss_fn(self, params, batch):
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(c.cdt)
+        positions = jnp.arange(tokens.shape[1])
+        x, _, _ = self._backbone(params, x, positions)
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = lm_head_logits(x, params["lm_head"], c.vocab_size)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss, {"ce_loss": loss}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        c = self.cfg
+        d_inner = c.ssm_expand * c.d_model
+        H = d_inner // c.ssm_head_dim
+        mk = lambda *s: jnp.zeros(s, c.cdt)
+        mkf = lambda *s: jnp.zeros(s, jnp.float32)  # SSM states stay f32
+        mstate = lambda n1, n2: {"mamba": {
+            "conv": mk(n1, n2, batch_size, c.d_conv - 1,
+                       d_inner + 2 * c.ssm_state),
+            "ssm": mkf(n1, n2, batch_size, H, c.ssm_head_dim, c.ssm_state)}}
+        states = {"supers": mstate(self.n_super, c.attn_every)}
+        if self.n_tail:
+            t = mstate(1, self.n_tail)["mamba"]
+            states["tail"] = {"conv": t["conv"][0], "ssm": t["ssm"][0]}
+        kv = {"shared": (mk(self.n_super, batch_size, max_len, c.n_kv_heads, c.hd),
+                         mk(self.n_super, batch_size, max_len, c.n_kv_heads, c.hd))}
+        return {"states": states, "kv": kv}
+
+    def _with_cache(self, params, tokens, cache, pos):
+        c = self.cfg
+        x = params["embed"][tokens].astype(c.cdt)
+        S = tokens.shape[1]
+        positions = pos + jnp.arange(S)
+        x, ns, nkv = self._backbone(params, x, positions,
+                                    states=cache["states"], kv=cache["kv"],
+                                    pos=pos)
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = lm_head_logits(x[:, -1:], params["lm_head"], c.vocab_size)
+        return logits, {"states": ns, "kv": nkv}
+
+    def prefill(self, params, tokens, max_len: int, ctx=None):
+        cache = self.init_cache(tokens.shape[0], max_len)
+        return self._with_cache(params, tokens, cache, jnp.int32(0))
+
+    def decode_step(self, params, tokens, cache, pos):
+        return self._with_cache(params, tokens, cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# XLSTM
+# ---------------------------------------------------------------------------
+
+class XLSTM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_super = cfg.n_layers // 2  # mLSTM + sLSTM pairs
+
+    def init(self, key):
+        c = self.cfg
+        b = Builder(key, c.pdt)
+        b.dense("embed", (c.vocab_size, c.d_model), ("vocab", "embed"),
+                scale=0.02)
+        b.ones("ln_f", (c.d_model,), ("embed",))
+        b.dense("lm_head", (c.d_model, padded_vocab(c.vocab_size)),
+                ("embed", "vocab"))
+
+        def init_super(k):
+            bb = Builder(k, c.pdt)
+            mp, mx = XL.init_mlstm(bb._next(), c.d_model, c.n_heads, c.pdt)
+            bb.sub("mlstm", mp, mx)
+            sp2, sx2 = XL.init_slstm(bb._next(), c.d_model, c.n_heads, c.pdt)
+            bb.sub("slstm", sp2, sx2)
+            bb.ones("ln1", (c.d_model,), ("embed",))
+            bb.ones("ln2", (c.d_model,), ("embed",))
+            return bb.done()
+
+        sp, sx = stack_layers(b._next(), self.n_super, init_super)
+        b.sub("supers", sp, sx)
+        return b.done()
+
+    def _backbone(self, params, x, states=None):
+        c = self.cfg
+        cached = states is not None
+
+        def body(xx, scanned):
+            if cached:
+                layer_p, st = scanned
+            else:
+                layer_p, st = scanned, {"m": None, "s": None}
+            y, nm = XL.apply_mlstm(layer_p["mlstm"],
+                                   rms_norm(xx, layer_p["ln1"], c.norm_eps),
+                                   state=st["m"] if cached else None,
+                                   q_chunk=c.attn_q_chunk,
+                                   unroll=c.stream_unroll)
+            xx = xx + y
+            y, nsl = XL.apply_slstm(layer_p["slstm"],
+                                    rms_norm(xx, layer_p["ln2"], c.norm_eps),
+                                    state=st["s"] if cached else None)
+            xx = xx + y
+            return xx, ({"m": nm, "s": nsl} if cached else None)
+
+        if cached:
+            x, ns = jax.lax.scan(body, x, (params["supers"], states),
+                                 unroll=c.stream_unroll)
+        else:
+            x, ns = jax.lax.scan(_maybe_remat(body, c), x, params["supers"],
+                                 unroll=c.stream_unroll)
+        return x, ns
+
+    def loss_fn(self, params, batch):
+        c = self.cfg
+        x = params["embed"][batch["tokens"]].astype(c.cdt)
+        x, _ = self._backbone(params, x)
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = lm_head_logits(x, params["lm_head"], c.vocab_size)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss, {"ce_loss": loss}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        c = self.cfg
+        H, hd = c.n_heads, c.d_model // c.n_heads
+        n = self.n_super
+        mk = lambda *s: jnp.zeros(s, c.cdt)
+        f32 = lambda *s: jnp.zeros(s, jnp.float32)
+        return {
+            "m": {"C": mk(n, batch_size, H, hd, hd),
+                  "n": mk(n, batch_size, H, hd),
+                  "m": jnp.full((n, batch_size, H), -1e30, jnp.float32)},
+            "s": {"c": f32(n, batch_size, H, hd),
+                  "n": f32(n, batch_size, H, hd) + 1e-6,
+                  "h": f32(n, batch_size, H, hd),
+                  "m": f32(n, batch_size, H, hd) - 1e30},
+        }
+
+    def _with_cache(self, params, tokens, cache, pos):
+        c = self.cfg
+        x = params["embed"][tokens].astype(c.cdt)
+        x, ns = self._backbone(params, x, states=cache)
+        x = rms_norm(x, params["ln_f"], c.norm_eps)
+        logits = lm_head_logits(x[:, -1:], params["lm_head"], c.vocab_size)
+        return logits, ns
+
+    def prefill(self, params, tokens, max_len: int, ctx=None):
+        cache = self.init_cache(tokens.shape[0], max_len)
+        return self._with_cache(params, tokens, cache, jnp.int32(0))
+
+    def decode_step(self, params, tokens, cache, pos):
+        return self._with_cache(params, tokens, cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# EncDec (seamless-m4t): audio-frontend stub -> encoder; text decoder
+# ---------------------------------------------------------------------------
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.n_enc_layers and cfg.n_dec_layers
+
+    def init(self, key):
+        c = self.cfg
+        b = Builder(key, c.pdt)
+        b.dense("embed", (c.vocab_size, c.d_model), ("vocab", "embed"),
+                scale=0.02)
+        b.ones("ln_enc", (c.d_model,), ("embed",))
+        b.ones("ln_dec", (c.d_model,), ("embed",))
+        b.dense("lm_head", (c.d_model, padded_vocab(c.vocab_size)),
+                ("embed", "vocab"))
+
+        def init_enc(k):
+            bb = Builder(k, c.pdt)
+            bb.ones("ln1", (c.d_model,), ("embed",))
+            bb.ones("ln2", (c.d_model,), ("embed",))
+            ap, ax = A.init_gqa(bb._next(), c.d_model, c.n_heads, c.n_kv_heads,
+                                c.hd, c.pdt)
+            bb.sub("attn", ap, ax)
+            mp, mx = init_swiglu(bb._next(), c.d_model, c.d_ff, c.pdt)
+            bb.sub("ffn", mp, mx)
+            return bb.done()
+
+        def init_dec(k):
+            bb = Builder(k, c.pdt)
+            bb.ones("ln1", (c.d_model,), ("embed",))
+            bb.ones("ln2", (c.d_model,), ("embed",))
+            bb.ones("ln3", (c.d_model,), ("embed",))
+            ap, ax = A.init_gqa(bb._next(), c.d_model, c.n_heads, c.n_kv_heads,
+                                c.hd, c.pdt)
+            bb.sub("self", ap, ax)
+            xp, xx = A.init_cross(bb._next(), c.d_model, c.n_heads,
+                                  c.n_kv_heads, c.hd, c.d_model, c.pdt)
+            bb.sub("cross", xp, xx)
+            mp, mx = init_swiglu(bb._next(), c.d_model, c.d_ff, c.pdt)
+            bb.sub("ffn", mp, mx)
+            return bb.done()
+
+        ep, ex = stack_layers(b._next(), c.n_enc_layers, init_enc)
+        b.sub("encoder", ep, ex)
+        dp, dx = stack_layers(b._next(), c.n_dec_layers, init_dec)
+        b.sub("decoder", dp, dx)
+        return b.done()
+
+    def encode(self, params, frames):
+        """frames: [B, S_enc, D] precomputed frontend embeddings (stub)."""
+        c = self.cfg
+        x = frames.astype(c.cdt)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(xx, lp):
+            h = rms_norm(xx, lp["ln1"], c.norm_eps)
+            att, _ = A.apply_gqa(lp["attn"], h, positions=positions,
+                                 rope_theta=c.rope_theta, causal=False,
+                                 impl=c.attn_impl, q_chunk=c.attn_q_chunk,
+                                 unroll=c.stream_unroll)
+            xx = xx + att
+            h2 = rms_norm(xx, lp["ln2"], c.norm_eps)
+            xx = xx + swiglu(h2, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                             lp["ffn"]["w_down"])
+            return xx, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, c), x, params["encoder"],
+                            unroll=c.stream_unroll)
+        return rms_norm(x, params["ln_enc"], c.norm_eps)
+
+    def _decode(self, params, tokens, enc_out, *, cache=None, pos=None):
+        c = self.cfg
+        x = params["embed"][tokens].astype(c.cdt)
+        S = tokens.shape[1]
+        positions = (pos if pos is not None else 0) + jnp.arange(S)
+        cached = cache is not None
+
+        def body(xx, scanned):
+            if cached:
+                lp, ((ck, cv), cross_kv) = scanned
+            else:
+                lp = scanned
+                ck = cv = cross_kv = None
+            h = rms_norm(xx, lp["ln1"], c.norm_eps)
+            att, nkv = A.apply_gqa(lp["self"], h, positions=positions,
+                                   rope_theta=c.rope_theta,
+                                   cache=(ck, cv) if cached else None,
+                                   cache_pos=pos, impl=c.attn_impl,
+                                   q_chunk=c.attn_q_chunk,
+                                   unroll=c.stream_unroll)
+            xx = xx + att
+            h2 = rms_norm(xx, lp["ln2"], c.norm_eps)
+            xatt, nxkv = A.apply_cross(
+                lp["cross"], h2,
+                ctx=None if (cached and enc_out is None) else enc_out,
+                kv_cache=cross_kv if (cached and enc_out is None) else None,
+                impl=c.attn_impl, q_chunk=c.attn_q_chunk,
+                unroll=c.stream_unroll)
+            xx = xx + xatt
+            h3 = rms_norm(xx, lp["ln3"], c.norm_eps)
+            xx = xx + swiglu(h3, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                             lp["ffn"]["w_down"])
+            return xx, ((nkv, nxkv) if cached else None)
+
+        if cached:
+            x, ncache = jax.lax.scan(body, x, (params["decoder"], cache),
+                                     unroll=c.stream_unroll)
+        else:
+            x, ncache = jax.lax.scan(_maybe_remat(body, c), x,
+                                     params["decoder"],
+                                     unroll=c.stream_unroll)
+        x = rms_norm(x, params["ln_dec"], c.norm_eps)
+        logits = lm_head_logits(x, params["lm_head"], c.vocab_size)
+        return logits, ncache
+
+    def loss_fn(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        logits, _ = self._decode(params, batch["tokens"], enc_out)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss, {"ce_loss": loss}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        c = self.cfg
+        L = c.n_dec_layers
+        mk = lambda *s: jnp.zeros(s, c.cdt)
+        return ((mk(L, batch_size, max_len, c.n_kv_heads, c.hd),
+                 mk(L, batch_size, max_len, c.n_kv_heads, c.hd)),
+                (mk(L, batch_size, c.n_ctx, c.n_kv_heads, c.hd),
+                 mk(L, batch_size, c.n_ctx, c.n_kv_heads, c.hd)))
+
+    def prefill(self, params, tokens, max_len: int, ctx=None):
+        """ctx = frames [B, S_enc, D]."""
+        enc_out = self.encode(params, ctx)
+        kv, cross = self.init_cache(tokens.shape[0], max_len)
+        logits, ncache = self._decode(params, tokens, enc_out,
+                                      cache=(kv, cross), pos=jnp.int32(0))
+        return logits[:, -1:], ncache
+
+    def decode_step(self, params, tokens, cache, pos):
+        logits, ncache = self._decode(params, tokens, None, cache=cache,
+                                      pos=pos)
+        return logits[:, -1:], ncache
+
+
+# ---------------------------------------------------------------------------
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridSSM(cfg)
+    if cfg.family == "ssm":
+        return XLSTM(cfg)
+    if cfg.family == "audio":
+        return EncDec(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,200 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/stabilized form) and sLSTM
+(scalar memory, exponential gating, recurrent scan). 1:1 interleave per the
+xLSTM-125M configuration.
+
+mLSTM train path uses the stabilized parallel (quadratic) form from the xLSTM
+paper; decode uses the O(1) recurrence over (C, n, m). sLSTM has no parallel
+form — training scans over time (lax.scan), decode is one step of the same
+recurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> Tuple[dict, dict]:
+    hd = d_model // n_heads
+    b = Builder(key, dtype)
+    b.dense("wq", (d_model, n_heads, hd), ("embed", "heads", "head_dim"))
+    b.dense("wk", (d_model, n_heads, hd), ("embed", "heads", "head_dim"))
+    b.dense("wv", (d_model, n_heads, hd), ("embed", "heads", "head_dim"))
+    b.dense("wi", (d_model, n_heads), ("embed", "heads"))
+    b.dense("wf", (d_model, n_heads), ("embed", "heads"))
+    b.dense("bi", (n_heads,), ("heads",), zero=True)
+    b.dense("bf", (n_heads,), ("heads",), scale=1.0)
+    b.dense("wo_gate", (d_model, d_model), ("embed", "embed"))
+    b.dense("wo", (n_heads, hd, d_model), ("heads", "head_dim", "embed"))
+    b.ones("norm", (d_model,), ("embed",))
+    return b.done()
+
+
+def apply_mlstm(p: dict, x: jnp.ndarray,
+                state: Optional[dict] = None, q_chunk: int = -1,
+                unroll: bool = False):
+    """x: [B,S,D] -> (y, state). state: C [B,H,dk,dv], n [B,H,dk], m [B,H]."""
+    from repro.models.common import rms_norm
+
+    B, S, D = x.shape
+    H = p["wi"].shape[1]
+    hd = D // H
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) / jnp.sqrt(float(hd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    logi = (jnp.einsum("bsd,dh->bsh", x, p["wi"]) + p["bi"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, p["wf"]) + p["bf"]).astype(jnp.float32))
+
+    if state is None and S > 1:
+        # chunkwise-parallel form (xLSTM paper §chunkwise; §Perf pair 3):
+        # O(S·Q) gate-matrix work + inter-chunk matrix-state passing instead
+        # of the O(S²) fully parallel form. Exact: equals the step
+        # recurrence (and the full parallel form at Q = S).
+        if q_chunk < 0:
+            q_chunk = S if S <= 512 else 128
+        if q_chunk == 0 or S % q_chunk != 0:
+            q_chunk = S
+        nq = S // q_chunk
+        qf = q.astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        rs = lambda a: a.reshape(B, nq, q_chunk, *a.shape[2:]).swapaxes(0, 1)
+        qcs, kcs, vcs = rs(qf), rs(kf), rs(vf)
+        lics, lfcs = rs(logi), rs(logf)
+        tri = jnp.tril(jnp.ones((q_chunk, q_chunk), bool))
+
+        def chunk(carry, xs):
+            C0, n0, m0 = carry                       # [B,H,dk,dv],[B,H,dk],[B,H]
+            qc, kc, vc, lic, lfc = xs                # [B,Q,...]
+            F = jnp.cumsum(lfc, axis=1)              # [B,Q,H]
+            a = m0[:, None, :] + F                   # inter scale (log)
+            D = (F[:, :, None, :] - F[:, None, :, :]
+                 + lic[:, None, :, :])               # [B,Q,Q,H]
+            D = jnp.where(tri[None, :, :, None], D, -jnp.inf)
+            m_t = jnp.maximum(a, jnp.max(D, axis=2)) # [B,Q,H]
+            W = jnp.exp(D - m_t[:, :, None, :])
+            inter = jnp.exp(a - m_t)                 # [B,Q,H]
+            scores = jnp.einsum("bihk,bjhk->bijh", qc, kc)
+            numer = jnp.einsum("bijh,bjhk->bihk", W * scores, vc) \
+                + inter[..., None] * jnp.einsum("bhkv,bihk->bihv", C0, qc)
+            dsum = jnp.einsum("bijh,bijh->bih", W, scores) \
+                + inter * jnp.einsum("bhk,bihk->bih", n0, qc)
+            denom = jnp.maximum(jnp.abs(dsum), jnp.exp(-m_t))
+            hc = numer / denom[..., None]
+            # state handoff
+            g = F[:, -1, :]                          # [B,H]
+            w_end = g[:, None, :] - F + lic          # [B,Q,H]
+            m1 = jnp.maximum(m0 + g, jnp.max(w_end, axis=1))
+            sc = jnp.exp(w_end - m1[:, None, :])
+            C1 = jnp.exp(m0 + g - m1)[:, :, None, None] * C0 + jnp.einsum(
+                "bjhk,bjhv,bjh->bhkv", kc, vc, sc)
+            n1 = jnp.exp(m0 + g - m1)[:, :, None] * n0 + jnp.einsum(
+                "bjhk,bjh->bhk", kc, sc)
+            return (C1, n1, m1), hc
+
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        (C, n, mm), hs = jax.lax.scan(chunk, (C0, n0, m0),
+                                      (qcs, kcs, vcs, lics, lfcs),
+                                      unroll=unroll)
+        h = hs.swapaxes(0, 1).reshape(B, S, H, hd).astype(x.dtype)
+        new_state = {"C": C.astype(x.dtype), "n": n.astype(x.dtype), "m": mm}
+    else:
+        C = state["C"] if state is not None else jnp.zeros((B, H, hd, hd), x.dtype)
+        n = state["n"] if state is not None else jnp.zeros((B, H, hd), x.dtype)
+        mm = state["m"] if state is not None else jnp.full((B, H), -1e30, jnp.float32)
+
+        def step(carry, inp):
+            C, n, mm = carry
+            qt, kt, vt, li, lf = inp
+            m_new = jnp.maximum(lf + mm, li)                # [B,H]
+            fg = jnp.exp(lf + mm - m_new).astype(x.dtype)
+            ig = jnp.exp(li - m_new).astype(x.dtype)
+            C = C * fg[:, :, None, None] + jnp.einsum("bhk,bhv->bhkv", kt, vt) \
+                * ig[:, :, None, None]
+            n = n * fg[:, :, None] + kt * ig[:, :, None]
+            num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                              jnp.exp(-m_new).astype(x.dtype))
+            return (C, n, m_new), num / den[:, :, None]
+
+        seq = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+               v.transpose(1, 0, 2, 3), logi.transpose(1, 0, 2),
+               logf.transpose(1, 0, 2))
+        (C, n, mm), hs = jax.lax.scan(step, (C, n, mm), seq)
+        h = hs.transpose(1, 0, 2, 3)
+        new_state = {"C": C, "n": n, "m": mm}
+
+    y = h.reshape(B, S, D)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    y = rms_norm(y * og, p["norm"])
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, S, H, hd), p["wo"])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> Tuple[dict, dict]:
+    hd = d_model // n_heads
+    b = Builder(key, dtype)
+    for g in ("i", "f", "z", "o"):
+        b.dense(f"w{g}", (d_model, n_heads, hd), ("embed", "heads", "head_dim"))
+        b.dense(f"r{g}", (n_heads, hd, hd), ("heads", "head_dim", "head_dim"))
+        b.dense(f"b{g}", (n_heads, hd), ("heads", "head_dim"),
+                zero=(g != "f"), scale=1.0)
+    b.ones("norm", (d_model,), ("embed",))
+    b.dense("w_out", (d_model, d_model), ("embed", "embed"))
+    return b.done()
+
+
+def apply_slstm(p: dict, x: jnp.ndarray, state: Optional[dict] = None):
+    """Recurrent scan. state: {"c","n","h","m"} each [B,H,hd] (m: [B,H,hd])."""
+    from repro.models.common import rms_norm
+
+    B, S, D = x.shape
+    H = p["wi"].shape[1]
+    hd = D // H
+    pre = {g: jnp.einsum("bsd,dhk->bshk", x, p[f"w{g}"]) + p[f"b{g}"]
+           for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        z0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = {"c": z0, "n": z0 + 1e-6, "h": z0, "m": z0 - 1e30}
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        xi, xf, xz, xo = inp
+        ri = jnp.einsum("bhk,hkl->bhl", h, p["ri"])
+        rf = jnp.einsum("bhk,hkl->bhl", h, p["rf"])
+        rz = jnp.einsum("bhk,hkl->bhl", h, p["rz"])
+        ro = jnp.einsum("bhk,hkl->bhl", h, p["ro"])
+        li = (xi + ri).astype(jnp.float32)
+        lf = jax.nn.log_sigmoid((xf + rf).astype(jnp.float32))
+        m_new = jnp.maximum(lf + m, li)
+        ig = jnp.exp(li - m_new)
+        fg = jnp.exp(lf + m - m_new)
+        z = jnp.tanh((xz + rz).astype(jnp.float32))
+        o = jax.nn.sigmoid((xo + ro).astype(jnp.float32))
+        c_new = fg * c + ig * z
+        n_new = fg * n + ig
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    seq = tuple(pre[g].transpose(1, 0, 2, 3) for g in ("i", "f", "z", "o"))
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]), seq)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    return out, {"c": c, "n": n, "h": h, "m": m}

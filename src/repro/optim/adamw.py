@@ -1,0 +1,92 @@
+"""AdamW + LR schedules, pure JAX (no optax dependency).
+
+Moments inherit each parameter's sharding automatically (they are tree_maps
+of the params), so ZeRO-style optimizer-state sharding falls out of the FSDP
+param rules. ``moment_dtype`` lets the >=400B configs halve optimizer memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"        # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        decay = jnp.clip(1.0 - (s - cfg.warmup_steps) /
+                         jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                         0.0, 1.0)
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, opt_state):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        upd32 = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p_new = p32 - lr * (upd32 + decay * p32)
+        return (p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt_state["m"],
+                                 opt_state["v"])
+    flat, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and all(hasattr(e, "dtype") for e in x))
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

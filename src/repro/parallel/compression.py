@@ -1,0 +1,98 @@
+"""Gradient compression for DCN-crossing reductions (multi-pod data
+parallelism): int8 quantization and top-k sparsification, both with error
+feedback.
+
+On a real multi-pod deployment the 'pod' axis crosses the data-center network
+(~25 GB/s vs ~50 GB/s/link ICI), so the pod-level gradient all-reduce is the
+step-time tail. int8 cuts those bytes 4x (vs f32 master grads) / 2x (vs bf16)
+at <1% cosine error with error feedback; top-k cuts them ~ratio^-1.
+
+The quantized all-reduce is expressed with ``jax.shard_map`` manual on the
+'pod' axis only ('data'/'model' stay auto-partitioned), so XLA still handles
+TP/FSDP collectives inside. Compressed bytes are metered for the roofline
+collective term (the emulated psum still moves dense arrays on CPU — the
+byte accounting is what the dry-run reports).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"          # none | int8 | topk
+    topk_ratio: float = 0.05    # fraction of entries kept (kind=topk)
+    error_feedback: bool = True
+
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_leaf(cfg: CompressionConfig, g: jnp.ndarray,
+                  err: Optional[jnp.ndarray]):
+    """Returns (transmissible g_hat, new_error, wire_bytes)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None and cfg.error_feedback:
+        g32 = g32 + err.astype(jnp.float32)
+    if cfg.kind == "int8":
+        q, s = quantize_int8(g32)
+        g_hat = dequantize_int8(q, s)
+        wire = g.size * 1 + 4
+    elif cfg.kind == "topk":
+        m = topk_mask(g32, cfg.topk_ratio)
+        g_hat = g32 * m
+        wire = int(g.size * cfg.topk_ratio) * (4 + 4)  # value + index
+    else:
+        g_hat = g32
+        wire = g.size * 4
+    new_err = (g32 - g_hat) if cfg.error_feedback and cfg.kind != "none" \
+        else None
+    return g_hat.astype(g.dtype), new_err, wire
+
+
+def compressed_psum_pod(cfg: CompressionConfig, grads, err_state,
+                        axis: str = "pod"):
+    """Inside shard_map(manual={'pod'}): compress, psum over pods, average.
+    Returns (avg_grads, new_err_state, wire_bytes_total)."""
+    n = jax.lax.psum(1, axis)
+    wire_total = 0
+    new_err = []
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = (jax.tree_util.tree_leaves(err_state)
+              if err_state is not None else [None] * len(flat_g))
+    out = []
+    for g, e in zip(flat_g, flat_e):
+        g_hat, ne, wire = compress_leaf(cfg, g, e)
+        wire_total += wire
+        g_sum = jax.lax.psum(g_hat, axis)
+        out.append(g_sum / n)
+        new_err.append(ne)
+    grads_avg = jax.tree_util.tree_unflatten(tdef, out)
+    err_tree = (jax.tree_util.tree_unflatten(tdef, new_err)
+                if err_state is not None else None)
+    return grads_avg, err_tree, wire_total
+
+
+def init_error_state(cfg: CompressionConfig, params):
+    if cfg.kind == "none" or not cfg.error_feedback:
+        return None
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)

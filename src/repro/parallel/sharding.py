@@ -1,0 +1,228 @@
+"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP).
+
+Models annotate parameters with logical axes (models/common.py); this module
+maps them onto mesh axes and builds NamedShardings for params, optimizer
+state, activations, and KV caches.
+
+Default rule set (TP on 'model', DP on 'data' [+ 'pod']):
+  heads/kv_heads/mlp/vocab/experts -> 'model'
+  embed -> None        (or 'data' under FSDP)
+  layers/head_dim/state/latent -> None
+
+FSDP ("fully sharded"): 'embed' additionally shards over 'data', putting
+params + optimizer state at 1/(data*model) per device — required for the
+>=90B archs on 16 GB HBM.
+
+Caches (decode): batch -> data axes, sequence -> 'model' (sequence-sharded
+decode attention: XLA turns the softmax reduction over the sharded length
+into an all-reduce — memory-optimal for 32k-500k contexts).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import is_axes_leaf
+
+BASE_RULES: Dict[str, Optional[str]] = {
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+    "latent": None,
+}
+
+
+def make_rules(fsdp: bool = False,
+               data_axes: Sequence[str] = ("data",)) -> Dict[str, Any]:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return rules
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes used for data parallelism (('pod','data') on multi-pod)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh: Mesh, rules: Dict[str, Any]) -> P:
+    """PartitionSpec for one leaf, dropping assignments that don't divide."""
+    entries = []
+    used = set()
+    for ax_name, dim in zip(axes, shape):
+        target = rules.get(ax_name) if ax_name is not None else None
+        if target is None:
+            entries.append(None)
+            continue
+        key = tuple(target) if isinstance(target, (list, tuple)) else (target,)
+        if set(key) & used or dim % _axis_size(mesh, target) != 0:
+            entries.append(None)
+            continue
+        entries.append(tuple(target) if isinstance(target, (list, tuple))
+                       else target)
+        used.update(key)
+    return P(*entries)
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                    rules: Optional[Dict[str, Any]] = None):
+    """NamedSharding pytree for params given logical axes + shapes."""
+    rules = rules or make_rules()
+
+    def one(axes, shape_leaf):
+        return NamedSharding(
+            mesh, spec_for_axes(axes, tuple(shape_leaf.shape), mesh, rules))
+
+    return jax.tree_util.tree_map(one, axes_tree, shapes_tree,
+                                  is_leaf=is_axes_leaf)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard leading (batch) dim over all DP axes."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        if b % int(np.prod([mesh.shape[a] for a in dp])) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, *, batch: int, seq: int,
+                    head_candidates: Sequence[int] = ()):
+    """Heuristic KV/state cache sharding: skip dim0 (layer stack), shard the
+    batch dim over DP axes, the sequence dim over 'model'; if no sequence dim
+    is present (SSM states), shard a head-like dim over 'model'."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    tp = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        used_model = False
+        b_dim = next((i for i in range(1, len(shape)) if shape[i] == batch
+                      and batch % dp_size == 0), None)
+        if b_dim is not None:
+            spec[b_dim] = dp if len(dp) > 1 else dp[0]
+        start = (b_dim + 1) if b_dim is not None else 1
+        s_dim = next((i for i in range(start, len(shape)) if shape[i] == seq
+                      and seq % tp == 0), None)
+        if s_dim is not None:
+            spec[s_dim] = "model"
+            used_model = True
+        if not used_model:
+            h_dim = next((i for i in range(start, len(shape))
+                          if shape[i] in head_candidates
+                          and shape[i] % tp == 0), None)
+            if h_dim is not None:
+                spec[h_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation/cache sharding constraints inside model code.
+#
+# Models are mesh-agnostic; when a mesh context is installed (dry-run,
+# serving engine), attention blocks constrain freshly updated KV caches to
+# (batch -> DP axes, sequence -> 'model'). Without it, XLA's propagation can
+# replicate the full cache around dynamic_update_slice (the "[SPMD]
+# involuntary full rematerialization" warning) — tens of GiB per device at
+# 32k-500k contexts.
+# ---------------------------------------------------------------------------
+import contextvars
+
+_ACT_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_mesh", default=None)
+
+
+class activation_mesh:
+    """Context manager installing a mesh for in-model sharding constraints."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self._tok = _ACT_MESH.set(self.mesh)
+        return self
+
+    def __exit__(self, *a):
+        _ACT_MESH.reset(self._tok)
+        return False
+
+
+def constrain_decode_q(q):
+    """Flash-decoding style sequence-parallel decode attention: replicate the
+    (tiny) single-token q across 'model' so XLA contracts against the
+    sequence-sharded KV cache locally (partial softmax + small all-reduce)
+    instead of ALL-GATHERING the repeated cache to keep q's head sharding
+    (GiB-scale per step). q: [B, 1, H, D]."""
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return q
+    dp = dp_axes(mesh)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    b_spec = (dp if len(dp) > 1 else dp[0]) if q.shape[0] % dpn == 0 else None
+    return jax.lax.with_sharding_constraint(
+        q, NamedSharding(mesh, P(b_spec, None, None, None)))
+
+
+def maybe_seq_shard_q(q):
+    """Fallback context parallelism for attention: when the head count does
+    not divide the 'model' axis (e.g. llama4's 40 heads on a 16-wide TP
+    axis), XLA replicates every head — so shard the *query sequence* over
+    'model' instead. q: [B, Sq, H, D]."""
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return q
+    tp = mesh.shape["model"]
+    B, Sq, H, D = q.shape
+    if H % tp == 0 or Sq % tp != 0:
+        return q
+    dp = dp_axes(mesh)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    b_spec = (dp if len(dp) > 1 else dp[0]) if B % dpn == 0 else None
+    return jax.lax.with_sharding_constraint(
+        q, NamedSharding(mesh, P(b_spec, "model", None, None)))
+
+
+def constrain_kv_cache(arr):
+    """Constrain a cache tensor laid out [B, S, ...] (dims 0=batch, 1=seq)."""
+    mesh = _ACT_MESH.get()
+    if mesh is None or arr is None:
+        return arr
+    dp = dp_axes(mesh)
+    dpn = int(np.prod([mesh.shape[a] for a in dp]))
+    spec = [None] * arr.ndim
+    if arr.shape[0] % dpn == 0 and dpn > 1:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    if arr.ndim > 1 and arr.shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        arr, NamedSharding(mesh, P(*spec)))

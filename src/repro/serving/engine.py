@@ -1,0 +1,120 @@
+"""Serving engine: jitted prefill + decode steps with sharded KV caches, and
+a batched request loop (static batch with slot recycling).
+
+Decode caches shard batch over DP axes and sequence over 'model'
+(sequence-sharded decode attention — parallel/sharding.py). ``serve_step``
+is the function the decode_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig, get_model
+from repro.parallel import sharding as Sh
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int
+    max_len: int
+    temperature: float = 0.0   # 0 -> greedy
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, serve_cfg: ServeConfig,
+                 mesh: Optional[Mesh] = None, params=None):
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.model = get_model(cfg)
+        self.mesh = mesh
+        self.params = params
+        head_cands = (cfg.n_kv_heads, cfg.n_heads,
+                      (cfg.ssm_expand * cfg.d_model) // max(cfg.ssm_head_dim, 1)
+                      if cfg.ssm_head_dim else 0)
+
+        if mesh is not None:
+            cache_shapes = jax.eval_shape(
+                lambda: self.model.init_cache(serve_cfg.batch,
+                                              serve_cfg.max_len))
+            self.cache_shardings = Sh.cache_shardings(
+                cache_shapes, mesh, batch=serve_cfg.batch,
+                seq=serve_cfg.max_len, head_candidates=head_cands)
+        else:
+            self.cache_shardings = None
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: self.model.decode_step(p, t, c, pos),
+            in_shardings=(None, None, self.cache_shardings, None)
+            if mesh is not None else None,
+            out_shardings=(None, self.cache_shardings)
+            if mesh is not None else None,
+            donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, t, ctx: self.model.prefill(
+                p, t, max_len=serve_cfg.max_len, ctx=ctx),
+            static_argnums=(), out_shardings=(None, self.cache_shardings)
+            if mesh is not None else None)
+
+    def prefill(self, tokens, ctx=None):
+        return self._prefill(self.params, tokens, ctx)
+
+    def decode(self, tokens, cache, pos):
+        return self._decode(self.params, tokens, cache, pos)
+
+    def generate(self, prompt_tokens: jnp.ndarray, n_new: int,
+                 ctx=None, key: Optional[jax.Array] = None) -> np.ndarray:
+        """Greedy/temperature generation for a full batch."""
+        B, S = prompt_tokens.shape
+        logits, cache = self.prefill(prompt_tokens, ctx)
+        outs = []
+        tok = self._sample(logits, key, 0)
+        outs.append(tok)
+        for i in range(1, n_new):
+            logits, cache = self.decode(tok, cache, jnp.int32(S + i - 1))
+            key = jax.random.fold_in(key, i) if key is not None else None
+            tok = self._sample(logits, key, i)
+            outs.append(tok)
+        return np.concatenate([np.asarray(t) for t in outs], axis=1)
+
+    def _sample(self, logits, key, i):
+        if self.scfg.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, i),
+            logits[:, -1] / self.scfg.temperature)[:, None].astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """(fn, in_shardings) for the decode dry-run cells: one-token step."""
+    model = get_model(cfg)
+    head_cands = (cfg.n_kv_heads, cfg.n_heads)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    cache_sh = Sh.cache_shardings(cache_shapes, mesh, batch=batch,
+                                  seq=max_len, head_candidates=head_cands)
+    tok_sh = Sh.batch_shardings({"t": jax.ShapeDtypeStruct((batch, 1),
+                                                           jnp.int32)},
+                                mesh)["t"]
+
+    def serve_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+
+    return serve_step, cache_sh, tok_sh
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    model = get_model(cfg)
+    head_cands = (cfg.n_kv_heads, cfg.n_heads)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    cache_sh = Sh.cache_shardings(cache_shapes, mesh, batch=batch, seq=seq,
+                                  head_candidates=head_cands)
+
+    def prefill_step(params, tokens, ctx=None):
+        return model.prefill(params, tokens, max_len=seq, ctx=ctx)
+
+    return prefill_step, cache_sh

@@ -1,0 +1,160 @@
+"""Training step builders: pjit steps with sharded state, microbatch gradient
+accumulation, optional compressed pod-level reduction (multi-pod DP).
+
+``make_train_step`` is the baseline: batch sharded over all DP axes
+('pod' included), XLA inserts every collective.
+
+``make_compressed_train_step`` makes the pod axis *manual* via jax.shard_map
+(data/model stay auto): per-pod gradients are int8/top-k compressed with
+error feedback before the DCN-crossing psum (parallel/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig, get_model
+from repro.optim import adamw
+from repro.parallel import compression as C
+from repro.parallel import sharding as Sh
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    err_state: Any = None  # compression error feedback
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                     key: jax.Array,
+                     comp: Optional[C.CompressionConfig] = None) -> TrainState:
+    model = get_model(cfg)
+    params, _ = model.init(key)
+    opt_state = adamw.init_opt_state(opt_cfg, params)
+    err = C.init_error_state(comp, params) if comp is not None else None
+    return TrainState(params, opt_state, err)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = False):
+    """NamedSharding pytrees for TrainState (opt moments follow params)."""
+    from repro.configs import param_specs
+
+    shapes, axes = param_specs(cfg)
+    rules = Sh.make_rules(fsdp=fsdp, data_axes=Sh.dp_axes(mesh))
+    ps = Sh.param_shardings(axes, shapes, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": ps,
+        "opt_state": {"m": ps, "v": ps, "step": rep},
+        "err_state": None,
+    }
+
+
+def _grad_fn(model, microbatches: int):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    if microbatches <= 1:
+        def grads_of(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, loss, metrics
+        return grads_of
+
+    def grads_of(params, batch):
+        def reshape(x):
+            # [B] -> [B//mb, mb] -> swap to [mb, B//mb]: keeps the data-
+            # parallel tiling aligned (a direct [mb, B//mb] reshape misaligns
+            # the DP shards when mb < dp_size and XLA replicates the batch).
+            b = x.shape[0]
+            return x.reshape(b // microbatches, microbatches,
+                             *x.shape[1:]).swapaxes(0, 1)
+        mb = jax.tree_util.tree_map(reshape, batch)
+
+        def body(acc, one):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, one)
+            acc_g, acc_l = acc
+            acc_g = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+            return (acc_g, acc_l + loss), metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), ms = jax.lax.scan(body, (zeros, jnp.float32(0.0)), mb)
+        inv = 1.0 / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, g_sum)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        return grads, l_sum * inv, metrics
+
+    return grads_of
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+                    *, fsdp: bool = False, microbatches: int = 1,
+                    donate: bool = True) -> Tuple[Callable, Dict]:
+    """Baseline pjit train step. Returns (jitted fn, shardings dict)."""
+    model = get_model(cfg)
+    grads_of = _grad_fn(model, microbatches)
+    shardings = state_shardings(cfg, mesh, fsdp=fsdp)
+
+    def step_fn(params, opt_state, batch):
+        grads, loss, metrics = grads_of(params, batch)
+        new_params, new_opt, opt_m = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_m)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    jit_step = jax.jit(
+        step_fn,
+        in_shardings=(shardings["params"], shardings["opt_state"], None),
+        out_shardings=(shardings["params"], shardings["opt_state"], None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jit_step, shardings
+
+
+def make_compressed_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                               mesh: Mesh, comp: C.CompressionConfig, *,
+                               fsdp: bool = False) -> Tuple[Callable, Dict]:
+    """Multi-pod step with manual compressed pod-psum (requires 'pod' axis)."""
+    assert "pod" in mesh.axis_names
+    model = get_model(cfg)
+    grads_of = _grad_fn(model, 1)
+    shardings = state_shardings(cfg, mesh, fsdp=fsdp)
+
+    def pod_local(params, opt_state, err_state, batch):
+        grads, loss, metrics = grads_of(params, batch)
+        grads, new_err, wire = C.compressed_psum_pod(comp, grads, err_state)
+        loss = jax.lax.pmean(loss, "pod")
+        new_params, new_opt, opt_m = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_m)
+        metrics["loss"] = loss
+        metrics["wire_bytes_pod"] = wire  # python int: metered, not traced
+        return new_params, new_opt, new_err, metrics
+
+    # manual over 'pod' only; 'data'/'model' remain auto-partitioned by XLA.
+    smapped = jax.shard_map(
+        pod_local, mesh=mesh,
+        in_specs=(P(), P(), P(), P("pod")),
+        out_specs=(P(), P(), P(), P()),
+        axis_names={"pod"}, check_vma=False)
+
+    jit_step = jax.jit(
+        smapped,
+        in_shardings=(shardings["params"], shardings["opt_state"], None, None),
+        out_shardings=(shardings["params"], shardings["opt_state"], None, None),
+        donate_argnums=(0, 1),
+    )
+    return jit_step, shardings

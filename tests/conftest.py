@@ -1,0 +1,29 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own 512-device flag in a
+# separate process); keep kernel tests in interpret mode on CPU.
+os.environ.setdefault("REPRO_KERNEL_INTERPRET", "1")
+
+# make the top-level benchmarks/ package importable regardless of cwd
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables():
+    """Free compiled executables between modules — the full suite compiles
+    hundreds of graphs and LLVM OOMs if they all stay resident."""
+    yield
+    import jax
+    jax.clear_caches()
+    import gc
+    gc.collect()

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a REDUCED config of the same family and runs one forward /
+train step + one prefill/decode step on CPU, asserting output shapes and no
+NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as CN
+from repro.models.transformer import get_model
+from repro.optim import adamw
+
+
+def _batch(cfg, B=2, S=16):
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["ctx"] = jax.random.normal(key, (B, cfg.n_ctx, cfg.d_ctx),
+                                         jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.n_ctx, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", CN.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = CN.get_smoke_config(arch)
+    model = get_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = model.loss_fn(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw.init_opt_state(opt_cfg, params)
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gnorm = adamw.global_norm(grads)
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0, \
+        f"{arch}: bad grad norm"
+    new_params, new_opt, m = adamw.apply_updates(opt_cfg, params, grads, opt)
+    # params actually moved
+    delta = adamw.global_norm(jax.tree_util.tree_map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        new_params, params))
+    assert float(delta) > 0.0
+    # loss decreases after a few steps on a fixed batch (learnability)
+    p, o = params, opt
+    for _ in range(5):
+        g = jax.grad(lambda q: model.loss_fn(q, batch)[0])(p)
+        p, o, _ = adamw.apply_updates(opt_cfg, p, g, o)
+    loss2, _ = model.loss_fn(p, batch)
+    assert float(loss2) < float(loss), f"{arch}: loss did not decrease"
+
+
+@pytest.mark.parametrize("arch", CN.ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = CN.get_smoke_config(arch)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    ctx = batch.get("ctx", batch.get("frames"))
+    logits, cache = model.prefill(params, batch["tokens"], max_len=S + 4,
+                                  ctx=ctx)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    assert bool(jnp.all(tok < cfg.vocab_size))
+    for i in range(2):
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(S + i))
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-1.2b", "xlstm-125m"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the full forward logits."""
+    cfg = CN.get_smoke_config(arch)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+    lp, cache = model.prefill(params, toks[:, :S - 2], max_len=S)
+    l1, cache = model.decode_step(params, toks[:, S - 2:S - 1], cache,
+                                  jnp.int32(S - 2))
+    l2, cache = model.decode_step(params, toks[:, S - 1:S], cache,
+                                  jnp.int32(S - 1))
+    if hasattr(model, "_forward"):
+        full, _ = model._forward(params, toks)
+        np.testing.assert_allclose(np.asarray(l2[:, 0], np.float32),
+                                   np.asarray(full[:, -1], np.float32),
+                                   atol=2e-3)
+
+
+def test_full_configs_param_counts():
+    """Full (non-smoke) configs match published parameter counts."""
+    targets = {
+        "zamba2-1.2b": (1.17e9, 0.10),
+        "llama3.2-1b": (1.24e9, 0.02),
+        "granite-3-8b": (8.4e9, 0.05),
+        "granite-20b": (20.3e9, 0.05),
+        "stablelm-3b": (2.8e9, 0.05),
+        "deepseek-v3-671b": (671e9, 0.01),
+        "llama4-maverick-400b-a17b": (400e9, 0.03),
+        "xlstm-125m": (0.125e9, 0.25),
+        "llama-3.2-vision-90b": (88e9, 0.05),
+        "seamless-m4t-large-v2": (2.0e9, 0.15),
+    }
+    for arch, (target, tol) in targets.items():
+        n = CN.get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_deepseek_active_params():
+    cfg = CN.get_config("deepseek-v3-671b")
+    a = cfg.active_param_count()
+    assert abs(a - 37e9) / 37e9 < 0.05, a

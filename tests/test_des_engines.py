@@ -1,0 +1,188 @@
+"""DES engine correctness: reference heap engine vs vectorized JAX engine,
+queueing-theory sanity, scheduler policies, and system invariants."""
+import numpy as np
+import pytest
+
+from repro.core import des, vdes
+from repro.core import model as M
+
+
+def make_workload(rng, n, nres=2, max_tasks=4, integer_time=False,
+                  horizon=2000.0):
+    arrival = np.sort(rng.uniform(0, horizon, n))
+    if integer_time:
+        arrival = np.floor(arrival)
+    n_tasks = rng.integers(1, max_tasks + 1, n)
+    task_type = np.where(np.arange(max_tasks)[None, :] < n_tasks[:, None],
+                         rng.integers(0, 2, (n, max_tasks)), -1)
+    task_res = rng.integers(0, nres, (n, max_tasks))
+    exec_time = rng.exponential(20.0, (n, max_tasks))
+    if integer_time:
+        exec_time = np.ceil(exec_time)
+    return M.Workload(
+        arrival=arrival.astype(np.float64),
+        n_tasks=n_tasks.astype(np.int32),
+        task_type=task_type.astype(np.int32),
+        task_res=(task_res * (task_type >= 0)).astype(np.int32),
+        exec_time=exec_time * (task_type >= 0),
+        read_bytes=np.zeros((n, max_tasks)),
+        write_bytes=np.zeros((n, max_tasks)),
+        framework=rng.integers(0, 5, n).astype(np.int32),
+        priority=rng.uniform(0, 1, n).astype(np.float32),
+        model_perf=np.zeros(n, np.float32),
+        model_size=np.zeros(n, np.float32),
+        model_clever=np.zeros(n, np.float32),
+    )
+
+
+def platform(c0=3, c1=2):
+    return M.PlatformConfig(resources=(
+        M.ResourceConfig("a", c0), M.ResourceConfig("b", c1)))
+
+
+@pytest.mark.parametrize("policy", [des.POLICY_FIFO, des.POLICY_SJF,
+                                    des.POLICY_PRIORITY])
+def test_engines_agree_integer_times(rng, policy):
+    """With integer times (exactly representable in f32), both engines must
+    produce identical schedules."""
+    wl = make_workload(rng, 150, integer_time=True, horizon=500.0)
+    plat = platform()
+    t_np = des.simulate(wl, plat, policy)
+    t_jx = vdes.simulate_to_trace(wl, plat, policy)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    assert np.allclose(np.where(live, t_np.start, 0),
+                       np.where(live, t_jx.start, 0), atol=1e-3)
+    assert np.allclose(np.where(live, t_np.finish, 0),
+                       np.where(live, t_jx.finish, 0), atol=1e-3)
+
+
+def test_engines_agree_statistically(rng):
+    wl = make_workload(rng, 400)
+    plat = platform()
+    t_np = des.simulate(wl, plat)
+    t_jx = vdes.simulate_to_trace(wl, plat)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    w_np = np.where(live, t_np.wait, 0).sum()
+    w_jx = np.where(live, t_jx.wait, 0).sum()
+    assert abs(w_np - w_jx) / max(w_np, 1.0) < 1e-3
+
+
+def test_capacity_never_exceeded(rng):
+    wl = make_workload(rng, 300)
+    plat = platform(2, 1)
+    tr = des.simulate(wl, plat)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    # sweep events: at any time, running jobs per resource <= capacity
+    for r, cap in enumerate(plat.capacities):
+        m = live & (tr.task_res == r)
+        starts = tr.start[m]
+        finishes = tr.finish[m]
+        events = np.concatenate([
+            np.stack([starts, np.ones_like(starts)], 1),
+            np.stack([finishes, -np.ones_like(finishes)], 1)])
+        order = np.lexsort((-events[:, 1], events[:, 0]))
+        # process finish (-1) before start (+1) at equal time:
+        order = np.lexsort((events[:, 1], events[:, 0]))
+        running = np.cumsum(events[order, 1])
+        assert running.max() <= cap, f"resource {r} exceeded capacity"
+
+
+def test_no_task_starts_before_ready(rng):
+    wl = make_workload(rng, 200)
+    tr = des.simulate(wl, platform())
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    assert (tr.start[live] >= tr.ready[live] - 1e-9).all()
+    # task j+1 ready == task j finish
+    for i in range(wl.n):
+        for j in range(1, wl.n_tasks[i]):
+            assert tr.ready[i, j] == pytest.approx(tr.finish[i, j - 1])
+
+
+def test_work_conservation(rng):
+    """Total busy time equals total service time (nothing lost/duplicated)."""
+    wl = make_workload(rng, 250)
+    plat = platform()
+    tr = des.simulate(wl, plat)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    svc = wl.service_time(plat.datastore)
+    assert np.allclose((tr.finish - tr.start)[live], svc[live], rtol=1e-9)
+
+
+def test_fifo_order_within_resource(rng):
+    """Under FIFO, for two jobs waiting on the same resource, the one that
+    became ready earlier starts no later."""
+    wl = make_workload(rng, 200)
+    plat = platform(1, 1)  # heavy contention
+    tr = des.simulate(wl, plat, des.POLICY_FIFO)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    for r in range(2):
+        m = live & (tr.task_res == r)
+        ready = tr.ready[m]
+        start = tr.start[m]
+        order = np.argsort(ready, kind="stable")
+        assert (np.diff(start[order]) >= -1e-9).all()
+
+
+def test_sjf_beats_fifo_on_mean_wait(rng):
+    wl = make_workload(rng, 500, max_tasks=1)
+    plat = platform(1, 1)
+    w_fifo = des.simulate(wl, plat, des.POLICY_FIFO)
+    w_sjf = des.simulate(wl, plat, des.POLICY_SJF)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    mw_fifo = np.where(live, w_fifo.wait, 0).mean()
+    mw_sjf = np.where(live, w_sjf.wait, 0).mean()
+    assert mw_sjf <= mw_fifo + 1e-6
+
+
+def test_priority_policy_prefers_high_priority(rng):
+    wl = make_workload(rng, 300, max_tasks=1)
+    plat = platform(1, 1)
+    tr = des.simulate(wl, plat, des.POLICY_PRIORITY)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    wait = np.where(live, tr.wait, 0).sum(1)
+    hi = wl.priority > np.quantile(wl.priority, 0.8)
+    lo = wl.priority < np.quantile(wl.priority, 0.2)
+    assert wait[hi].mean() <= wait[lo].mean() + 1e-6
+
+
+def test_mm_c_queue_against_theory(rng):
+    """Single M/M/c station: simulated mean wait matches Erlang-C within
+    tolerance (exact-semantics check of the whole engine stack)."""
+    lam, mu, c = 0.8, 0.25, 4  # rho = lam/(c*mu) = 0.8
+    n = 20000
+    inter = rng.exponential(1.0 / lam, n)
+    arrival = np.cumsum(inter)
+    wl = make_workload(rng, n, nres=1, max_tasks=1)
+    wl.arrival = arrival
+    wl.n_tasks[:] = 1
+    wl.task_res[:] = 0
+    wl.exec_time[:, 0] = rng.exponential(1.0 / mu, n)
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", c),))
+    tr = des.simulate(wl, plat)
+    wait = tr.wait[:, 0][n // 10:]  # drop warmup
+    rho = lam / (c * mu)
+    # Erlang C
+    import math
+    a = lam / mu
+    erlang_b = (a ** c / math.factorial(c)) / sum(
+        a ** k / math.factorial(k) for k in range(c + 1))
+    erlang_c = erlang_b / (1 - rho + rho * erlang_b)
+    wq_theory = erlang_c / (c * mu - lam)
+    assert wait.mean() == pytest.approx(wq_theory, rel=0.15)
+
+
+def test_queue_scan_matches_engine(rng):
+    """Pallas queue_scan (single station) == full DES on a 1-resource
+    workload."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    n, c = 300, 3
+    wl = make_workload(rng, n, nres=1, max_tasks=1)
+    wl.task_res[:] = 0
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", c),))
+    tr = des.simulate(wl, plat)
+    svc = wl.service_time(plat.datastore)[:, 0]
+    order = np.argsort(wl.arrival, kind="stable")
+    st, fi = ops.queue_scan(jnp.asarray(wl.arrival[order][None]),
+                            jnp.asarray(svc[order][None]), capacity=c)
+    assert np.allclose(np.asarray(st)[0], tr.start[order, 0], atol=1e-2)

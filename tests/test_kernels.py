@@ -1,0 +1,139 @@
+"""Per-kernel parity: shape/dtype sweeps against the jnp oracles, plus
+hypothesis property tests on the queue kernel's scheduling invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.des import single_station_fifo
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("S,H,Hkv,D", [
+    (128, 4, 4, 64), (256, 4, 2, 64), (256, 8, 1, 128), (512, 2, 2, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, Hkv, D, dtype):
+    key = jax.random.PRNGKey(S + H + D)
+    ks = jax.random.split(key, 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    exp = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+def test_flash_attention_noncausal():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=False)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_flash_attention_block_shape_independence():
+    """Numerics must not depend on the VMEM tiling choice."""
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 512, 2, 64))
+    k = jax.random.normal(ks[1], (1, 512, 2, 64))
+    v = jax.random.normal(ks[2], (1, 512, 2, 64))
+    o1 = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = ops.flash_attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------- mamba2
+@pytest.mark.parametrize("S,H,P,N,chunk", [
+    (128, 2, 64, 32, 64), (256, 4, 32, 64, 128), (192, 1, 64, 64, 64),
+])
+def test_mamba2_scan_sweep(S, H, P, N, chunk):
+    key = jax.random.PRNGKey(S + H)
+    ks = jax.random.split(key, 5)
+    B = 2
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    yk, hk = ops.mamba2_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, hr = ref.mamba2_recurrent_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=2e-4)
+
+
+def test_mamba2_chunk_invariance():
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, 256, 2, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 2))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, 256, 32)) * 0.3
+    Cm = jax.random.normal(ks[4], (1, 256, 32)) * 0.3
+    y1, _ = ops.mamba2_scan(x, dt, A, Bm, Cm, chunk=64)
+    y2, _ = ops.mamba2_scan(x, dt, A, Bm, Cm, chunk=128)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+
+
+# ---------------------------------------------------------------- queue
+@pytest.mark.parametrize("c", [1, 2, 7])
+def test_queue_scan_vs_numpy(rng, c):
+    R, N = 4, 250
+    rdy = np.sort(rng.uniform(0, 500, (R, N)), axis=1).astype(np.float32)
+    svc = rng.exponential(5.0, (R, N)).astype(np.float32)
+    st_k, fi_k = ops.queue_scan(jnp.asarray(rdy), jnp.asarray(svc),
+                                capacity=c)
+    for r in range(R):
+        st_np, fi_np = single_station_fifo(rdy[r], svc[r], c)
+        np.testing.assert_allclose(np.asarray(st_k)[r], st_np, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(fi_k)[r], fi_np, atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**6), c=st.integers(1, 5),
+       n=st.integers(1, 60))
+def test_queue_scan_properties(seed, c, n):
+    """Properties for any workload: starts >= ready; finish = start+service;
+    at most c jobs in service at once; FIFO start order."""
+    r = np.random.default_rng(seed)
+    rdy = np.sort(r.uniform(0, 50, n)).astype(np.float32)
+    svc = (r.exponential(3.0, n) + 0.01).astype(np.float32)
+    st_, fi_ = ops.queue_scan(jnp.asarray(rdy[None]), jnp.asarray(svc[None]),
+                              capacity=c)
+    st_, fi_ = np.asarray(st_)[0], np.asarray(fi_)[0]
+    assert (st_ >= rdy - 1e-4).all()
+    np.testing.assert_allclose(fi_, st_ + svc, atol=1e-4)
+    assert (np.diff(st_) >= -1e-4).all()  # FIFO: sorted ready -> sorted start
+    events = sorted([(s, 1) for s in st_] + [(f, -1) for f in fi_],
+                    key=lambda e: (e[0], e[1]))
+    load = 0
+    peak = 0
+    for _, delta in events:
+        load += delta
+        peak = max(peak, load)
+    assert peak <= c
+
+
+# ---------------------------------------------------------------- gmm
+@pytest.mark.parametrize("N,D,K", [(256, 2, 4), (512, 3, 16), (300, 8, 8)])
+def test_gmm_logpdf_sweep(rng, N, D, K):
+    x = jnp.asarray(rng.normal(0, 1, (N, D)), jnp.float32)
+    mu = jnp.asarray(rng.normal(0, 1, (K, D)), jnp.float32)
+    Lr = rng.normal(0, 0.2, (K, D, D))
+    L = np.tril(Lr) + np.eye(D)[None] * 1.0
+    eye = jnp.eye(D)
+    invL = jax.vmap(lambda l: jax.scipy.linalg.solve_triangular(
+        l, eye, lower=True))(jnp.asarray(L, jnp.float32))
+    lw = jnp.log(jnp.ones(K) / K)
+    out = ops.gmm_logpdf(x, mu, invL, lw, block_n=128)
+    exp = ref.gmm_logpdf_ref(x, mu, invL, lw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=5e-4)

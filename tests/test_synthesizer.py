@@ -1,0 +1,119 @@
+"""Pipeline & data synthesizer: structural validity (property-based),
+fit -> synthesize fidelity, arrival-profile reproduction."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import model as M
+from repro.core import stats
+from repro.core.fitting import cluster_of_time, fit_simulation_params
+from repro.core.synthesizer import synthesize_workload
+from repro.core.workload import (StructureProbs, generate_empirical_workload,
+                                 generate_structures, hour_of_week_weights)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    wl = generate_empirical_workload(seed=7, horizon_s=2 * 86400.0)
+    params = fit_simulation_params(wl, interarrival_families=(stats.LOGNORMAL,),
+                                   max_cluster_fit_n=400,
+                                   asset_components=16, em_iters=30)
+    return wl, params
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       pp=st.floats(0.0, 1.0), pe=st.floats(0.0, 1.0),
+       pc=st.floats(0.0, 1.0), ph=st.floats(0.0, 1.0),
+       pd=st.floats(0.0, 1.0))
+def test_structures_always_sensible(seed, pp, pe, pc, ph, pd):
+    """Property: for ANY structure probabilities, synthetic pipelines keep
+    the paper's ordering invariant — train exists, validation/compression/
+    hardening never precede training, deploy requires evaluate."""
+    rng = np.random.default_rng(seed)
+    probs = StructureProbs(pp, pe, pc, ph, pd)
+    tt, cnt = generate_structures(rng, 64, probs)
+    for i in range(64):
+        seq = tt[i, :cnt[i]]
+        assert (seq >= 0).all()
+        assert M.TRAIN in seq
+        t_pos = list(seq).index(M.TRAIN)
+        for bad in (M.EVALUATE, M.COMPRESS, M.HARDEN, M.DEPLOY):
+            if bad in seq:
+                assert list(seq).index(bad) > t_pos
+        if M.DEPLOY in seq:
+            assert M.EVALUATE in seq
+
+
+def test_synthesized_workload_valid(fitted):
+    _, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(3),
+                              horizon_s=6 * 3600.0)
+    syn.validate()
+    assert syn.n > 10
+    assert (syn.exec_time[syn.task_type >= 0] >= 0).all()
+    assert (np.diff(syn.arrival) >= 0).all()
+
+
+def test_framework_mix_preserved(fitted):
+    wl, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(4),
+                              horizon_s=12 * 3600.0)
+    emp_mix = np.bincount(wl.framework, minlength=5) / wl.n
+    syn_mix = np.bincount(syn.framework, minlength=5) / syn.n
+    assert np.abs(emp_mix - syn_mix).max() < 0.08
+
+
+def test_train_duration_qq_agreement(fitted):
+    """Fig 12(a) at test scale: per-framework train durations from the
+    synthesizer agree with the empirical traces in Q-Q."""
+    wl, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(5),
+                              horizon_s=24 * 3600.0)
+
+    def train_durs(w):
+        live = np.arange(w.max_tasks)[None, :] < w.n_tasks[:, None]
+        m = (w.task_type == M.TRAIN) & live
+        return w.exec_time[m]
+
+    qq = stats.qq_stats(train_durs(wl), train_durs(syn))
+    assert qq["r2"] > 0.93, qq
+
+
+def test_asset_distribution_qq(fitted):
+    wl, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(6),
+                              horizon_s=24 * 3600.0)
+    for attr in ("asset_rows", "asset_cols", "asset_bytes"):
+        qq = stats.qq_stats(getattr(wl, attr), getattr(syn, attr))
+        assert qq["r2"] > 0.88, (attr, qq)
+
+
+def test_arrival_profile_hour_of_week(fitted):
+    """Fig 12(c) at test scale: hourly arrival counts correlate with the
+    ground-truth hour-of-week profile."""
+    _, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(7),
+                              horizon_s=2 * 86400.0)
+    hrs = cluster_of_time(syn.arrival)
+    counts = np.bincount(hrs, minlength=168)[:48]
+    w = hour_of_week_weights()[:48]
+    r = np.corrcoef(counts, w)[0, 1]
+    assert r > 0.55, r
+
+
+def test_interarrival_mean_close(fitted):
+    """The paper itself reports that both arrival profiles 'slightly
+    overestimate pipeline interarrivals' (Fig 12b) and compensates with the
+    interarrival-factor knob. With the test fixture's lognormal-only cluster
+    fits the bias is largest; assert the paper's bias *direction* and a
+    bounded magnitude (the full benchmark uses best-of-three families and
+    lands much closer — see fig12b rows)."""
+    wl, params = fitted
+    syn = synthesize_workload(params, jax.random.PRNGKey(8),
+                              horizon_s=2 * 86400.0)
+    emp = np.diff(np.sort(wl.arrival)).mean()
+    got = np.diff(syn.arrival).mean()
+    assert got > 0.8 * emp, "underestimates arrivals badly"
+    assert got < 2.5 * emp, "overestimate beyond paper-like bias"
