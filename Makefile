@@ -1,0 +1,17 @@
+# Repo CI entry points. `make ci` is what a CI job should run.
+PYTHONPATH := src
+
+.PHONY: test smoke-bench bench ci
+
+# tier-1 verification (ROADMAP.md)
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# fast benchmark path; writes artifacts/BENCH_scenarios.json
+smoke-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --smoke
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+ci: test smoke-bench

@@ -4,9 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured quantity).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig13      # one suite
+  PYTHONPATH=src python -m benchmarks.run --smoke    # fast CI subset
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -19,15 +21,31 @@ SUITES = [
     ("fig13", "benchmarks.fig13_scalability"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
+    ("scenarios", "benchmarks.scenario_bench"),
 ]
+
+# fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
+SMOKE_SUITES = ("scenarios",)
 
 
 def main() -> None:
     import importlib
 
-    which = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    unknown = [a for a in args if a.startswith("-") and a != "--smoke"]
+    if unknown:
+        print(f"unknown option(s): {' '.join(unknown)}", file=sys.stderr)
+        sys.exit(2)
+    names = [a for a in args if not a.startswith("-")]
+    which = names[0] if names else None
+    suites = SUITES
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        if which is None:        # bare --smoke: the fast CI subset
+            suites = [(t, m) for t, m in SUITES if t in SMOKE_SUITES]
     print("name,us_per_call,derived")
-    for tag, modname in SUITES:
+    for tag, modname in suites:
         if which and which != tag:
             continue
         try:

@@ -1,0 +1,100 @@
+"""Scenario-ensemble throughput: vmapped Monte-Carlo with per-replica
+operational scenarios (capacity schedules + failure/retry tensors) vs the
+static-capacity baseline — the cost of making the SPMD engine scenario-aware.
+
+Emits ``artifacts/BENCH_scenarios.json`` so the perf trajectory is tracked
+across PRs. ``REPRO_BENCH_SMOKE=1`` shrinks the workload for CI.
+
+  PYTHONPATH=src python -m benchmarks.run scenarios
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ART, fitted_params
+from repro.core import vdes
+from repro.core import model as M
+from repro.core.synthesizer import synthesize_workload
+from repro.ops import (FailureModel, OutageModel, Scenario,
+                       ScheduledAutoscaler, stack_compiled_scenarios)
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_scenarios.json"))
+
+
+def _timed_ensemble(cols, caps, scen_kw):
+    """Compile + one timed run of a single jit+vmap call."""
+    args = [jax.numpy.asarray(c) for c in cols]
+    caps = jax.numpy.asarray(caps)
+    out = vdes.simulate_ensemble(*args, caps, **scen_kw)   # compile
+    jax.block_until_ready(out["start"])
+    t0 = time.perf_counter()
+    out = vdes.simulate_ensemble(*args, caps, **scen_kw)
+    jax.block_until_ready(out["start"])
+    return time.perf_counter() - t0, out
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.25 if smoke else 1.0) * 86400.0
+    R = 4 if smoke else 8
+    params = fitted_params()
+    plat = M.PlatformConfig()
+    wl = synthesize_workload(params, jax.random.PRNGKey(17), horizon)
+    n, T = wl.task_type.shape
+    svc = wl.service_time(plat.datastore).astype(np.float32)
+    cols = [np.tile(np.asarray(a)[None], (R,) + (1,) * np.asarray(a).ndim)
+            for a in (wl.arrival.astype(np.float32), wl.n_tasks, wl.task_res,
+                      svc, wl.priority)]
+    caps = np.tile(plat.capacities[None], (R, 1)).astype(np.int32)
+
+    wall_static, _ = _timed_ensemble(cols, caps, {})
+
+    sc = Scenario(name="bench",
+                  capacity=ScheduledAutoscaler(min_scale=0.5, max_scale=1.25),
+                  failures=FailureModel(),
+                  outages=OutageModel(mtbf_s=12 * 3600.0, mttr_s=3600.0))
+    compiled = [sc.compile(wl, plat, horizon, seed=100 + r) for r in range(R)]
+    scen_kw = stack_compiled_scenarios(compiled, n, horizon)
+    wall_scen, out = _timed_ensemble(cols, caps, scen_kw)
+
+    tput_static = R * n / wall_static
+    tput_scen = R * n / wall_scen
+    report = {
+        "replicas": R,
+        "pipelines_per_replica": n,
+        "max_tasks": T,
+        "schedule_changes": int(scen_kw["cap_times"].shape[1]),
+        "static_wall_s": wall_static,
+        "scenario_wall_s": wall_scen,
+        "static_pipelines_per_s": tput_static,
+        "scenario_pipelines_per_s": tput_scen,
+        "scenario_overhead_x": wall_scen / max(wall_static, 1e-12),
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        (f"scenario_ensemble_static_{R}x{n}_pipelines_per_s",
+         wall_static * 1e6, f"{tput_static:.0f}"),
+        (f"scenario_ensemble_scenarios_{R}x{n}_pipelines_per_s",
+         wall_scen * 1e6, f"{tput_scen:.0f}"),
+        ("scenario_ensemble_overhead_x", wall_scen * 1e6,
+         f"{report['scenario_overhead_x']:.2f}"),
+    ]
+
+
+def main():
+    for r in rows():
+        print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

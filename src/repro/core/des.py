@@ -2,12 +2,21 @@
 
 This is the oracle for the vectorized JAX engine: capacity-constrained
 resources with queue admission ordered by a pluggable policy
-(FIFO / PRIORITY / SJF), pipelines as sequential task chains.
+(FIFO / PRIORITY / SJF), pipelines as sequential task chains, and — via an
+optional :class:`repro.ops.scenario.CompiledScenario` — piecewise-constant
+capacity schedules plus stochastic task failures with bounded
+exponential-backoff retries.
 
 Wave semantics (shared with ``vdes``): all events at the same timestamp are
 retired together — finishes first (slots released, successor tasks become
-ready at the same instant), then arrivals, then one admission round per
-resource. Admission order key: (policy key, ready time, pipeline id).
+ready at the same instant; a failed attempt re-queues after its backoff
+delay), then arrivals/re-queues, then the pending capacity change, then one
+admission round per resource. Admission order key: (policy key, enqueue wave,
+pipeline id) — the integer wave counter (not the float timestamp) breaks
+FIFO ties, exactly as in ``vdes``.
+
+A capacity decrease never preempts running jobs: the free-slot count simply
+goes negative and admission stalls until enough jobs drain.
 """
 from __future__ import annotations
 
@@ -32,22 +41,39 @@ def _policy_key(policy: int, wl: M.Workload, service: np.ndarray,
 
 
 def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
-             policy: int = POLICY_FIFO) -> M.SimTrace:
+             policy: int = POLICY_FIFO, scenario=None) -> M.SimTrace:
     platform = platform or M.PlatformConfig()
     service = wl.service_time(platform.datastore)
     n, T = wl.task_type.shape
     caps = platform.capacities
     nres = caps.shape[0]
 
+    if scenario is not None:
+        cap_times = np.asarray(scenario.cap_times, np.float64)
+        cap_vals = np.asarray(scenario.cap_vals, np.int64)
+        attempts_req = np.maximum(np.asarray(scenario.attempts, np.int64), 1)
+        bo_base, bo_mult, bo_cap = (float(x) for x in scenario.backoff)
+        caps = cap_vals[0].copy()
+    else:
+        cap_times = np.zeros(1, np.float64)
+        cap_vals = caps.astype(np.int64)[None, :]
+        attempts_req = np.ones((n, T), np.int64)
+        bo_base, bo_mult, bo_cap = 0.0, 2.0, 3600.0
+    K = cap_times.shape[0]
+
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
     ready = np.full((n, T), np.nan)
+    attempts_out = np.zeros((n, T), np.int64)
 
-    free = caps.astype(np.int64).copy()
-    waiting: list[list] = [[] for _ in range(nres)]  # heaps of (key, t, pid, tidx)
+    free = cap_vals[0].astype(np.int64).copy()
+    waiting: list[list] = [[] for _ in range(nres)]  # heaps of (key, wave, pid, tidx)
     task_idx = np.zeros(n, np.int64)
+    att = np.zeros(n, np.int64)       # failed attempts on the current task
+    wave = 0
+    cap_ptr = 1
 
-    # event heap: (time, kind, pid); kind 0 = finish, 1 = arrival
+    # event heap: (time, kind, pid); kind 0 = finish, 1 = arrival/re-queue
     # (finishes processed before arrivals at equal time)
     ev: list = [(float(wl.arrival[i]), 1, i) for i in range(n)]
     heapq.heapify(ev)
@@ -57,7 +83,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         r = int(wl.task_res[pid, tidx])
         ready[pid, tidx] = t
         k = _policy_key(policy, wl, service, pid, tidx)
-        heapq.heappush(waiting[r], (k, t, pid, tidx))
+        heapq.heappush(waiting[r], (k, wave, pid, tidx))
 
     def admit(t: float) -> None:
         for r in range(nres):
@@ -67,29 +93,49 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 s = float(service[pid, tidx])
                 start[pid, tidx] = t
                 finish[pid, tidx] = t + s
+                attempts_out[pid, tidx] += 1
                 heapq.heappush(ev, (t + s, 0, pid))
 
-    while ev:
-        t_star = ev[0][0]
-        wave = []
+    while True:
+        t_heap = ev[0][0] if ev else np.inf
+        t_cap = cap_times[cap_ptr] if cap_ptr < K else np.inf
+        t_star = min(t_heap, t_cap)
+        if not np.isfinite(t_star):
+            break                       # stalled forever: remaining tasks NaN
+        wave_ev = []
         while ev and ev[0][0] == t_star:
-            wave.append(heapq.heappop(ev))
-        for _, kind, pid in wave:          # finishes sort before arrivals
+            wave_ev.append(heapq.heappop(ev))
+        for _, kind, pid in wave_ev:       # finishes sort before arrivals
             if kind == 0:
                 tidx = int(task_idx[pid])
                 free[int(wl.task_res[pid, tidx])] += 1
-                task_idx[pid] += 1
-                if task_idx[pid] < wl.n_tasks[pid]:
-                    enqueue(pid, t_star)
+                if att[pid] + 1 < attempts_req[pid, tidx]:
+                    # attempt failed: re-queue after bounded exp. backoff
+                    delay = min(bo_base * bo_mult ** att[pid], bo_cap)
+                    att[pid] += 1
+                    heapq.heappush(ev, (t_star + delay, 1, pid))
+                else:
+                    att[pid] = 0
+                    task_idx[pid] += 1
+                    if task_idx[pid] < wl.n_tasks[pid]:
+                        enqueue(pid, t_star)
             else:
                 enqueue(pid, t_star)
+        if cap_ptr < K and cap_times[cap_ptr] == t_star:
+            free += cap_vals[cap_ptr] - cap_vals[cap_ptr - 1]
+            cap_ptr += 1
         admit(t_star)
+        wave += 1
+        if not ev and not any(waiting):
+            break                       # all pipelines done (or never arrive)
 
     return M.SimTrace(
         start=start, finish=finish, ready=ready,
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
         task_type=wl.task_type, arrival=np.asarray(wl.arrival, np.float64),
-        capacities=caps,
+        capacities=np.asarray(caps, np.int64),
+        attempts=attempts_out if scenario is not None else None,
+        completed=(task_idx >= wl.n_tasks) if scenario is not None else None,
     )
 
 
@@ -109,4 +155,31 @@ def single_station_fifo(ready: np.ndarray, service: np.ndarray,
         start[j] = s
         finish[j] = s + service[j]
         slots[k] = finish[j]
+    return start, finish
+
+
+def single_station_fifo_schedule(ready: np.ndarray, service: np.ndarray,
+                                 cap_times: np.ndarray, cap_vals: np.ndarray,
+                                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Exact FIFO queue for ONE resource under a *non-decreasing* capacity
+    schedule (server additions only): server k added at the step time becomes
+    available from that instant. Extends :func:`single_station_fifo` —
+    deterministic oracle for the engines' capacity-schedule path. Returns
+    (start, finish).
+    """
+    cap_vals = np.asarray(cap_vals, np.int64)
+    cap_times = np.asarray(cap_times, np.float64)
+    assert (np.diff(cap_vals) >= 0).all(), "oracle handles additions only"
+    avail = np.repeat(cap_times, np.diff(np.concatenate([[0], cap_vals])))
+    slots_free = np.zeros(avail.shape[0])
+    order = np.argsort(ready, kind="stable")
+    start = np.empty_like(np.asarray(ready, np.float64))
+    finish = np.empty_like(start)
+    for j in order:
+        t_slot = np.maximum(slots_free, avail)
+        k = int(np.argmin(t_slot))
+        s = max(ready[j], t_slot[k])
+        start[j] = s
+        finish[j] = s + service[j]
+        slots_free[k] = finish[j]
     return start, finish

@@ -23,6 +23,7 @@ from repro.core import des, trace, vdes
 from repro.core import model as M
 from repro.core.fitting import SimulationParams
 from repro.core.synthesizer import synthesize_workload
+from repro.ops.scenario import Scenario, stack_compiled_scenarios
 
 
 @dataclasses.dataclass
@@ -36,11 +37,18 @@ class Experiment:
     seed: int = 0
     n_replicas: int = 1
     engine: str = "numpy"  # "numpy" | "jax"
+    # operational scenario (capacity schedule / failures / SLOs); None = the
+    # static platform, engine-identical to the pre-scenario behavior
+    scenario: Optional[Scenario] = None
+    compute_cost_per_node_hour: float = 1.0
+    learning_cost_per_node_hour: float = 3.0
 
     def platform(self) -> M.PlatformConfig:
         return M.PlatformConfig(resources=(
-            M.ResourceConfig("compute_cluster", self.compute_capacity),
-            M.ResourceConfig("learning_cluster", self.learning_capacity),
+            M.ResourceConfig("compute_cluster", self.compute_capacity,
+                             self.compute_cost_per_node_hour),
+            M.ResourceConfig("learning_cluster", self.learning_capacity,
+                             self.learning_cost_per_node_hour),
         ))
 
 
@@ -58,7 +66,16 @@ class ExperimentResult:
         meta = {"experiment": dataclasses.asdict(self.experiment),
                 "summary": self.summary, "wall_s": self.wall_s}
         with open(os.path.join(directory, "meta.json"), "w") as f:
-            json.dump(meta, f, indent=2, default=float)
+            json.dump(meta, f, indent=2, default=_json_default)
+
+
+def _json_default(x):
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    try:
+        return float(x)
+    except (TypeError, ValueError):
+        return str(x)
 
 
 def run_experiment(exp: Experiment, params: SimulationParams) -> ExperimentResult:
@@ -70,13 +87,20 @@ def run_experiment(exp: Experiment, params: SimulationParams) -> ExperimentResul
     key = jax.random.PRNGKey(exp.seed)
     wl = synthesize_workload(params, key, exp.horizon_s, platform,
                              exp.interarrival_factor)
+    compiled = exp.scenario.compile(wl, platform, exp.horizon_s,
+                                    seed=exp.seed, policy=exp.policy) \
+        if exp.scenario is not None else None
     if exp.engine == "jax":
-        tr = vdes.simulate_to_trace(wl, platform, exp.policy)
+        tr = vdes.simulate_to_trace(wl, platform, exp.policy, scenario=compiled)
     else:
-        tr = des.simulate(wl, platform, exp.policy)
+        tr = des.simulate(wl, platform, exp.policy, scenario=compiled)
     rec = trace.flatten_trace(tr, wl)
     wall = time.perf_counter() - t_begin
-    summary = trace.summarize(rec, platform.capacities, exp.horizon_s)
+    summary = trace.summarize(
+        rec, platform.capacities, exp.horizon_s,
+        schedule=compiled.schedule if compiled is not None else None,
+        cost_rates=platform.cost_rates if compiled is not None else None,
+        slo=exp.scenario.slo if exp.scenario is not None else None)
     summary["wall_s"] = wall
     summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
     return ExperimentResult(exp, summary, rec, wall)
@@ -84,12 +108,19 @@ def run_experiment(exp: Experiment, params: SimulationParams) -> ExperimentResul
 
 def _run_ensemble(exp: Experiment, params: SimulationParams,
                   platform: M.PlatformConfig, t_begin: float) -> ExperimentResult:
-    """Monte-Carlo: synthesize R replicas, simulate them in one vmapped call."""
+    """Monte-Carlo: synthesize R replicas, simulate them in one vmapped call.
+    With a scenario, each replica gets its own compiled schedule/failure
+    draws (seed + replica index) — autoscaler/outage A/B in one SPMD call."""
     keys = jax.random.split(jax.random.PRNGKey(exp.seed), exp.n_replicas)
     wls = [synthesize_workload(params, k, exp.horizon_s, platform,
                                exp.interarrival_factor) for k in keys]
     n_max = max(w.n for w in wls)
     T = wls[0].max_tasks
+
+    compiled = [exp.scenario.compile(w, platform, exp.horizon_s,
+                                     seed=exp.seed + 1000 * r,
+                                     policy=exp.policy)
+                for r, w in enumerate(wls)] if exp.scenario is not None else None
 
     def pad(w: M.Workload):
         p = n_max - w.n
@@ -104,8 +135,12 @@ def _run_ensemble(exp: Experiment, params: SimulationParams,
 
     cols = [np.stack(x) for x in zip(*[pad(w) for w in wls])]
     caps = np.tile(platform.capacities[None], (exp.n_replicas, 1)).astype(np.int32)
+    scen_kw = {}
+    if compiled is not None:
+        scen_kw = stack_compiled_scenarios(compiled, n_max, exp.horizon_s)
     out = vdes.simulate_ensemble(*[jax.numpy.asarray(c) for c in cols],
-                                 jax.numpy.asarray(caps), exp.policy)
+                                 jax.numpy.asarray(caps), exp.policy,
+                                 **scen_kw)
     wall = time.perf_counter() - t_begin
 
     rep_sums = []
@@ -117,10 +152,18 @@ def _run_ensemble(exp: Experiment, params: SimulationParams,
             ready=np.asarray(out["ready"][r][: w.n], np.float64),
             n_tasks=w.n_tasks.astype(np.int64), task_res=w.task_res,
             task_type=w.task_type, arrival=np.asarray(w.arrival, np.float64),
-            capacities=platform.capacities)
+            capacities=platform.capacities,
+            attempts=np.asarray(out["attempts"][r][: w.n], np.int64)
+            if compiled is not None else None,
+            completed=np.asarray(out["done"][r][: w.n])
+            if compiled is not None else None)
         rec = trace.flatten_trace(tr, w)
         recs.append(rec)
-        rep_sums.append(trace.summarize(rec, platform.capacities, exp.horizon_s))
+        rep_sums.append(trace.summarize(
+            rec, platform.capacities, exp.horizon_s,
+            schedule=compiled[r].schedule if compiled is not None else None,
+            cost_rates=platform.cost_rates if compiled is not None else None,
+            slo=exp.scenario.slo if exp.scenario is not None else None))
     summary = {
         "mean_wait_s": float(np.mean([s["mean_wait_s"] for s in rep_sums])),
         "p95_wait_s": float(np.mean([s["p95_wait_s"] for s in rep_sums])),
@@ -129,6 +172,10 @@ def _run_ensemble(exp: Experiment, params: SimulationParams,
         "wall_s": wall,
         "n_replicas": exp.n_replicas,
     }
+    for k in ("total_cost", "deadline_miss_rate", "wait_slo_violation_rate",
+              "mean_attempts"):
+        if all(k in s for s in rep_sums):
+            summary[k] = float(np.mean([s[k] for s in rep_sums]))
     from repro.core.runtime import _concat_records
     return ExperimentResult(exp, summary, _concat_records(recs), wall, rep_sums)
 
@@ -141,10 +188,14 @@ def sweep(base: Experiment, params: SimulationParams,
 
     names = list(grid)
     results = []
+
+    def fmt(v):
+        return getattr(v, "name", v)   # scenarios print by name, not repr
+
     for combo in itertools.product(*[grid[k] for k in names]):
         exp = dataclasses.replace(base, **dict(zip(names, combo)))
         exp = dataclasses.replace(
-            exp, name=f"{base.name}/" + ",".join(f"{k}={v}" for k, v in
+            exp, name=f"{base.name}/" + ",".join(f"{k}={fmt(v)}" for k, v in
                                                  zip(names, combo)))
         results.append(run_experiment(exp, params))
     return results

@@ -47,10 +47,12 @@ DEFAULT_ROUTING = {
 @dataclasses.dataclass(frozen=True)
 class ResourceConfig:
     """A capacity-constrained infrastructure component (SimPy shared-resource
-    semantics: FIFO queue, ``capacity`` concurrent jobs)."""
+    semantics: FIFO queue, ``capacity`` concurrent jobs). ``cost_per_node_hour``
+    feeds the operational cost accounting in :mod:`repro.ops.accounting`."""
 
     name: str
     capacity: int
+    cost_per_node_hour: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +80,12 @@ class PlatformConfig:
     @property
     def capacities(self) -> np.ndarray:
         return np.array([r.capacity for r in self.resources], np.int64)
+
+    @property
+    def cost_rates(self) -> np.ndarray:
+        """[R] $ per node-hour (operational cost accounting)."""
+        return np.array([r.cost_per_node_hour for r in self.resources],
+                        np.float64)
 
     def route(self, task_type: np.ndarray) -> np.ndarray:
         table = np.zeros(N_TASK_TYPES, np.int64)
@@ -165,7 +173,14 @@ class SimTrace:
     task_res: np.ndarray     # [N, T]
     task_type: np.ndarray    # [N, T]
     arrival: np.ndarray      # [N]
-    capacities: np.ndarray   # [R]
+    capacities: np.ndarray   # [R] (initial capacities under a schedule)
+    # service attempts actually executed per task (failure/retry scenarios);
+    # None = every task ran exactly once
+    attempts: Optional[np.ndarray] = None
+    # [N] bool: pipeline ran ALL its tasks to successful completion. A task
+    # stranded mid-retry still has a recorded (failed-attempt) finish, so
+    # NaN-scanning cannot detect it; None = derive from NaNs (pre-scenario)
+    completed: Optional[np.ndarray] = None
 
     @property
     def wait(self) -> np.ndarray:

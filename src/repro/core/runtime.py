@@ -138,15 +138,29 @@ def run_feedback_simulation(
     horizon_s: float,
     n_models: int = 20,
     window_s: float = 6 * 3600.0,
-    trigger: TriggerRule = TriggerRule(),
+    trigger: Optional[TriggerRule] = None,
     platform: Optional[M.PlatformConfig] = None,
     policy: int = des.POLICY_FIFO,
     interarrival_factor: float = 1.0,
     drift_scale: float = 1.0,
+    scenario=None,
 ) -> FeedbackResult:
-    """Windowed co-simulation of the Fig 7 loop."""
+    """Windowed co-simulation of the Fig 7 loop.
+
+    ``trigger`` defaults to a fresh :class:`TriggerRule` per call (a shared
+    instance default would leak mutations across runs). ``scenario`` is a
+    :class:`repro.ops.scenario.Scenario`: the capacity schedule is compiled
+    once for the whole horizon (windows see absolute time), while failure
+    attempts are re-sampled per window's workload. Capacity policies that
+    need the workload to plan (ReactiveAutoscaler) are not usable here —
+    the schedule is compiled before any window is synthesized.
+    """
+    trigger = trigger if trigger is not None else TriggerRule()
     platform = platform or M.PlatformConfig()
     rng = np.random.default_rng(seed)
+    sched = scenario.compile_schedule(platform, horizon_s, seed=seed,
+                                      policy=policy) \
+        if scenario is not None else None
     key = jax.random.PRNGKey(seed)
     fleet = make_model_fleet(rng, n_models, drift_scale=drift_scale)
     last_fire = np.full(n_models, -1e18)
@@ -172,7 +186,10 @@ def run_feedback_simulation(
         retrain_ids = getattr(pending_retrain, "retrain_model_id",
                               np.array([], np.int64)) if pending_retrain is not None \
             else np.array([], np.int64)
-        trace = des.simulate(wl, platform, policy)
+        compiled = scenario.compile(wl, platform, horizon_s, seed=seed + w,
+                                    policy=policy, schedule=sched) \
+            if scenario is not None else None
+        trace = des.simulate(wl, platform, policy, scenario=compiled)
         all_recs.append(flatten_trace(trace, wl))
 
         # apply sudden-drift jumps within this window
@@ -183,10 +200,17 @@ def run_feedback_simulation(
                     rng.exponential(m.jump_scale, n_jumps)))
             perf_tl[m.model_id, w] = m.performance(t1)
 
-        # redeploy completed retrainings (deploy-task finish inside window)
+        # redeploy completed retrainings (deploy-task finish inside window);
+        # a scenario can strand a retrain pipeline (finish then records a
+        # FAILED attempt, or NaN) — only fully completed ones redeploy
         if retrain_rows.any():
-            fin = trace.finish[np.nonzero(retrain_rows)[0], 2]
-            for mid, tf in zip(retrain_ids, fin):
+            rows = np.nonzero(retrain_rows)[0]
+            fin = trace.finish[rows, 2]
+            done = trace.completed[rows] if trace.completed is not None \
+                else np.isfinite(fin)
+            for mid, tf, ok in zip(retrain_ids, fin, done):
+                if not ok or not np.isfinite(tf):
+                    continue
                 m = fleet[int(mid)]
                 m.perf0 = float(np.clip(m.perf0 + rng.normal(0.005, 0.01),
                                         0.4, 0.995))

@@ -29,6 +29,24 @@ class TaskRecords:
     read_bytes: np.ndarray
     write_bytes: np.ndarray
     framework: np.ndarray
+    # service attempts per task (failure/retry scenarios); defaults to 1
+    attempts: Optional[np.ndarray] = None
+    # the owning pipeline's arrival time (retry re-queues overwrite ready, so
+    # SLO makespans must not be derived from it); falls back to ready for
+    # records persisted before this column existed
+    arrival: Optional[np.ndarray] = None
+    # whether the owning pipeline ran to full completion (a task stranded
+    # mid-retry records its failed attempt's finish, so NaNs can't tell);
+    # falls back to finish being non-NaN
+    pipeline_done: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.attempts is None:
+            self.attempts = np.ones_like(self.start, np.int64)
+        if self.arrival is None:
+            self.arrival = np.asarray(self.ready, np.float64).copy()
+        if self.pipeline_done is None:
+            self.pipeline_done = ~np.isnan(self.finish)
 
     @property
     def wait(self) -> np.ndarray:
@@ -62,6 +80,13 @@ def flatten_trace(trace: M.SimTrace, wl: M.Workload) -> TaskRecords:
         read_bytes=wl.read_bytes[pid, pos],
         write_bytes=wl.write_bytes[pid, pos],
         framework=wl.framework[pid],
+        # raw executed counts: 0 = never admitted (stranded), kept so
+        # accounting can tell stranding apart from a clean 1-attempt run
+        attempts=None if trace.attempts is None
+        else np.asarray(trace.attempts[pid, pos], np.int64),
+        arrival=np.asarray(trace.arrival, np.float64)[pid],
+        pipeline_done=None if trace.completed is None
+        else np.asarray(trace.completed, bool)[pid],
     )
 
 
@@ -78,8 +103,9 @@ def utilization_timeline(rec: TaskRecords, capacities: np.ndarray,
     nres = capacities.shape[0]
     util = np.zeros((nres, nbins))
     edges = np.arange(nbins + 1) * bin_s
+    ran = ~np.isnan(rec.start)    # stranded tasks (scenario starvation) idle
     for r in range(nres):
-        m = rec.resource == r
+        m = (rec.resource == r) & ran
         s, f = rec.start[m], rec.finish[m]
         for b in range(nbins):
             lo, hi = edges[b], edges[b + 1]
@@ -92,8 +118,9 @@ def mean_utilization(rec: TaskRecords, capacities: np.ndarray,
                      horizon_s: float) -> np.ndarray:
     nres = capacities.shape[0]
     out = np.zeros(nres)
+    ran = ~np.isnan(rec.start)    # stranded tasks (scenario starvation) idle
     for r in range(nres):
-        m = rec.resource == r
+        m = (rec.resource == r) & ran
         busy = np.clip(np.minimum(rec.finish[m], horizon_s) - rec.start[m],
                        0.0, None).sum()
         out[r] = busy / (capacities[r] * horizon_s)
@@ -107,9 +134,12 @@ def queue_length_timeline(rec: TaskRecords, nres: int, bin_s: float = 3600.0,
     nbins = int(np.ceil(horizon / bin_s))
     q = np.zeros((nres, nbins))
     edges = np.arange(nbins + 1) * bin_s
+    requested = ~np.isnan(rec.ready)
     for r in range(nres):
-        m = rec.resource == r
-        a, s = rec.ready[m], rec.start[m]
+        m = (rec.resource == r) & requested
+        # a stranded task (requested, never admitted) waits forever
+        a = rec.ready[m]
+        s = np.where(np.isnan(rec.start[m]), np.inf, rec.start[m])
         for b in range(nbins):
             lo, hi = edges[b], edges[b + 1]
             overlap = np.clip(np.minimum(s, hi) - np.maximum(a, lo), 0.0, None)
@@ -134,13 +164,26 @@ def network_traffic(rec: TaskRecords, bin_s: float = 3600.0,
     horizon = horizon_s or float(np.nanmax(rec.finish)) + 1.0
     nbins = int(np.ceil(horizon / bin_s))
     edges = np.arange(nbins + 1) * bin_s
-    b = np.clip((rec.start // bin_s).astype(np.int64), 0, nbins - 1)
-    rd = np.bincount(b, weights=rec.read_bytes, minlength=nbins) * tcp_overhead
-    wr = np.bincount(b, weights=rec.write_bytes, minlength=nbins) * tcp_overhead
+    ran = ~np.isnan(rec.start)    # stranded tasks never transfer
+    b = np.clip((rec.start[ran] // bin_s).astype(np.int64), 0, nbins - 1)
+    rd = np.bincount(b, weights=rec.read_bytes[ran],
+                     minlength=nbins) * tcp_overhead
+    wr = np.bincount(b, weights=rec.write_bytes[ran],
+                     minlength=nbins) * tcp_overhead
     return {"edges": edges, "read": rd, "write": wr}
 
 
-def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float) -> Dict:
+def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
+              schedule=None, cost_rates: Optional[np.ndarray] = None,
+              slo=None, deadlines: Optional[np.ndarray] = None) -> Dict:
+    """Dashboard summary. The optional operational-scenario kwargs fold in
+    cost/SLO accounting: ``schedule`` (a :class:`repro.ops.capacity.
+    CapacitySchedule`) adds a ``utilization_vs_provisioned`` block computed
+    against the time-varying provisioning (the plain ``utilization`` key
+    stays relative to the static ``capacities`` argument) and, with
+    ``cost_rates`` ($/node-hour), dollar cost; ``slo`` (a :class:`repro.ops.
+    accounting.SLOConfig`) adds deadline-miss and wait-SLO metrics
+    (``deadlines`` optionally per-pipeline, indexed by pipeline id)."""
     util = mean_utilization(rec, capacities, horizon_s)
     out = {
         "n_tasks": int(rec.start.shape[0]),
@@ -155,5 +198,13 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float) -> Dic
     for t in range(M.N_TASK_TYPES):
         m = rec.task_type == t
         if m.any():
-            out[f"wait_{M.TASK_TYPE_NAMES[t]}_s"] = float(np.mean(rec.wait[m]))
+            out[f"wait_{M.TASK_TYPE_NAMES[t]}_s"] = float(np.nanmean(rec.wait[m]))
+    if schedule is not None or slo is not None:
+        from repro.ops import accounting
+        from repro.ops.capacity import static_schedule
+        sched = schedule if schedule is not None \
+            else static_schedule(capacities)
+        out.update(accounting.scenario_summary(
+            rec, sched, horizon_s, cost_rates=cost_rates, slo=slo,
+            deadlines=deadlines))
     return out

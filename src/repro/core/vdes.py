@@ -2,15 +2,28 @@
 
 State is a struct-of-arrays over pipelines; a ``lax.while_loop`` advances the
 global clock to the next event time and retires *all* events at that instant
-(finish -> release -> advance -> enqueue, arrivals -> enqueue, then one ranked
-admission round per resource). Semantics match ``repro.core.des`` exactly
-(same wave ordering, same FIFO/PRIORITY/SJF keys), verified by tests on
-integer-time workloads.
+(finish -> release -> advance/retry -> enqueue, arrivals -> enqueue, pending
+capacity change, then one ranked admission round per resource). Semantics
+match ``repro.core.des`` exactly (same wave ordering, same
+FIFO/PRIORITY/SJF keys), verified by tests on integer-time workloads —
+including under operational scenarios:
 
-Because the function is pure jnp, it can be ``jax.vmap``-ed over a replica
+  - **capacity schedules**: a time-indexed ``[K, nres]`` tensor of
+    piecewise-constant capacities; the next change time participates in the
+    global next-event minimum, and the delta is applied to the free-slot
+    vector before the admission round (decreases never preempt — free goes
+    negative and admission stalls until jobs drain);
+  - **failure/retry injection**: a pre-sampled ``attempts[N, T]`` tensor
+    (every random draw happens outside the jitted function); a failed attempt
+    holds its slot for the full service time, then re-enters the arrival path
+    after a deterministic bounded exponential backoff
+    ``min(base * mult**k, cap)``.
+
+Because the function stays pure jnp, it can be ``jax.vmap``-ed over a replica
 axis and ``jax.jit``-ed / sharded — the TPU-native payoff: Monte-Carlo
-ensembles of platform scenarios run as one SPMD program (see
-``launch/simulate.py`` and ``examples/scheduler_comparison.py``).
+ensembles of *operational scenarios* (per-replica capacity schedules,
+failure draws, and backoff constants) run as one SPMD program (see
+``benchmarks/scenario_bench.py`` and ``examples/autoscaling_scenarios.py``).
 
 Time is float32; recommended horizons <= ~30 days keep the clock ulp below
 0.5 s (DESIGN.md §3 numerics note). FIFO ordering never depends on float
@@ -34,29 +47,34 @@ INF = jnp.float32(3.0e38)
 # phases
 _NOT_ARRIVED, _QUEUED, _RUNNING, _DONE = 0, 1, 2, 3
 
+_NO_RETRY_BACKOFF = (0.0, 2.0, 3600.0)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class VWorkload:
-    """Device-resident workload tensors (one replica)."""
+    """Device-resident workload tensors (one replica). ``attempts`` is the
+    pre-sampled service-attempt count per task for failure/retry scenarios
+    (None = one attempt each)."""
 
     arrival: jnp.ndarray    # [N] f32
     n_tasks: jnp.ndarray    # [N] i32
     task_res: jnp.ndarray   # [N, T] i32
     service: jnp.ndarray    # [N, T] f32
     priority: jnp.ndarray   # [N] f32
+    attempts: Optional[jnp.ndarray] = None   # [N, T] i32
 
     def tree_flatten(self):
         return ((self.arrival, self.n_tasks, self.task_res, self.service,
-                 self.priority), None)
+                 self.priority, self.attempts), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
     @staticmethod
-    def from_workload(wl: M.Workload, platform: Optional[M.PlatformConfig] = None
-                      ) -> "VWorkload":
+    def from_workload(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
+                      attempts: Optional[np.ndarray] = None) -> "VWorkload":
         platform = platform or M.PlatformConfig()
         return VWorkload(
             arrival=jnp.asarray(wl.arrival, jnp.float32),
@@ -64,6 +82,8 @@ class VWorkload:
             task_res=jnp.asarray(wl.task_res, jnp.int32),
             service=jnp.asarray(wl.service_time(platform.datastore), jnp.float32),
             priority=jnp.asarray(wl.priority, jnp.float32),
+            attempts=None if attempts is None
+            else jnp.asarray(attempts, jnp.int32),
         )
 
 
@@ -72,11 +92,30 @@ def _cummax(x: jnp.ndarray) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("policy",))
-def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO):
+def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
+             cap_times: Optional[jnp.ndarray] = None,
+             cap_vals: Optional[jnp.ndarray] = None,
+             backoff=None):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
-    NaN where a task does not exist) and the wave count."""
+    NaN where a task does not exist or never ran) and the wave count.
+
+    ``cap_times [K]`` / ``cap_vals [K, nres]`` give a piecewise-constant
+    capacity schedule (``cap_times[0]`` must be 0; ``capacities`` is ignored
+    when given). ``backoff`` is the ``(base, mult, cap)`` retry-delay triple.
+    """
     n, T = vwl.task_res.shape
-    nres = capacities.shape[0]
+    if (cap_times is None) != (cap_vals is None):
+        raise ValueError("cap_times and cap_vals must be given together")
+    if cap_times is None:
+        cap_times = jnp.zeros((1,), jnp.float32)
+        cap_vals = jnp.asarray(capacities, jnp.int32)[None, :]
+    cap_times = jnp.asarray(cap_times, jnp.float32)
+    cap_vals = jnp.asarray(cap_vals, jnp.int32)
+    K, nres = cap_vals.shape
+    bo = jnp.asarray(backoff if backoff is not None else _NO_RETRY_BACKOFF,
+                     jnp.float32)
+    att_req = (jnp.ones((n, T), jnp.int32) if vwl.attempts is None
+               else jnp.maximum(jnp.asarray(vwl.attempts, jnp.int32), 1))
     ids = jnp.arange(n, dtype=jnp.int32)
 
     state = dict(
@@ -84,40 +123,71 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO)
         task_idx=jnp.zeros((n,), jnp.int32),
         t_next=vwl.arrival,
         enq_wave=jnp.zeros((n,), jnp.int32),
-        free=jnp.asarray(capacities, jnp.int32),
+        attempt=jnp.zeros((n,), jnp.int32),
+        free=cap_vals[0],
+        cap_idx=jnp.int32(1),
         wave=jnp.int32(0),
         start=jnp.full((n, T), jnp.nan, jnp.float32),
         finish=jnp.full((n, T), jnp.nan, jnp.float32),
         ready=jnp.full((n, T), jnp.nan, jnp.float32),
+        att_out=jnp.zeros((n, T), jnp.int32),
     )
 
+    def next_cap_time(cap_idx):
+        return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
+                         INF)
+
     def cond(s):
-        return jnp.any(s["phase"] != _DONE)
+        t_star = jnp.minimum(jnp.min(s["t_next"]),
+                             next_cap_time(s["cap_idx"]))
+        # exit when everything is done OR nothing can ever happen again
+        # (e.g. capacity held at zero past the end of the schedule)
+        return jnp.any(s["phase"] != _DONE) & (t_star < INF)
 
     def body(s):
         phase, task_idx, t_next = s["phase"], s["task_idx"], s["t_next"]
-        t_star = jnp.min(t_next)
+        t_cap = next_cap_time(s["cap_idx"])
+        t_star = jnp.minimum(jnp.min(t_next), t_cap)
 
         finishing = (phase == _RUNNING) & (t_next == t_star)
         arriving = (phase == _NOT_ARRIVED) & (t_next == t_star)
 
         # release slots held by finishing jobs
-        res_now = vwl.task_res[ids, jnp.clip(task_idx, 0, T - 1)]
+        tcl0 = jnp.clip(task_idx, 0, T - 1)
+        res_now = vwl.task_res[ids, tcl0]
         freed = jax.ops.segment_sum(finishing.astype(jnp.int32), res_now,
                                     num_segments=nres)
         free = s["free"] + freed
 
-        # advance finishing pipelines; queue successors and arrivals
-        task_idx = task_idx + finishing.astype(jnp.int32)
-        done_now = finishing & (task_idx >= vwl.n_tasks)
-        to_queue = (finishing & ~done_now) | arriving
-        phase = jnp.where(done_now, _DONE, jnp.where(to_queue, _QUEUED, phase))
-        t_next = jnp.where(finishing | arriving, INF, t_next)
+        # failed attempts re-enter the arrival path after a backoff delay;
+        # successful ones advance the pipeline
+        att = s["attempt"]
+        retrying = finishing & (att + 1 < att_req[ids, tcl0])
+        succeeding = finishing & ~retrying
+        delay = jnp.minimum(bo[0] * bo[1] ** att.astype(jnp.float32), bo[2])
+
+        task_idx = task_idx + succeeding.astype(jnp.int32)
+        att = jnp.where(retrying, att + 1,
+                        jnp.where(succeeding, 0, att))
+        done_now = succeeding & (task_idx >= vwl.n_tasks)
+        to_queue = (succeeding & ~done_now) | arriving
+        phase = jnp.where(done_now, _DONE,
+                          jnp.where(to_queue, _QUEUED,
+                                    jnp.where(retrying, _NOT_ARRIVED, phase)))
+        t_next = jnp.where(succeeding | arriving, INF,
+                           jnp.where(retrying, t_star + delay, t_next))
         enq_wave = jnp.where(to_queue, s["wave"], s["enq_wave"])
 
         tcl = jnp.clip(task_idx, 0, T - 1)
         ready = s["ready"].at[ids, tcl].set(
             jnp.where(to_queue, t_star, s["ready"][ids, tcl]))
+
+        # pending capacity change applies before the admission round
+        cap_changing = (t_cap == t_star) & (s["cap_idx"] < K)
+        hi = jnp.clip(s["cap_idx"], 0, K - 1)
+        lo = jnp.clip(s["cap_idx"] - 1, 0, K - 1)
+        free = free + jnp.where(cap_changing, cap_vals[hi] - cap_vals[lo], 0)
+        cap_idx = s["cap_idx"] + cap_changing.astype(jnp.int32)
 
         # ------------------------------------------------ admission round
         queued = phase == _QUEUED
@@ -150,26 +220,45 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO)
             jnp.where(admitted, t_star, s["start"][ids, tcl]))
         finish = s["finish"].at[ids, tcl].set(
             jnp.where(admitted, t_fin, s["finish"][ids, tcl]))
+        # executed attempts (matches the numpy engine's attempts_out: a task
+        # stranded mid-retry reports the admissions that actually happened)
+        att_out = s["att_out"].at[ids, tcl].add(admitted.astype(jnp.int32))
         # res_q of admitted jobs is < nres by construction (sentinel never admits)
         taken = jax.ops.segment_sum(admitted.astype(jnp.int32), res_q,
                                     num_segments=nres + 1)[:nres]
         free = free - taken
 
         return dict(phase=phase, task_idx=task_idx, t_next=t_next,
-                    enq_wave=enq_wave, free=free, wave=s["wave"] + 1,
-                    start=start, finish=finish, ready=ready)
+                    enq_wave=enq_wave, attempt=att, free=free,
+                    cap_idx=cap_idx, wave=s["wave"] + 1,
+                    start=start, finish=finish, ready=ready, att_out=att_out)
 
     out = jax.lax.while_loop(cond, body, state)
     return dict(start=out["start"], finish=out["finish"], ready=out["ready"],
+                attempts=out["att_out"], done=out["phase"] == _DONE,
                 waves=out["wave"])
 
 
 def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
-                      policy: int = POLICY_FIFO) -> M.SimTrace:
-    """Convenience: numpy Workload in, SimTrace out (single replica)."""
+                      policy: int = POLICY_FIFO, scenario=None) -> M.SimTrace:
+    """Convenience: numpy Workload in, SimTrace out (single replica).
+    ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`."""
     platform = platform or M.PlatformConfig()
-    vwl = VWorkload.from_workload(wl, platform)
-    res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy)
+    if scenario is not None:
+        vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
+        res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy,
+                       cap_times=jnp.asarray(scenario.cap_times, jnp.float32),
+                       cap_vals=jnp.asarray(scenario.cap_vals, jnp.int32),
+                       backoff=jnp.asarray(scenario.backoff, jnp.float32))
+        caps0 = np.asarray(scenario.cap_vals[0], np.int64)
+        attempts = np.asarray(res["attempts"], np.int64)
+        completed = np.asarray(res["done"])
+    else:
+        vwl = VWorkload.from_workload(wl, platform)
+        res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy)
+        caps0 = platform.capacities
+        attempts = None
+        completed = None
     return M.SimTrace(
         start=np.asarray(res["start"], np.float64),
         finish=np.asarray(res["finish"], np.float64),
@@ -177,7 +266,9 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         n_tasks=wl.n_tasks.astype(np.int64),
         task_res=wl.task_res, task_type=wl.task_type,
         arrival=np.asarray(wl.arrival, np.float64),
-        capacities=platform.capacities,
+        capacities=caps0,
+        attempts=attempts,
+        completed=completed,
     )
 
 
@@ -187,12 +278,34 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 
 @partial(jax.jit, static_argnames=("policy",))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
-                      capacities, policy: int = POLICY_FIFO):
-    """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres]
-    (per-replica capacities enable capacity-planning sweeps in one SPMD call).
+                      capacities, policy: int = POLICY_FIFO,
+                      attempts=None, cap_times=None, cap_vals=None,
+                      backoff=None):
+    """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
+
+    Optional per-replica scenario tensors — ``attempts [R, N, T]``,
+    ``cap_times [R, K]`` / ``cap_vals [R, K, nres]``, ``backoff [R, 3]`` —
+    let one SPMD call A/B capacity-planning *and* autoscaler/failure
+    scenarios across the replica axis.
     """
-    def one(a, nt, tr, sv, pr, cap):
-        return simulate(VWorkload(a, nt, tr, sv, pr), cap, policy)
+    R = arrival.shape[0]
+    if attempts is None:
+        attempts = jnp.ones(task_res.shape, jnp.int32)
+    if (cap_times is None) != (cap_vals is None):
+        raise ValueError("cap_times and cap_vals must be given together")
+    if cap_times is None:
+        cap_times = jnp.zeros((R, 1), jnp.float32)
+        cap_vals = jnp.asarray(capacities, jnp.int32)[:, None, :]
+    if backoff is None:
+        backoff = jnp.tile(jnp.asarray(_NO_RETRY_BACKOFF, jnp.float32)[None],
+                           (R, 1))
+
+    def one(a, nt, tr, sv, pr, att, cap, ct, cv, bo):
+        return simulate(VWorkload(a, nt, tr, sv, pr, att), cap, policy,
+                        cap_times=ct, cap_vals=cv, backoff=bo)
 
     return jax.vmap(one)(arrival, n_tasks, task_res, service, priority,
-                         capacities)
+                         jnp.asarray(attempts, jnp.int32), capacities,
+                         jnp.asarray(cap_times, jnp.float32),
+                         jnp.asarray(cap_vals, jnp.int32),
+                         jnp.asarray(backoff, jnp.float32))

@@ -225,11 +225,12 @@ MAX_TASKS = 6
 
 
 def generate_structures(rng: np.random.Generator, n: int,
-                        probs: StructureProbs = StructureProbs()):
+                        probs: "StructureProbs | None" = None):
     """[n, MAX_TASKS] ordered task types (-1 padded) + [n] lengths.
     Order is always  preprocess? -> train -> evaluate? -> compress? ->
     harden? -> deploy?  which keeps synthetic pipelines 'sensible' (§IV-B.1:
     a validation task cannot precede training)."""
+    probs = probs if probs is not None else StructureProbs()
     tt = np.full((n, MAX_TASKS), -1, np.int64)
     cnt = np.zeros(n, np.int64)
 
@@ -257,8 +258,11 @@ def generate_empirical_workload(
     horizon_s: float,
     interarrival_factor: float = 1.0,
     platform: M.PlatformConfig | None = None,
-    structure: StructureProbs = StructureProbs(),
+    structure: StructureProbs | None = None,
 ) -> M.Workload:
+    # instance defaults are constructed per call: a shared default instance
+    # would alias state across calls (see the TriggerRule fix in runtime.py)
+    structure = structure if structure is not None else StructureProbs()
     platform = platform or M.PlatformConfig()
     rng = np.random.default_rng(seed)
     arrival = generate_arrivals(rng, horizon_s, interarrival_factor)

@@ -84,10 +84,13 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
 
     dA = dtc * A[None, None, None, :]                          # [B,nc,Q,H] (<=0)
     cum = jnp.cumsum(dA, axis=2)                               # within-chunk
-    # intra-chunk: L[i,j] = exp(cum_i - cum_j) * dt_j  for i >= j
-    Li = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
-    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
-    Li = jnp.where(tri[None, None, :, :, None], Li, 0.0)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) * dt_j  for i >= j.
+    # Mask the exponent BEFORE exp (double-where): for j > i the difference is
+    # positive and can overflow to inf, which turns the masked entries' zero
+    # cotangent into 0 * inf = NaN in the backward pass.
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    Li = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
     scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # [B,nc,Q,Q]
     M = scores[..., None] * Li * dtc[:, :, None, :, :]         # [B,nc,i,j,H]
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)

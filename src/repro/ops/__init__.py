@@ -1,0 +1,23 @@
+"""Operational scenarios: dynamic capacity, failure/retry injection, and
+cost/SLO accounting for both DES engines (see DESIGN in each submodule)."""
+from repro.ops.accounting import (SLOConfig, busy_node_seconds, capacity_cost,
+                                  pipeline_spans, scenario_summary,
+                                  slo_metrics)
+from repro.ops.capacity import (CapacitySchedule, MaintenanceWindows,
+                                ReactiveAutoscaler, ScheduledAutoscaler,
+                                StaticCapacity, apply_capacity_deltas,
+                                normalize, static_schedule)
+from repro.ops.failures import (FailureModel, OutageModel, RetryPolicy)
+from repro.ops.scenario import (CompiledScenario, Scenario, compile_static,
+                                stack_compiled_scenarios)
+
+__all__ = [
+    "CapacitySchedule", "StaticCapacity", "MaintenanceWindows",
+    "ScheduledAutoscaler", "ReactiveAutoscaler", "static_schedule",
+    "normalize", "apply_capacity_deltas",
+    "FailureModel", "OutageModel", "RetryPolicy",
+    "SLOConfig", "busy_node_seconds", "capacity_cost", "pipeline_spans",
+    "scenario_summary", "slo_metrics",
+    "Scenario", "CompiledScenario", "compile_static",
+    "stack_compiled_scenarios",
+]

@@ -1,0 +1,118 @@
+"""Operational scenario: capacity policy + failure/retry + outages + SLOs.
+
+A :class:`Scenario` is the declarative description an experiment carries
+(:class:`repro.core.experiment.Experiment` grows a ``scenario`` field, and
+``sweep`` can grid over scenarios). ``compile`` materializes it against a
+concrete workload/platform/horizon into a :class:`CompiledScenario` — plain
+tensors (capacity schedule, pre-sampled attempt counts, backoff constants)
+that both engines consume: the numpy engine directly, the JAX engine as
+``jit``/``vmap``-friendly device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import model as M
+from repro.ops.accounting import SLOConfig
+from repro.ops.capacity import (CapacitySchedule, StaticCapacity,
+                                apply_capacity_deltas, static_schedule)
+from repro.ops.failures import FailureModel, OutageModel, RetryPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledScenario:
+    """Scenario materialized for one workload: what the engines execute."""
+
+    schedule: CapacitySchedule
+    attempts: np.ndarray                      # [N, T] i64 attempts per task
+    backoff: Tuple[float, float, float] = (30.0, 2.0, 1800.0)
+
+    @property
+    def cap_times(self) -> np.ndarray:
+        return self.schedule.times
+
+    @property
+    def cap_vals(self) -> np.ndarray:
+        return self.schedule.caps
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative operational scenario. All parts optional — an empty
+    Scenario compiles to the static platform (engine-identical to no
+    scenario at all)."""
+
+    name: str = "static"
+    capacity: Optional[object] = None         # a capacity policy (.build(...))
+    failures: Optional[FailureModel] = None
+    outages: Optional[OutageModel] = None
+    slo: Optional[SLOConfig] = None
+
+    def compile_schedule(self, platform: M.PlatformConfig, horizon_s: float,
+                         seed: int = 0, workload: Optional[M.Workload] = None,
+                         policy: int = 0) -> CapacitySchedule:
+        """Capacity schedule only (stable across co-simulation windows)."""
+        base = platform.capacities
+        pol = self.capacity or StaticCapacity()
+        sched = pol.build(base, horizon_s, workload=workload,
+                          platform=platform, policy=policy)
+        if self.outages is not None:
+            rng = np.random.default_rng(np.random.SeedSequence([seed, 0xD0]))
+            sched = apply_capacity_deltas(
+                sched, self.outages.sample_outages(rng, horizon_s, base))
+        return sched
+
+    def compile(self, workload: M.Workload, platform: M.PlatformConfig,
+                horizon_s: float, seed: int = 0, policy: int = 0,
+                schedule: Optional[CapacitySchedule] = None
+                ) -> CompiledScenario:
+        """Materialize against ``workload``. Pass a pre-built ``schedule`` to
+        reuse one across windows while re-sampling failures per window."""
+        if schedule is None:
+            schedule = self.compile_schedule(platform, horizon_s, seed=seed,
+                                             workload=workload, policy=policy)
+        if self.failures is not None:
+            rng = np.random.default_rng(np.random.SeedSequence([seed, 0xF0]))
+            attempts = self.failures.sample_attempts(rng, workload)
+            backoff = self.failures.retry.backoff
+        else:
+            attempts = np.ones(workload.task_type.shape, np.int64)
+            backoff = RetryPolicy().backoff
+        return CompiledScenario(schedule=schedule, attempts=attempts,
+                                backoff=backoff)
+
+
+def compile_static(workload: M.Workload,
+                   platform: M.PlatformConfig) -> CompiledScenario:
+    """The no-op scenario (useful as an explicit baseline)."""
+    return CompiledScenario(schedule=static_schedule(platform.capacities),
+                            attempts=np.ones(workload.task_type.shape,
+                                             np.int64))
+
+
+def stack_compiled_scenarios(compiled, n_max: int, horizon_s: float) -> dict:
+    """Pad/stack per-replica CompiledScenarios into the ``[R, ...]`` tensors
+    ``vdes.simulate_ensemble`` takes (``attempts``/``cap_times``/``cap_vals``
+    /``backoff`` kwargs). Schedules of different lengths are padded with
+    no-op change points past the horizon; workloads shorter than ``n_max``
+    pad their attempts with 1."""
+    K = max(c.cap_times.shape[0] for c in compiled)
+    cts, cvs, atts, bos = [], [], [], []
+    for c in compiled:
+        pad = K - c.cap_times.shape[0]
+        cts.append(np.concatenate(
+            [c.cap_times,
+             c.cap_times[-1] + horizon_s + 1.0 + np.arange(pad)]))
+        cvs.append(np.concatenate(
+            [c.cap_vals, np.tile(c.cap_vals[-1:], (pad, 1))]))
+        a = np.asarray(c.attempts, np.int64)
+        atts.append(np.pad(a, ((0, n_max - a.shape[0]), (0, 0)),
+                           constant_values=1))
+        bos.append(np.asarray(c.backoff, np.float64))
+    return dict(attempts=np.stack(atts).astype(np.int32),
+                cap_times=np.stack(cts).astype(np.float32),
+                cap_vals=np.stack(cvs).astype(np.int32),
+                backoff=np.stack(bos).astype(np.float32))

@@ -1,0 +1,27 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis is
+absent (it is declared as a dev dependency in pyproject.toml), while the rest
+of the module still collects and runs — the seed state errored the whole
+module at collection instead."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every strategy factory
+        returns None, which is only ever passed to the skipping ``given``."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e .[dev])")(f)
+
+    def settings(*a, **k):
+        return lambda f: f

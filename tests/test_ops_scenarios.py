@@ -1,0 +1,501 @@
+"""Operational scenarios subsystem: numpy-vs-JAX engine parity under capacity
+schedules and failure/retry injection, the deterministic capacity-step
+oracle, capacity policies, cost/SLO accounting, and SPMD scenario ensembles."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import des, trace, vdes
+from repro.core import model as M
+from repro.ops import (CapacitySchedule, CompiledScenario, FailureModel,
+                       MaintenanceWindows, OutageModel, ReactiveAutoscaler,
+                       RetryPolicy, Scenario, ScheduledAutoscaler, SLOConfig,
+                       apply_capacity_deltas, normalize, scenario_summary,
+                       static_schedule)
+from test_des_engines import make_workload, platform
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator: shadows the shared session-scoped fixture so
+    this module doesn't shift the RNG stream feeding the statistical tests
+    in other modules (suite order independence)."""
+    return np.random.default_rng(20260731)
+
+
+def int_workload(rng, n=150, horizon=500.0, **kw):
+    return make_workload(rng, n, integer_time=True, horizon=horizon, **kw)
+
+
+def step_schedule():
+    """Drop resource 0 to one slot mid-run, add two slots to resource 1."""
+    return normalize(np.array([0.0, 100.0, 250.0]),
+                     np.array([[3, 2], [1, 2], [3, 4]]))
+
+
+def failure_scenario(wl, schedule=None, p=0.3, seed=7):
+    fm = FailureModel(p_fail_by_type=(p,) * M.N_TASK_TYPES,
+                      retry=RetryPolicy(max_retries=3, base_s=4.0, mult=2.0,
+                                        cap_s=16.0))
+    attempts = fm.sample_attempts(np.random.default_rng(seed), wl)
+    return CompiledScenario(
+        schedule=schedule if schedule is not None
+        else static_schedule(np.array([3, 2])),
+        attempts=attempts, backoff=fm.retry.backoff)
+
+
+def assert_engine_parity(wl, plat, policy, scenario):
+    t_np = des.simulate(wl, plat, policy, scenario=scenario)
+    t_jx = vdes.simulate_to_trace(wl, plat, policy, scenario=scenario)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    for field in ("start", "finish", "ready"):
+        a = np.where(live, getattr(t_np, field), 0.0)
+        b = np.where(live, getattr(t_jx, field), 0.0)
+        assert np.allclose(a, b, atol=1e-3, equal_nan=True), field
+    return t_np
+
+
+# ------------------------------------------------------------ engine parity
+
+@pytest.mark.parametrize("policy", [des.POLICY_FIFO, des.POLICY_SJF,
+                                    des.POLICY_PRIORITY])
+def test_parity_under_capacity_schedule(rng, policy):
+    wl = int_workload(rng)
+    comp = CompiledScenario(schedule=step_schedule(),
+                            attempts=np.ones(wl.task_type.shape, np.int64))
+    assert_engine_parity(wl, platform(), policy, comp)
+
+
+@pytest.mark.parametrize("policy", [des.POLICY_FIFO, des.POLICY_SJF])
+def test_parity_under_failure_retry(rng, policy):
+    wl = int_workload(rng)
+    assert_engine_parity(wl, platform(), policy, failure_scenario(wl))
+
+
+def test_parity_combined_schedule_and_failures(rng):
+    wl = int_workload(rng)
+    comp = failure_scenario(wl, schedule=step_schedule())
+    t_np = assert_engine_parity(wl, platform(), des.POLICY_FIFO, comp)
+    # executed-attempt accounting agrees too (not just the requested tensor)
+    t_jx = vdes.simulate_to_trace(wl, platform(), des.POLICY_FIFO,
+                                  scenario=comp)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    assert (t_np.attempts[live] == t_jx.attempts[live]).all()
+
+
+def test_scenario_none_matches_static_scenario(rng):
+    """An explicit static scenario is engine-identical to no scenario."""
+    wl = int_workload(rng)
+    plat = platform()
+    comp = CompiledScenario(schedule=static_schedule(plat.capacities),
+                            attempts=np.ones(wl.task_type.shape, np.int64))
+    t0 = des.simulate(wl, plat)
+    t1 = des.simulate(wl, plat, scenario=comp)
+    assert np.allclose(np.nan_to_num(t0.start), np.nan_to_num(t1.start))
+    assert np.allclose(np.nan_to_num(t0.finish), np.nan_to_num(t1.finish))
+
+
+# ------------------------------------------------------ scheduling semantics
+
+def test_capacity_schedule_never_exceeded(rng):
+    """Concurrent jobs per resource never exceed the capacity in effect."""
+    wl = make_workload(rng, 250)
+    sched = step_schedule()
+    comp = CompiledScenario(schedule=sched,
+                            attempts=np.ones(wl.task_type.shape, np.int64))
+    tr = des.simulate(wl, platform(), scenario=comp)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    for r in range(2):
+        m = live & (tr.task_res == r) & ~np.isnan(tr.start)
+        starts, finishes = tr.start[m], tr.finish[m]
+        # sweep: at each start, count overlapping jobs (finish ties release
+        # before an equal-time start, wave semantics)
+        for t, _ in zip(starts, finishes):
+            running = ((starts <= t) & (finishes > t)).sum()
+            assert running <= sched.at(t)[r]
+
+
+def test_capacity_decrease_stalls_admission(rng):
+    """With capacity dropped to 0 forever, tasks never start (NaN) and the
+    engines agree on who ran."""
+    wl = int_workload(rng, n=40, horizon=50.0)
+    sched = normalize(np.array([0.0, 60.0]), np.array([[3, 2], [0, 0]]))
+    comp = CompiledScenario(schedule=sched,
+                            attempts=np.ones(wl.task_type.shape, np.int64))
+    t_np = assert_engine_parity(wl, platform(), des.POLICY_FIFO, comp)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    assert np.isnan(t_np.start[live]).any()  # something stalled forever
+
+
+def test_retries_occupy_capacity(rng):
+    """Doubling attempts on a saturated single server doubles busy time."""
+    n = 20
+    wl = make_workload(rng, n, nres=1, max_tasks=1)
+    wl.arrival[:] = 0.0
+    wl.n_tasks[:] = 1
+    wl.task_res[:] = 0
+    wl.exec_time[:, 0] = 10.0
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    comp = CompiledScenario(
+        schedule=static_schedule(plat.capacities),
+        attempts=np.full((n, wl.max_tasks), 2, np.int64),
+        backoff=(0.0, 2.0, 0.0))           # immediate re-queue
+    tr = des.simulate(wl, plat, scenario=comp)
+    # every job runs twice at 10 s on one server: last finish = 2 * n * 10
+    assert np.nanmax(tr.finish) == pytest.approx(2 * n * 10.0)
+    assert (tr.attempts[:, 0] == 2).all()
+
+
+def test_backoff_delays_are_bounded_exponential():
+    rp = RetryPolicy(max_retries=5, base_s=10.0, mult=2.0, cap_s=35.0)
+    assert [rp.delay(k) for k in range(4)] == [10.0, 20.0, 35.0, 35.0]
+
+
+def test_failure_model_attempts_distribution():
+    rng_wl = np.random.default_rng(3)
+    wl = make_workload(rng_wl, 4000, max_tasks=2)
+    fm = FailureModel(p_fail_by_type=(0.5,) * M.N_TASK_TYPES,
+                      retry=RetryPolicy(max_retries=2))
+    att = fm.sample_attempts(np.random.default_rng(0), wl)
+    live = wl.task_type >= 0
+    assert att.min() >= 1 and att[live].max() <= 3
+    # P(attempts >= 2) = p = 0.5
+    frac_retry = (att[live] >= 2).mean()
+    assert abs(frac_retry - 0.5) < 0.05
+
+
+# ------------------------------------------------------ deterministic oracle
+
+def test_single_station_capacity_step_oracle_matches_engine(rng):
+    """Engine under a capacity *increase* == exact slot-based oracle
+    (extends the single_station_fifo reasoning to a capacity step)."""
+    n = 120
+    wl = make_workload(rng, n, nres=1, max_tasks=1)
+    wl.task_res[:] = 0
+    cap_times = np.array([0.0, 400.0])
+    cap_vals = np.array([[2], [5]])
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 2),))
+    comp = CompiledScenario(schedule=CapacitySchedule(cap_times, cap_vals),
+                            attempts=np.ones((n, wl.max_tasks), np.int64))
+    tr = des.simulate(wl, plat, scenario=comp)
+    svc = wl.service_time(plat.datastore)[:, 0]
+    st, fi = des.single_station_fifo_schedule(wl.arrival, svc,
+                                              cap_times, cap_vals[:, 0])
+    assert np.allclose(st, tr.start[:, 0], atol=1e-9)
+    assert np.allclose(fi, tr.finish[:, 0], atol=1e-9)
+
+
+def test_capacity_step_hand_computed():
+    """Four unit-time jobs, one server, a second server appears at t=1."""
+    n = 4
+    wl = M.Workload(
+        arrival=np.zeros(n), n_tasks=np.ones(n, np.int32),
+        task_type=np.zeros((n, 1), np.int32),
+        task_res=np.zeros((n, 1), np.int32),
+        exec_time=np.full((n, 1), 1.0),
+        read_bytes=np.zeros((n, 1)), write_bytes=np.zeros((n, 1)),
+        framework=np.zeros(n, np.int32), priority=np.zeros(n, np.float32),
+        model_perf=np.zeros(n, np.float32), model_size=np.zeros(n, np.float32),
+        model_clever=np.zeros(n, np.float32))
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    comp = CompiledScenario(
+        schedule=normalize(np.array([0.0, 1.0]), np.array([[1], [2]])),
+        attempts=np.ones((n, 1), np.int64))
+    tr = des.simulate(wl, plat, scenario=comp)
+    # t=0: one server -> job0. t=1: job0 done + server added -> jobs 1, 2.
+    # t=2: both free -> job3.
+    assert sorted(tr.start[:, 0].tolist()) == [0.0, 1.0, 1.0, 2.0]
+
+
+# --------------------------------------------------------- capacity policies
+
+def test_schedule_normalize_and_at():
+    s = normalize(np.array([100.0, 0.0, 100.0]),
+                  np.array([[5, 5], [2, 2], [3, 3]]))  # last dup wins
+    assert s.times.tolist() == [0.0, 100.0]
+    assert s.caps[0].tolist() == [2, 2] and s.caps[1].tolist() == [3, 3]
+    assert s.at(99.9).tolist() == [2, 2]
+    assert s.at(100.0).tolist() == [3, 3]
+    assert np.allclose(s.provisioned_node_seconds(200.0),
+                       [2 * 100 + 3 * 100] * 2)
+
+
+def test_apply_capacity_deltas_clips_at_zero():
+    s = apply_capacity_deltas(static_schedule(np.array([3, 2])),
+                              [(10.0, 20.0, 0, -5)])
+    assert s.at(15.0).tolist() == [0, 2]
+    assert s.at(25.0).tolist() == [3, 2]
+
+
+def test_maintenance_window_policy():
+    s = MaintenanceWindows(windows=((3600.0, 7200.0, 1, 0.5),)).build(
+        np.array([8, 4]), horizon_s=4 * 3600.0)
+    assert s.at(0.0).tolist() == [8, 4]
+    assert s.at(5000.0).tolist() == [8, 2]
+    assert s.at(8000.0).tolist() == [8, 4]
+
+
+def test_scheduled_autoscaler_tracks_profile():
+    s = ScheduledAutoscaler(min_scale=0.5, max_scale=2.0).build(
+        np.array([10, 10]), horizon_s=7 * 86400.0)
+    caps = s.caps[:, 0]
+    assert caps.min() >= 5 and caps.max() <= 20
+    assert caps.max() > caps.min()          # actually varies over the week
+
+
+def test_outage_model_composes_onto_schedule():
+    om = OutageModel(mtbf_s=3600.0, mttr_s=600.0, frac_lost=0.5)
+    deltas = om.sample_outages(np.random.default_rng(0), 86400.0,
+                               np.array([8, 4]))
+    assert deltas, "a day at 1h MTBF should produce outages"
+    s = apply_capacity_deltas(static_schedule(np.array([8, 4])), deltas)
+    assert (s.caps >= 0).all()
+    assert (s.caps[:, 0] < 8).any()         # capacity actually dips
+
+
+def test_reactive_autoscaler_raises_capacity_under_congestion(rng):
+    wl = make_workload(rng, 400, horizon=1800.0)
+    wl.exec_time *= 10.0                     # offered load >> 2+2 slots
+    plat = platform(2, 2)
+    sched = ReactiveAutoscaler(interval_s=900.0, max_scale=4.0).build(
+        plat.capacities, 2 * 3600.0, workload=wl, platform=plat)
+    assert (sched.caps > plat.capacities[None]).any()
+
+
+def test_reactive_autoscaler_requires_workload():
+    with pytest.raises(ValueError):
+        ReactiveAutoscaler().build(np.array([2, 2]), 3600.0)
+
+
+# ------------------------------------------------------- cost/SLO accounting
+
+def _records(rng, wl, plat, scenario=None):
+    tr = des.simulate(wl, plat, scenario=scenario)
+    return trace.flatten_trace(tr, wl)
+
+
+def test_cost_accounting_static(rng):
+    wl = int_workload(rng, n=60)
+    plat = platform()
+    rec = _records(rng, wl, plat)
+    s = scenario_summary(rec, static_schedule(plat.capacities), 500.0,
+                         cost_rates=np.array([2.0, 4.0]))
+    # provisioned: 3 slots * 500 s and 2 slots * 500 s
+    assert s["provisioned_node_seconds"]["compute_cluster"] == 1500.0
+    assert s["total_cost"] == pytest.approx(
+        1500.0 / 3600 * 2.0 + 1000.0 / 3600 * 4.0)
+    for v in s["utilization_vs_provisioned"].values():
+        assert 0.0 <= v
+
+
+def test_utilization_vs_provisioned_bounded_under_backlog(rng):
+    """Work queued past the horizon must not inflate utilization: busy time
+    is clipped to the horizon like the provisioned integral."""
+    wl = int_workload(rng, n=40, horizon=100.0)
+    plat = platform(1, 1)                    # huge backlog, drains past t=100
+    rec = _records(rng, wl, plat)
+    s = scenario_summary(rec, static_schedule(plat.capacities), 100.0)
+    for v in s["utilization_vs_provisioned"].values():
+        assert 0.0 <= v <= 1.0 + 1e-9
+
+
+def test_slo_metrics_deadline_misses(rng):
+    wl = int_workload(rng, n=80)
+    plat = platform(1, 1)                    # congested -> some slow pipelines
+    rec = _records(rng, wl, plat)
+    tight = scenario_summary(rec, static_schedule(plat.capacities), 500.0,
+                             slo=SLOConfig(pipeline_deadline_s=1.0,
+                                           task_wait_slo_s=0.0))
+    loose = scenario_summary(rec, static_schedule(plat.capacities), 500.0,
+                             slo=SLOConfig(pipeline_deadline_s=1e9,
+                                           task_wait_slo_s=1e9))
+    assert tight["deadline_miss_rate"] > loose["deadline_miss_rate"]
+    assert loose["deadline_miss_rate"] == 0.0
+    assert 0.0 <= tight["wait_slo_violation_rate"] <= 1.0
+
+
+def test_summarize_folds_in_scenario_block(rng):
+    wl = int_workload(rng, n=60)
+    plat = platform()
+    comp = failure_scenario(wl, schedule=step_schedule())
+    tr = des.simulate(wl, plat, scenario=comp)
+    rec = trace.flatten_trace(tr, wl)
+    s = trace.summarize(rec, plat.capacities, 500.0, schedule=comp.schedule,
+                        cost_rates=plat.cost_rates, slo=SLOConfig())
+    assert {"total_cost", "deadline_miss_rate", "utilization_vs_provisioned",
+            "mean_attempts", "mean_wait_s"} <= set(s)
+    assert s["mean_attempts"] > 1.0          # failures actually injected
+
+
+def test_makespan_clock_survives_first_task_retry():
+    """Retry re-queues overwrite ready; the deadline clock must still start
+    at the true pipeline arrival (records carry an arrival column)."""
+    wl = M.Workload(
+        arrival=np.zeros(1), n_tasks=np.ones(1, np.int32),
+        task_type=np.zeros((1, 1), np.int32),
+        task_res=np.zeros((1, 1), np.int32),
+        exec_time=np.full((1, 1), 10.0),
+        read_bytes=np.zeros((1, 1)), write_bytes=np.zeros((1, 1)),
+        framework=np.zeros(1, np.int32), priority=np.zeros(1, np.float32),
+        model_perf=np.zeros(1, np.float32), model_size=np.zeros(1, np.float32),
+        model_clever=np.zeros(1, np.float32))
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    comp = CompiledScenario(schedule=static_schedule(plat.capacities),
+                            attempts=np.full((1, 1), 2, np.int64),
+                            backoff=(100.0, 2.0, 100.0))
+    tr = des.simulate(wl, plat, scenario=comp)
+    rec = trace.flatten_trace(tr, wl)
+    # attempt 1: [0, 10]; re-queue at 110; attempt 2: [110, 120]
+    assert tr.finish[0, 0] == pytest.approx(120.0)
+    from repro.ops import pipeline_spans
+    spans = pipeline_spans(rec)
+    assert spans["arrival"][0] == pytest.approx(0.0)      # not 110 (ready)
+    assert spans["makespan"][0] == pytest.approx(120.0)
+
+
+def test_stranded_mid_retry_counts_as_deadline_miss():
+    """A task whose required retry is never admitted records its failed
+    attempt's finish; the completion flag must still mark the pipeline as a
+    miss (both engines)."""
+    wl = M.Workload(
+        arrival=np.zeros(1), n_tasks=np.ones(1, np.int32),
+        task_type=np.zeros((1, 1), np.int32),
+        task_res=np.zeros((1, 1), np.int32),
+        exec_time=np.full((1, 1), 10.0),
+        read_bytes=np.zeros((1, 1)), write_bytes=np.zeros((1, 1)),
+        framework=np.zeros(1, np.int32), priority=np.zeros(1, np.float32),
+        model_perf=np.zeros(1, np.float32), model_size=np.zeros(1, np.float32),
+        model_clever=np.zeros(1, np.float32))
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    comp = CompiledScenario(
+        schedule=normalize(np.array([0.0, 5.0]), np.array([[1], [0]])),
+        attempts=np.full((1, 1), 2, np.int64), backoff=(1.0, 2.0, 1.0))
+    from repro.ops import slo_metrics
+    for tr in (des.simulate(wl, plat, scenario=comp),
+               vdes.simulate_to_trace(wl, plat, scenario=comp)):
+        assert not tr.completed[0]
+        assert tr.finish[0, 0] == pytest.approx(10.0)  # failed attempt's
+        rec = trace.flatten_trace(tr, wl)
+        m = slo_metrics(rec, SLOConfig(pipeline_deadline_s=1e9))
+        assert m["deadline_miss_rate"] == 1.0
+
+
+def test_attempts_recorded_in_records(rng):
+    wl = int_workload(rng, n=60)
+    comp = failure_scenario(wl)
+    tr = des.simulate(wl, platform(), scenario=comp)
+    rec = trace.flatten_trace(tr, wl)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    pid, pos = np.nonzero(live)
+    assert (rec.attempts == comp.attempts[pid, pos]).all()
+
+
+# ------------------------------------------------ scenario compile + ensemble
+
+def test_scenario_compile_pipeline(rng):
+    wl = int_workload(rng)
+    plat = platform()
+    sc = Scenario(name="storm",
+                  capacity=MaintenanceWindows(windows=((50.0, 150.0, 0, 0.5),)),
+                  failures=FailureModel(),
+                  outages=OutageModel(mtbf_s=200.0, mttr_s=50.0),
+                  slo=SLOConfig())
+    comp = sc.compile(wl, plat, 500.0, seed=1)
+    assert comp.cap_times[0] == 0.0
+    assert (np.diff(comp.cap_times) > 0).all()
+    assert comp.attempts.shape == wl.task_type.shape
+    assert_engine_parity(wl, plat, des.POLICY_FIFO, comp)
+
+
+def test_scenario_compile_is_deterministic(rng):
+    wl = int_workload(rng)
+    sc = Scenario(failures=FailureModel(), outages=OutageModel(mtbf_s=300.0))
+    c1 = sc.compile(wl, platform(), 500.0, seed=5)
+    c2 = sc.compile(wl, platform(), 500.0, seed=5)
+    assert (c1.attempts == c2.attempts).all()
+    assert np.array_equal(c1.cap_times, c2.cap_times)
+
+
+def test_ensemble_single_spmd_call_with_scenarios(rng):
+    """Per-replica scenarios run as ONE jit+vmap call and each replica matches
+    its own single-replica simulation."""
+    R, n = 3, 60
+    wl = int_workload(rng, n=n)
+    plat = platform()
+    svc = wl.service_time(plat.datastore).astype(np.float32)
+    base = [np.tile(np.asarray(a)[None], (R,) + (1,) * np.asarray(a).ndim)
+            for a in (wl.arrival.astype(np.float32), wl.n_tasks, wl.task_res,
+                      svc, wl.priority)]
+    caps = np.tile(plat.capacities[None], (R, 1)).astype(np.int32)
+    # replica 0: static; replica 1: capacity step; replica 2: failures
+    sched = step_schedule()
+    K = sched.times.shape[0]
+    cap_times = np.stack([np.array([0.0, 1e6, 1e6 + 1]), sched.times,
+                          np.array([0.0, 1e6, 1e6 + 1])]).astype(np.float32)
+    cap_vals = np.stack([np.tile(plat.capacities[None], (K, 1)), sched.caps,
+                         np.tile(plat.capacities[None], (K, 1))]).astype(np.int32)
+    fail = failure_scenario(wl)
+    attempts = np.stack([np.ones((n, wl.max_tasks)), np.ones((n, wl.max_tasks)),
+                         fail.attempts]).astype(np.int32)
+    backoff = np.stack([(0.0, 2.0, 3600.0), (0.0, 2.0, 3600.0),
+                        fail.backoff]).astype(np.float32)
+    out = vdes.simulate_ensemble(
+        *[jax.numpy.asarray(a) for a in base], jax.numpy.asarray(caps),
+        des.POLICY_FIFO, attempts=attempts, cap_times=cap_times,
+        cap_vals=cap_vals, backoff=backoff)
+    assert out["start"].shape == (R, n, wl.max_tasks)
+
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    singles = [
+        des.simulate(wl, plat),
+        des.simulate(wl, plat, scenario=CompiledScenario(
+            schedule=sched, attempts=np.ones((n, wl.max_tasks), np.int64))),
+        des.simulate(wl, plat, scenario=fail),
+    ]
+    for r, t_np in enumerate(singles):
+        assert np.allclose(np.where(live, t_np.start, 0),
+                           np.where(live, np.asarray(out["start"][r]), 0),
+                           atol=1e-3, equal_nan=True), f"replica {r}"
+
+
+def test_experiment_with_scenario(rng):
+    """End-to-end: Experiment.scenario flows into the summary (both engines)."""
+    from benchmarks.common import fitted_params
+    from repro.core.experiment import Experiment, run_experiment
+    params = fitted_params()
+    sc = Scenario(name="ops", failures=FailureModel(), slo=SLOConfig())
+    for engine in ("numpy", "jax"):
+        res = run_experiment(Experiment(
+            name="t", horizon_s=6 * 3600.0, seed=3, engine=engine,
+            scenario=sc), params)
+        s = res.summary
+        assert s["mean_attempts"] >= 1.0
+        assert "total_cost" in s and s["total_cost"] > 0.0
+        assert 0.0 <= s["deadline_miss_rate"] <= 1.0
+
+
+def test_sweep_over_scenarios(rng):
+    from benchmarks.common import fitted_params
+    from repro.core.experiment import Experiment, sweep
+    params = fitted_params()
+    scenarios = [Scenario(name="base"),
+                 Scenario(name="fail", failures=FailureModel())]
+    res = sweep(Experiment(name="g", horizon_s=3 * 3600.0, seed=2), params,
+                {"scenario": scenarios})
+    assert len(res) == 2
+    assert res[0].experiment.name.endswith("scenario=base")
+    assert res[1].experiment.name.endswith("scenario=fail")
+
+
+def test_feedback_loop_accepts_scenario(rng):
+    from benchmarks.common import fitted_params
+    from repro.core.runtime import run_feedback_simulation
+    params = fitted_params()
+    fr = run_feedback_simulation(
+        params, seed=11, horizon_s=12 * 3600.0, n_models=4,
+        window_s=6 * 3600.0,
+        scenario=Scenario(failures=FailureModel(),
+                          capacity=MaintenanceWindows(
+                              windows=((0.0, 3600.0, 0, 0.5),))))
+    assert fr.records.start.shape[0] > 0
+    assert (fr.records.attempts >= 1).all()

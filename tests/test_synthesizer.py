@@ -3,7 +3,7 @@ fit -> synthesize fidelity, arrival-profile reproduction."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import model as M
 from repro.core import stats
