@@ -22,10 +22,11 @@ SUITES = [
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
     ("scenarios", "benchmarks.scenario_bench"),
+    ("sweep", "benchmarks.sweep_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
-SMOKE_SUITES = ("scenarios",)
+SMOKE_SUITES = ("scenarios", "sweep")
 
 
 def main() -> None:

@@ -1,0 +1,139 @@
+"""Sweep-grid throughput: one batched jit+vmap call vs the serial loop.
+
+A ~24-point experiment grid (learning-cluster capacities x interarrival
+factors x operational-scenario families) executed three ways:
+
+  - ``Sweep(...).run`` on the JAX engine — the whole grid lowers through
+    ``repro.core.batching`` into ONE ``vdes.simulate_ensemble`` call;
+  - the legacy serial loop on the JAX engine (per-point
+    ``run_experiment``, recompiling per workload shape);
+  - the legacy serial loop on the numpy engine (the old default path).
+
+Emits ``artifacts/BENCH_sweep.json`` so sweep throughput is tracked across
+PRs. ``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon for CI but
+keeps the 24-point grid shape.
+
+  PYTHONPATH=src python -m benchmarks.run sweep
+  PYTHONPATH=src python benchmarks/sweep_bench.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+from benchmarks.common import ART, fitted_params
+from repro.core import model as M
+from repro.core.experiment import ExperimentSpec, Sweep, run_experiment
+from repro.ops import (FailureModel, MaintenanceWindows, Scenario,
+                       ScheduledAutoscaler, SLOConfig)
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_sweep.json"))
+
+
+def build_sweep(horizon_s: float) -> Sweep:
+    """~24 points: scheduler x load x scenario family. Every serial point
+    recompiles (policy is a static jit argument; each interarrival factor
+    changes the workload shape; each scenario family changes the schedule
+    shape) while the batched path compiles ONE program: policies ride the
+    traced ``policies [B]`` tensor, schedules/attempts the stacked scenario
+    tensors."""
+    from repro.core import des
+    slo = SLOConfig()
+    scenarios = [
+        None,
+        Scenario(name="failures", failures=FailureModel(), slo=slo),
+        Scenario(name="maintenance", slo=slo,
+                 capacity=MaintenanceWindows(
+                     windows=((0.1 * horizon_s, 0.4 * horizon_s, 1, 0.5),))),
+        Scenario(name="predictive", slo=slo,
+                 capacity=ScheduledAutoscaler(min_scale=0.6, max_scale=1.25)),
+    ]
+    base = ExperimentSpec(name="sweepbench", horizon_s=horizon_s,
+                          engine="jax", seed=17)
+    return Sweep(base, {
+        "policy": [des.POLICY_FIFO, des.POLICY_SJF, des.POLICY_PRIORITY],
+        "interarrival_factor": [0.9, 1.2],
+        "scenario": scenarios,
+    })
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.125 if smoke else 0.25) * 86400.0
+    params = fitted_params()
+    sw = build_sweep(horizon)
+    points = sw.points()
+    G = len(points)
+
+    # pre-warm the synthesizer jit caches (shared in-process by every path,
+    # so whichever path ran first would otherwise eat the one-time compile)
+    import jax
+    from repro.core.synthesizer import synthesize_workload
+    for ia in sorted({p.interarrival_factor for p in points}):
+        synthesize_workload(params, jax.random.PRNGKey(17), horizon,
+                            points[0].platform, ia)
+
+    t0 = time.perf_counter()
+    batched = sw.run(params)
+    wall_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    serial_jax = [run_experiment(p, params) for p in points]
+    wall_serial_jax = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    serial_np = [run_experiment(p.with_(engine="numpy"), params)
+                 for p in points]
+    wall_serial_np = time.perf_counter() - t0
+
+    # sanity: the batched grid reproduces the serial per-point physics
+    drift = max(abs(b.summary["mean_wait_s"] - s.summary["mean_wait_s"])
+                / max(s.summary["mean_wait_s"], 1.0)
+                for b, s in zip(batched, serial_jax))
+    n_total = sum(r.records.start.shape[0] for r in batched)
+
+    report = {
+        "grid_points": G,
+        "axes": {"policy": 3, "interarrival_factor": 2,
+                 "scenario_families": 4},
+        "tasks_total": int(n_total),
+        "batched_wall_s": wall_batched,
+        "serial_jax_wall_s": wall_serial_jax,
+        "serial_numpy_wall_s": wall_serial_np,
+        "speedup_x": wall_serial_jax / max(wall_batched, 1e-12),
+        "speedup_vs_numpy_x": wall_serial_np / max(wall_batched, 1e-12),
+        "max_rel_drift_vs_serial": drift,
+        "horizon_s": horizon,
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        (f"sweep_batched_{G}pt", wall_batched * 1e6,
+         f"{G / max(wall_batched, 1e-12):.2f}pts/s"),
+        (f"sweep_serial_jax_{G}pt", wall_serial_jax * 1e6,
+         f"{report['speedup_x']:.1f}x"),
+        (f"sweep_serial_numpy_{G}pt", wall_serial_np * 1e6,
+         f"{report['speedup_vs_numpy_x']:.1f}x"),
+    ]
+
+
+def main():
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for r in rows():
+        print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,12 @@ failure/retry injection and node outages — comparing p95 wait, deadline-miss
 rate, and provisioned cost (the paper's "devise and evaluate operational
 strategies", extended with AIReSim-style reliability).
 
+Written against the declarative API: an :class:`ExperimentSpec` carries the
+full platform (any number of resources, each with its own cost), and
+``Sweep`` runs the scenario axis as one grid — serially on the exact numpy
+engine here; switch the base to ``engine="jax"`` and the whole grid lowers
+to ONE jit+vmap call (see benchmarks/sweep_bench.py).
+
   PYTHONPATH=src python examples/autoscaling_scenarios.py
 """
 import os
@@ -14,7 +20,8 @@ import numpy as np
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
 from benchmarks.common import fitted_params
-from repro.core.experiment import Experiment, run_experiment, sweep
+from repro.core.experiment import ExperimentSpec, Sweep
+from repro.core.model import PlatformConfig, ResourceConfig
 from repro.ops import (FailureModel, MaintenanceWindows, OutageModel,
                        ReactiveAutoscaler, Scenario, ScheduledAutoscaler,
                        SLOConfig)
@@ -22,7 +29,7 @@ from repro.ops import (FailureModel, MaintenanceWindows, OutageModel,
 params = fitted_params()
 HORIZON = 86400.0
 slo = SLOConfig(pipeline_deadline_s=4 * 3600.0, task_wait_slo_s=900.0)
-fails = FailureModel()
+fails = FailureModel(resample_service=True)   # retries re-draw durations
 
 SCENARIOS = [
     Scenario(name="static", slo=slo, failures=fails),
@@ -39,9 +46,13 @@ SCENARIOS = [
                                          min_scale=0.4)),
 ]
 
-base = Experiment(name="ops", horizon_s=HORIZON, seed=7,
-                  learning_capacity=16)
-results = sweep(base, params, {"scenario": SCENARIOS})
+base = ExperimentSpec(
+    name="ops", horizon_s=HORIZON, seed=7,
+    platform=PlatformConfig(resources=(
+        ResourceConfig("compute_cluster", 48, cost_per_node_hour=1.0),
+        ResourceConfig("learning_cluster", 16, cost_per_node_hour=3.0),
+    )))
+results = Sweep(base, {"scenario": SCENARIOS}).run(params)
 
 print(f"{'scenario':>12} {'p95 wait s':>11} {'miss rate':>10} "
       f"{'wait SLO viol':>13} {'cost $':>9} {'util(prov)':>10}")
@@ -54,5 +65,6 @@ for sc, res in zip(SCENARIOS, results):
           f"{util:10.2f}")
 
 print("\nThe autoscalers trade provisioned cost against wait/deadline SLOs; "
-      "outages show the resilience margin. Sweep deeper (or A/B per-replica "
-      "scenarios in one SPMD call) with engine='jax', n_replicas>1.")
+      "outages show the resilience margin. Cross this axis with capacities "
+      "and schedulers — base.with_(engine='jax') compiles the whole grid "
+      "into one SPMD call.")

@@ -2,26 +2,32 @@
 against the fitted workload and find the knee where queueing collapses —
 with Monte-Carlo confidence intervals from the vmapped JAX engine.
 
+The ``"capacity:<resource>"`` sweep axis resizes one pool of the platform
+(works for any resource count); with ``engine="jax"`` the whole grid — five
+capacities x four replicas each — runs as ONE jit+vmap call.
+
   PYTHONPATH=src python examples/capacity_planning.py
 """
-import numpy as np
-
 import os
 import sys
+
+import numpy as np
+
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
 from benchmarks.common import fitted_params
-from repro.core.experiment import Experiment, run_experiment
+from repro.core.experiment import ExperimentSpec, Sweep
 
 params = fitted_params()
 
+base = ExperimentSpec(name="cap", horizon_s=43200.0, engine="jax",
+                      n_replicas=4, seed=7)
+results = Sweep(base, {"capacity:learning_cluster": [4, 8, 16, 32, 64]}).run(
+    params)
+
 print(f"{'capacity':>9} {'util':>6} {'mean wait s':>12} "
       f"{'p95 wait s':>11} {'ci95':>8}")
-for cap in (4, 8, 16, 32, 64):
-    exp = Experiment(name=f"cap{cap}", horizon_s=86400.0,
-                     learning_capacity=cap, engine="jax", n_replicas=4,
-                     seed=7)
-    res = run_experiment(exp, params)
+for cap, res in zip((4, 8, 16, 32, 64), results):
     s = res.summary
     util = np.mean([r["utilization"]["learning_cluster"]
                     for r in res.replica_summaries])

@@ -31,12 +31,12 @@ POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF = 0, 1, 2
 POLICY_NAMES = ["fifo", "priority", "sjf"]
 
 
-def _policy_key(policy: int, wl: M.Workload, service: np.ndarray,
-                pid: int, tidx: int) -> float:
+def _policy_key(policy: int, wl: M.Workload, svc_val: float,
+                pid: int) -> float:
     if policy == POLICY_PRIORITY:
         return -float(wl.priority[pid])
     if policy == POLICY_SJF:
-        return float(service[pid, tidx])
+        return float(svc_val)
     return 0.0
 
 
@@ -54,17 +54,38 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         attempts_req = np.maximum(np.asarray(scenario.attempts, np.int64), 1)
         bo_base, bo_mult, bo_cap = (float(x) for x in scenario.backoff)
         caps = cap_vals[0].copy()
+        att_svc = getattr(scenario, "attempt_service", None)
+        if att_svc is not None:
+            att_svc = np.asarray(att_svc, np.float64)
     else:
         cap_times = np.zeros(1, np.float64)
         cap_vals = caps.astype(np.int64)[None, :]
         attempts_req = np.ones((n, T), np.int64)
         bo_base, bo_mult, bo_cap = 0.0, 2.0, 3600.0
+        att_svc = None
     K = cap_times.shape[0]
+    # per-attempt service lookup: attempt k of a task runs
+    # attempt_service[..., min(k, A_svc-1)] (falls back to the base time)
+    A_svc = att_svc.shape[2] if att_svc is not None else 1
+
+    def svc_of(pid: int, tidx: int, k: int) -> float:
+        if att_svc is None:
+            return float(service[pid, tidx])
+        return float(att_svc[pid, tidx, min(k, A_svc - 1)])
 
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
     ready = np.full((n, T), np.nan)
     attempts_out = np.zeros((n, T), np.int64)
+    # per-attempt recording width covers every attempt that can execute;
+    # with no retries anywhere the single-attempt records are already
+    # exact, so skip the buffers (same condition as vdes.simulate_to_trace)
+    A = int(max(attempts_req.max(), A_svc, 1))
+    if scenario is not None and A > 1:
+        att_start = np.full((n, T, A), np.nan)
+        att_finish = np.full((n, T, A), np.nan)
+    else:
+        att_start = att_finish = None
 
     free = cap_vals[0].astype(np.int64).copy()
     waiting: list[list] = [[] for _ in range(nres)]  # heaps of (key, wave, pid, tidx)
@@ -82,7 +103,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         tidx = int(task_idx[pid])
         r = int(wl.task_res[pid, tidx])
         ready[pid, tidx] = t
-        k = _policy_key(policy, wl, service, pid, tidx)
+        k = _policy_key(policy, wl, svc_of(pid, tidx, int(att[pid])), pid)
         heapq.heappush(waiting[r], (k, wave, pid, tidx))
 
     def admit(t: float) -> None:
@@ -90,10 +111,15 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             while free[r] > 0 and waiting[r]:
                 _, _, pid, tidx = heapq.heappop(waiting[r])
                 free[r] -= 1
-                s = float(service[pid, tidx])
+                k = int(att[pid])
+                s = svc_of(pid, tidx, k)
                 start[pid, tidx] = t
                 finish[pid, tidx] = t + s
                 attempts_out[pid, tidx] += 1
+                if att_start is not None:
+                    ka = min(k, A - 1)
+                    att_start[pid, tidx, ka] = t
+                    att_finish[pid, tidx, ka] = t + s
                 heapq.heappush(ev, (t + s, 0, pid))
 
     while True:
@@ -136,6 +162,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         capacities=np.asarray(caps, np.int64),
         attempts=attempts_out if scenario is not None else None,
         completed=(task_idx >= wl.n_tasks) if scenario is not None else None,
+        att_start=att_start,
+        att_finish=att_finish,
     )
 
 

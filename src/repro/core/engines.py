@@ -1,0 +1,285 @@
+"""The unified Engine protocol: ``run(spec, params) -> ExperimentResult``.
+
+Callers never branch on ``spec.engine`` — they ask the registry for an
+engine and call it. Two implementations ship:
+
+  - :class:`NumpyEngine` — the exact (f64, heap-based) reference engine.
+    Replicas and sweep grids run as serial loops: the fallback for precise
+    long-horizon runs where f32 clock ulp matters.
+  - :class:`JaxEngine` — the vectorized engine. Replica ensembles AND whole
+    sweep grids lower through :mod:`repro.core.batching` into ONE
+    ``jit``+``vmap`` call of ``vdes.simulate_ensemble``: every grid point
+    (its capacities, its admission policy, its compiled operational
+    scenario) becomes a row of the batch, so a 24-point capacity x load x
+    scenario grid costs one XLA compile and one SPMD execution.
+
+Both produce identical summaries on integer-time workloads (parity-tested);
+results are :class:`repro.core.experiment.ExperimentResult` either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Protocol, Sequence, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core import batching, des, trace, vdes
+from repro.core.synthesizer import synthesize_workload
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """One dispatch point for both simulation backends."""
+
+    name: str
+
+    def run(self, spec, params=None):
+        """Run one :class:`ExperimentSpec` -> :class:`ExperimentResult`."""
+        ...
+
+    def run_sweep(self, specs: Sequence, params=None) -> List:
+        """Run a grid of specs, one result per spec (order preserved)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _workload_key(spec):
+    """Grid points that differ only in capacities/policy/scenario draw the
+    *same* workload; this key lets a sweep synthesize each distinct one
+    once. Everything synthesize_workload reads is in here (capacity never
+    enters synthesis — only routing and datastore parameters do)."""
+    return (spec.horizon_s, spec.interarrival_factor, spec.seed,
+            spec.n_replicas, tuple(sorted(spec.platform.routing.items())),
+            dataclasses.astuple(spec.platform.datastore))
+
+
+def _spec_workloads(spec, params, cache=None):
+    """The spec's replica workloads + per-replica compiled scenarios.
+
+    Seed conventions match the historical ``run_experiment`` exactly (single
+    replica: PRNGKey(seed); ensembles: split(PRNGKey(seed), R); scenario
+    replica r compiles with seed + 1000*r) so batched and serial execution
+    see identical random draws. ``cache`` (dict) shares synthesis across
+    grid points whose workload axes agree.
+    """
+    if spec.workload is not None:
+        wls = [spec.workload] * spec.n_replicas
+    else:
+        if params is None:
+            raise ValueError("params required unless spec.workload is set")
+        key = _workload_key(spec) if cache is not None else None
+        if key is not None and key in cache:
+            wls = cache[key]
+        else:
+            if spec.n_replicas == 1:
+                keys = [jax.random.PRNGKey(spec.seed)]
+            else:
+                keys = jax.random.split(jax.random.PRNGKey(spec.seed),
+                                        spec.n_replicas)
+            wls = [synthesize_workload(params, k, spec.horizon_s,
+                                       spec.platform,
+                                       spec.interarrival_factor)
+                   for k in keys]
+            if key is not None:
+                cache[key] = wls
+    compiled = None
+    if spec.scenario is not None:
+        compiled = [spec.scenario.compile(w, spec.platform, spec.horizon_s,
+                                          seed=spec.seed + 1000 * r,
+                                          policy=spec.policy)
+                    for r, w in enumerate(wls)]
+    return wls, compiled
+
+
+def _summarize(spec, rec, compiled):
+    return trace.summarize(
+        rec, spec.platform.capacities, spec.horizon_s,
+        schedule=compiled.schedule if compiled is not None else None,
+        cost_rates=spec.platform.cost_rates if compiled is not None else None,
+        slo=spec.scenario.slo if spec.scenario is not None else None)
+
+
+def _single_result(spec, wl, compiled, tr, wall):
+    from repro.core.experiment import ExperimentResult
+    rec = trace.flatten_trace(tr, wl)
+    summary = _summarize(spec, rec, compiled)
+    summary["wall_s"] = wall
+    summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
+    return ExperimentResult(spec, summary, rec, wall)
+
+
+def _aggregate_replicas(spec, rep_sums, recs, wall):
+    """Monte-Carlo summary across replicas (the old ``_run_ensemble`` tail)."""
+    from repro.core.experiment import ExperimentResult
+    summary = {
+        "mean_wait_s": float(np.mean([s["mean_wait_s"] for s in rep_sums])),
+        "p95_wait_s": float(np.mean([s["p95_wait_s"] for s in rep_sums])),
+        "wait_ci95_halfwidth": float(1.96 * np.std(
+            [s["mean_wait_s"] for s in rep_sums]) / np.sqrt(len(rep_sums))),
+        "wall_s": wall,
+        "n_replicas": len(rep_sums),
+    }
+    for k in ("total_cost", "deadline_miss_rate", "wait_slo_violation_rate",
+              "mean_attempts"):
+        if all(k in s for s in rep_sums):
+            summary[k] = float(np.mean([s[k] for s in rep_sums]))
+    return ExperimentResult(spec, summary, trace.concat_records(recs), wall,
+                            rep_sums)
+
+
+# ---------------------------------------------------------------------------
+# numpy: exact serial reference
+# ---------------------------------------------------------------------------
+
+class NumpyEngine:
+    """Exact f64 heap engine; replicas and grids run serially."""
+
+    name = "numpy"
+
+    def run(self, spec, params=None):
+        t0 = time.perf_counter()
+        wls, compiled = _spec_workloads(spec, params)
+        if spec.n_replicas == 1:
+            comp = compiled[0] if compiled is not None else None
+            tr = des.simulate(wls[0], spec.platform, spec.policy,
+                              scenario=comp)
+            return _single_result(spec, wls[0], comp, tr,
+                                  time.perf_counter() - t0)
+        recs, sums = [], []
+        for r, w in enumerate(wls):
+            comp = compiled[r] if compiled is not None else None
+            tr = des.simulate(w, spec.platform, spec.policy, scenario=comp)
+            rec = trace.flatten_trace(tr, w)
+            recs.append(rec)
+            sums.append(_summarize(spec, rec, comp))
+        return _aggregate_replicas(spec, sums, recs,
+                                   time.perf_counter() - t0)
+
+    def run_sweep(self, specs: Sequence, params=None) -> List:
+        return [self.run(s, params) for s in specs]
+
+
+# ---------------------------------------------------------------------------
+# jax: everything lowers to one jit+vmap batch
+# ---------------------------------------------------------------------------
+
+class JaxEngine:
+    """Vectorized engine; ensembles and sweep grids are one SPMD batch."""
+
+    name = "jax"
+
+    def run(self, spec, params=None):
+        if spec.n_replicas <= 1:
+            t0 = time.perf_counter()
+            wls, compiled = _spec_workloads(spec, params)
+            comp = compiled[0] if compiled is not None else None
+            tr = vdes.simulate_to_trace(wls[0], spec.platform, spec.policy,
+                                        scenario=comp)
+            return _single_result(spec, wls[0], comp, tr,
+                                  time.perf_counter() - t0)
+        return self.run_sweep([spec], params)[0]
+
+    def run_sweep(self, specs: Sequence, params=None) -> List:
+        """Compile the whole grid — every (point, replica) pair — into one
+        ``vdes.simulate_ensemble`` call. Heterogeneous capacities ride the
+        ``capacities [B, nres]`` tensor, heterogeneous schedulers the traced
+        ``policies [B]`` tensor, heterogeneous scenarios the stacked
+        schedule/attempt tensors. Requires every point to share the number
+        of resources (pad the platform if you need ragged grids)."""
+        t0 = time.perf_counter()
+        nres = {len(s.platform.resources) for s in specs}
+        if len(nres) != 1:
+            raise ValueError(
+                f"batched sweep needs a uniform resource count, got {nres}; "
+                "use the numpy engine for ragged platform grids")
+
+        entries = []                     # (spec index, workload, compiled)
+        wl_cache = {}   # distinct workloads synthesized once for the grid
+        for g, spec in enumerate(specs):
+            wls, compiled = _spec_workloads(spec, params, cache=wl_cache)
+            for r, w in enumerate(wls):
+                entries.append(
+                    (g, w, compiled[r] if compiled is not None else None))
+
+        plats = [specs[g].platform for g, _, _ in entries]
+        cols = batching.pad_workloads([w for _, w, _ in entries], plats)
+        n_max = cols.pop("n_max")
+        caps = np.stack([p.capacities for p in plats]).astype(np.int32)
+        pol = np.array([specs[g].policy for g, _, _ in entries], np.int32)
+        uniform_policy = bool((pol == pol[0]).all())
+
+        scen_kw = {}
+        if any(c is not None for _, _, c in entries):
+            from repro.ops.scenario import CompiledScenario
+            from repro.ops.capacity import static_schedule
+            comps = []
+            for g, w, c in entries:
+                if c is None:           # inert placeholder row
+                    c = CompiledScenario(
+                        schedule=static_schedule(specs[g].platform.capacities),
+                        attempts=np.ones(w.task_type.shape, np.int64),
+                        backoff=vdes._NO_RETRY_BACKOFF)
+                comps.append(c)
+            horizon = max(s.horizon_s for s in specs)
+            services = [cols["service"][i][: w.n]
+                        for i, (_, w, _) in enumerate(entries)]
+            scen_kw = batching.stack_scenarios(comps, n_max, horizon,
+                                               services=services)
+
+        out = vdes.simulate_ensemble(
+            *[jax.numpy.asarray(cols[k]) for k in
+              ("arrival", "n_tasks", "task_res", "service", "priority")],
+            jax.numpy.asarray(caps), int(pol[0]),
+            policies=None if uniform_policy else pol, **scen_kw)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        wall = time.perf_counter() - t0
+
+        results, i = [], 0
+        for g, spec in enumerate(specs):
+            recs, sums = [], []
+            for r in range(spec.n_replicas):
+                _, wl, comp = entries[i + r]
+                tr = batching.batch_trace(out, i + r, wl,
+                                          spec.platform.capacities,
+                                          with_scenario=comp is not None)
+                rec = trace.flatten_trace(tr, wl)
+                recs.append(rec)
+                sums.append(_summarize(spec, rec, comp))
+            i += spec.n_replicas
+            if spec.n_replicas == 1:
+                from repro.core.experiment import ExperimentResult
+                summary = sums[0]
+                summary["wall_s"] = wall   # the whole grid's wall clock
+                summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
+                results.append(ExperimentResult(spec, summary, recs[0], wall))
+            else:
+                results.append(_aggregate_replicas(spec, sums, recs, wall))
+        return results
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_ENGINES = {}
+
+
+def register_engine(engine: Engine) -> None:
+    _ENGINES[engine.name] = engine
+
+
+def get_engine(name: str) -> Engine:
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; "
+                       f"registered: {sorted(_ENGINES)}") from None
+
+
+register_engine(NumpyEngine())
+register_engine(JaxEngine())

@@ -1,33 +1,104 @@
-"""Experiment definition & runner (paper §IV: "The main entry point for users
-is to define an experiment and its parameters").
+"""Declarative experiment API (paper §IV: "The main entry point for users
+is to define an experiment and its parameters, systematically mutating them
+in an iterative, exploratory process").
 
-An :class:`Experiment` bundles workload parameters (horizon, interarrival
-factor), platform parameters (resource capacities), an operational strategy
-(admission policy), and replication/seed control. Experiments run either on
-the exact numpy engine (long horizons) or the vectorized JAX engine
-(Monte-Carlo ensembles via vmap). Results persist as npz and feed the
-analytics in :mod:`repro.core.trace`.
+:class:`ExperimentSpec` is the declarative description: a full
+:class:`~repro.core.model.PlatformConfig` (arbitrarily many resources, each
+with its own cost and routing), workload parameters, an admission policy, an
+operational :class:`~repro.ops.scenario.Scenario`, and replication/seed
+control. Specs are inert data — execution goes through the
+:class:`~repro.core.engines.Engine` protocol (``get_engine(spec.engine)
+.run(spec, params)``), so no caller ever branches on the backend.
+
+:class:`Sweep` composes a spec with named axes (spec fields,
+``"capacity:<resource>"`` shorthands, scenario families, policies) into a
+Cartesian grid. On the JAX engine the *entire grid* lowers through
+:mod:`repro.core.batching` into one ``jit``+``vmap`` call; the numpy engine
+falls back to an exact serial loop for long-horizon runs.
+
+The legacy two-resource :class:`Experiment` dataclass and the
+``sweep(base, params, grid)`` helper remain as a deprecation shim for one
+release — see the README migration guide.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import os
-import time
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Mapping, Optional, Sequence
 
-import jax
 import numpy as np
 
-from repro.core import des, trace, vdes
+from repro.core import des, trace
 from repro.core import model as M
 from repro.core.fitting import SimulationParams
-from repro.core.synthesizer import synthesize_workload
-from repro.ops.scenario import Scenario, stack_compiled_scenarios
+from repro.ops.scenario import Scenario
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """A declarative experiment over an arbitrary platform.
+
+    ``platform`` replaces the legacy ``compute_capacity``/
+    ``learning_capacity`` pair: any number of resources, each carrying its
+    own capacity and cost rate, plus task-type routing and datastore
+    parameters. ``workload`` optionally pins a pre-materialized
+    :class:`~repro.core.model.Workload` (then no synthesis happens and
+    ``interarrival_factor`` is ignored) — the hook deterministic parity
+    tests and trace replays use.
+    """
+
+    name: str
+    platform: M.PlatformConfig = dataclasses.field(
+        default_factory=M.PlatformConfig)
+    horizon_s: float = 7 * 24 * 3600.0
+    interarrival_factor: float = 1.0
+    policy: int = des.POLICY_FIFO
+    seed: int = 0
+    n_replicas: int = 1
+    engine: str = "numpy"  # "numpy" | "jax"
+    scenario: Optional[Scenario] = None
+    workload: Optional[M.Workload] = None
+
+    def with_(self, **kw) -> "ExperimentSpec":
+        """Functional update (``dataclasses.replace`` with axis shorthands):
+        plain field names, or ``**{"capacity:<resource>": n}`` to resize one
+        pool of the platform."""
+        out = self
+        for k, v in kw.items():
+            if k.startswith("capacity:"):
+                out = dataclasses.replace(
+                    out, platform=out.platform.with_capacity(
+                        k.split(":", 1)[1], v))
+            else:
+                out = dataclasses.replace(out, **{k: v})
+        return out
+
+    def to_spec(self) -> "ExperimentSpec":
+        return self
+
+
+def as_spec(exp) -> "ExperimentSpec":
+    """Normalize an :class:`ExperimentSpec` or legacy :class:`Experiment`."""
+    return exp.to_spec()
 
 
 @dataclasses.dataclass
 class Experiment:
+    """DEPRECATED two-resource shim over :class:`ExperimentSpec`.
+
+    Kept for one release: constructing it warns, and every runner accepts it
+    by converting through :meth:`to_spec`. Migrate::
+
+        Experiment(name="x", learning_capacity=16, ...)
+        # ->
+        ExperimentSpec(name="x",
+                       platform=PlatformConfig().with_capacity(
+                           "learning_cluster", 16), ...)
+    """
+
     name: str
     horizon_s: float = 7 * 24 * 3600.0
     interarrival_factor: float = 1.0
@@ -37,11 +108,15 @@ class Experiment:
     seed: int = 0
     n_replicas: int = 1
     engine: str = "numpy"  # "numpy" | "jax"
-    # operational scenario (capacity schedule / failures / SLOs); None = the
-    # static platform, engine-identical to the pre-scenario behavior
     scenario: Optional[Scenario] = None
     compute_cost_per_node_hour: float = 1.0
     learning_cost_per_node_hour: float = 3.0
+
+    def __post_init__(self):
+        warnings.warn(
+            "Experiment is deprecated; use ExperimentSpec with a full "
+            "PlatformConfig (see the README migration guide)",
+            DeprecationWarning, stacklevel=3)
 
     def platform(self) -> M.PlatformConfig:
         return M.PlatformConfig(resources=(
@@ -51,10 +126,19 @@ class Experiment:
                              self.learning_cost_per_node_hour),
         ))
 
+    def to_spec(self) -> ExperimentSpec:
+        return ExperimentSpec(
+            name=self.name, platform=self.platform(),
+            horizon_s=self.horizon_s,
+            interarrival_factor=self.interarrival_factor,
+            policy=self.policy, seed=self.seed,
+            n_replicas=self.n_replicas, engine=self.engine,
+            scenario=self.scenario)
+
 
 @dataclasses.dataclass
 class ExperimentResult:
-    experiment: Experiment
+    experiment: ExperimentSpec
     summary: Dict
     records: trace.TaskRecords
     wall_s: float
@@ -63,7 +147,10 @@ class ExperimentResult:
     def save(self, directory: str) -> None:
         os.makedirs(directory, exist_ok=True)
         self.records.save(os.path.join(directory, "records.npz"))
-        meta = {"experiment": dataclasses.asdict(self.experiment),
+        exp = self.experiment
+        if getattr(exp, "workload", None) is not None:
+            exp = dataclasses.replace(exp, workload=None)  # tensors -> npz
+        meta = {"experiment": dataclasses.asdict(exp),
                 "summary": self.summary, "wall_s": self.wall_s}
         with open(os.path.join(directory, "meta.json"), "w") as f:
             json.dump(meta, f, indent=2, default=_json_default)
@@ -78,124 +165,83 @@ def _json_default(x):
         return str(x)
 
 
-def run_experiment(exp: Experiment, params: SimulationParams) -> ExperimentResult:
-    platform = exp.platform()
-    t_begin = time.perf_counter()
-    if exp.engine == "jax" and exp.n_replicas > 1:
-        return _run_ensemble(exp, params, platform, t_begin)
-
-    key = jax.random.PRNGKey(exp.seed)
-    wl = synthesize_workload(params, key, exp.horizon_s, platform,
-                             exp.interarrival_factor)
-    compiled = exp.scenario.compile(wl, platform, exp.horizon_s,
-                                    seed=exp.seed, policy=exp.policy) \
-        if exp.scenario is not None else None
-    if exp.engine == "jax":
-        tr = vdes.simulate_to_trace(wl, platform, exp.policy, scenario=compiled)
-    else:
-        tr = des.simulate(wl, platform, exp.policy, scenario=compiled)
-    rec = trace.flatten_trace(tr, wl)
-    wall = time.perf_counter() - t_begin
-    summary = trace.summarize(
-        rec, platform.capacities, exp.horizon_s,
-        schedule=compiled.schedule if compiled is not None else None,
-        cost_rates=platform.cost_rates if compiled is not None else None,
-        slo=exp.scenario.slo if exp.scenario is not None else None)
-    summary["wall_s"] = wall
-    summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
-    return ExperimentResult(exp, summary, rec, wall)
+def run_experiment(exp, params: Optional[SimulationParams] = None
+                   ) -> ExperimentResult:
+    """Run one experiment (spec or legacy shim) on its declared engine."""
+    from repro.core.engines import get_engine
+    spec = as_spec(exp)
+    res = get_engine(spec.engine).run(spec, params)
+    res.experiment = exp            # hand back the caller's own object
+    return res
 
 
-def _run_ensemble(exp: Experiment, params: SimulationParams,
-                  platform: M.PlatformConfig, t_begin: float) -> ExperimentResult:
-    """Monte-Carlo: synthesize R replicas, simulate them in one vmapped call.
-    With a scenario, each replica gets its own compiled schedule/failure
-    draws (seed + replica index) — autoscaler/outage A/B in one SPMD call."""
-    keys = jax.random.split(jax.random.PRNGKey(exp.seed), exp.n_replicas)
-    wls = [synthesize_workload(params, k, exp.horizon_s, platform,
-                               exp.interarrival_factor) for k in keys]
-    n_max = max(w.n for w in wls)
-    T = wls[0].max_tasks
+# ---------------------------------------------------------------------------
+# sweeps
+# ---------------------------------------------------------------------------
 
-    compiled = [exp.scenario.compile(w, platform, exp.horizon_s,
-                                     seed=exp.seed + 1000 * r,
-                                     policy=exp.policy)
-                for r, w in enumerate(wls)] if exp.scenario is not None else None
-
-    def pad(w: M.Workload):
-        p = n_max - w.n
-        svc = w.service_time(platform.datastore)
-        return (
-            np.pad(w.arrival, (0, p), constant_values=3.0e37).astype(np.float32),
-            np.pad(w.n_tasks, (0, p), constant_values=1),
-            np.pad(w.task_res, ((0, p), (0, 0))),
-            np.pad(svc, ((0, p), (0, 0))).astype(np.float32),
-            np.pad(w.priority, (0, p)),
-        )
-
-    cols = [np.stack(x) for x in zip(*[pad(w) for w in wls])]
-    caps = np.tile(platform.capacities[None], (exp.n_replicas, 1)).astype(np.int32)
-    scen_kw = {}
-    if compiled is not None:
-        scen_kw = stack_compiled_scenarios(compiled, n_max, exp.horizon_s)
-    out = vdes.simulate_ensemble(*[jax.numpy.asarray(c) for c in cols],
-                                 jax.numpy.asarray(caps), exp.policy,
-                                 **scen_kw)
-    wall = time.perf_counter() - t_begin
-
-    rep_sums = []
-    recs = []
-    for r, w in enumerate(wls):
-        tr = M.SimTrace(
-            start=np.asarray(out["start"][r][: w.n], np.float64),
-            finish=np.asarray(out["finish"][r][: w.n], np.float64),
-            ready=np.asarray(out["ready"][r][: w.n], np.float64),
-            n_tasks=w.n_tasks.astype(np.int64), task_res=w.task_res,
-            task_type=w.task_type, arrival=np.asarray(w.arrival, np.float64),
-            capacities=platform.capacities,
-            attempts=np.asarray(out["attempts"][r][: w.n], np.int64)
-            if compiled is not None else None,
-            completed=np.asarray(out["done"][r][: w.n])
-            if compiled is not None else None)
-        rec = trace.flatten_trace(tr, w)
-        recs.append(rec)
-        rep_sums.append(trace.summarize(
-            rec, platform.capacities, exp.horizon_s,
-            schedule=compiled[r].schedule if compiled is not None else None,
-            cost_rates=platform.cost_rates if compiled is not None else None,
-            slo=exp.scenario.slo if exp.scenario is not None else None))
-    summary = {
-        "mean_wait_s": float(np.mean([s["mean_wait_s"] for s in rep_sums])),
-        "p95_wait_s": float(np.mean([s["p95_wait_s"] for s in rep_sums])),
-        "wait_ci95_halfwidth": float(1.96 * np.std(
-            [s["mean_wait_s"] for s in rep_sums]) / np.sqrt(len(rep_sums))),
-        "wall_s": wall,
-        "n_replicas": exp.n_replicas,
-    }
-    for k in ("total_cost", "deadline_miss_rate", "wait_slo_violation_rate",
-              "mean_attempts"):
-        if all(k in s for s in rep_sums):
-            summary[k] = float(np.mean([s[k] for s in rep_sums]))
-    from repro.core.runtime import _concat_records
-    return ExperimentResult(exp, summary, _concat_records(recs), wall, rep_sums)
+def _fmt_axis_value(v):
+    return getattr(v, "name", v)    # scenarios print by name, not repr
 
 
-def sweep(base: Experiment, params: SimulationParams,
+@dataclasses.dataclass
+class Sweep:
+    """A Cartesian grid of experiments, compiled as ONE batch when possible.
+
+    ``axes`` maps axis names to value lists. An axis name is either a spec
+    field (``interarrival_factor``, ``policy``, ``scenario``, ``seed``,
+    ``platform``, ...) or the shorthand ``"capacity:<resource name>"``
+    which resizes one pool of the platform — the replacement for the legacy
+    two-capacity fields that works for any resource count.
+
+    ``run`` dispatches through the Engine protocol: on the JAX engine the
+    whole grid (heterogeneous capacities, interarrival factors, policies,
+    and per-point operational scenarios, times ``n_replicas`` Monte-Carlo
+    replicas each) executes as a single ``jit``+``vmap``
+    ``simulate_ensemble`` call; the numpy engine runs an exact serial loop.
+    """
+
+    base: ExperimentSpec
+    axes: Mapping[str, Sequence]
+
+    def points(self) -> List[ExperimentSpec]:
+        base = as_spec(self.base)
+        names = list(self.axes)
+        pts = []
+        for combo in itertools.product(*[self.axes[k] for k in names]):
+            spec = base.with_(**dict(zip(names, combo)))
+            label = ",".join(f"{k.split(':', 1)[-1]}={_fmt_axis_value(v)}"
+                             for k, v in zip(names, combo))
+            pts.append(dataclasses.replace(
+                spec, name=f"{base.name}/{label}" if label else base.name))
+        return pts
+
+    def run(self, params: Optional[SimulationParams] = None
+            ) -> List[ExperimentResult]:
+        from repro.core.engines import get_engine
+        specs = self.points()
+        # an "engine" axis dispatches each point on its own backend (each
+        # engine still batches its own group); order is preserved
+        results: List[Optional[ExperimentResult]] = [None] * len(specs)
+        for name in dict.fromkeys(s.engine for s in specs):
+            idx = [i for i, s in enumerate(specs) if s.engine == name]
+            for i, r in zip(idx, get_engine(name).run_sweep(
+                    [specs[i] for i in idx], params)):
+                results[i] = r
+        return results
+
+
+def sweep(base, params: Optional[SimulationParams],
           grid: Dict[str, List]) -> List[ExperimentResult]:
-    """Cartesian parameter sweep — the paper's 'systematically mutating
-    parameters in an iterative, exploratory process'."""
-    import itertools
-
+    """Legacy serial sweep (kept for one release): a Python loop of
+    ``run_experiment`` over ``dataclasses.replace`` mutations of ``base``.
+    Prefer ``Sweep(base, axes).run(params)``, which lowers the grid to one
+    batched SPMD call on the JAX engine."""
     names = list(grid)
     results = []
-
-    def fmt(v):
-        return getattr(v, "name", v)   # scenarios print by name, not repr
-
     for combo in itertools.product(*[grid[k] for k in names]):
         exp = dataclasses.replace(base, **dict(zip(names, combo)))
         exp = dataclasses.replace(
-            exp, name=f"{base.name}/" + ",".join(f"{k}={fmt(v)}" for k, v in
-                                                 zip(names, combo)))
+            exp, name=f"{base.name}/" + ",".join(
+                f"{k}={_fmt_axis_value(v)}" for k, v in zip(names, combo)))
         results.append(run_experiment(exp, params))
     return results

@@ -93,6 +93,26 @@ class PlatformConfig:
             table[t] = r
         return table[task_type]
 
+    def resource_index(self, resource) -> int:
+        """Resolve a resource by name or integer index."""
+        if isinstance(resource, (int, np.integer)):
+            if not 0 <= int(resource) < len(self.resources):
+                raise IndexError(f"resource index {resource} out of range")
+            return int(resource)
+        for i, r in enumerate(self.resources):
+            if r.name == resource:
+                return i
+        raise KeyError(f"no resource named {resource!r} in "
+                       f"{[r.name for r in self.resources]}")
+
+    def with_capacity(self, resource, capacity: int) -> "PlatformConfig":
+        """A copy with one resource's capacity replaced — the sweep-axis
+        primitive for platforms with arbitrarily many resources."""
+        i = self.resource_index(resource)
+        res = tuple(dataclasses.replace(r, capacity=int(capacity))
+                    if j == i else r for j, r in enumerate(self.resources))
+        return dataclasses.replace(self, resources=res)
+
 
 @dataclasses.dataclass
 class Workload:
@@ -181,6 +201,11 @@ class SimTrace:
     # stranded mid-retry still has a recorded (failed-attempt) finish, so
     # NaN-scanning cannot detect it; None = derive from NaNs (pre-scenario)
     completed: Optional[np.ndarray] = None
+    # [N, T, A] per-attempt service start/finish (failure/retry scenarios;
+    # NaN where the attempt never ran) — exact utilization/cost accounting
+    # under heavy retry instead of the duration*attempts approximation
+    att_start: Optional[np.ndarray] = None
+    att_finish: Optional[np.ndarray] = None
 
     @property
     def wait(self) -> np.ndarray:

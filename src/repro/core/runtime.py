@@ -20,7 +20,7 @@ from repro.core import model as M
 from repro.core.fitting import SimulationParams
 from repro.core.metrics import DeployedModel
 from repro.core.synthesizer import synthesize_workload
-from repro.core.trace import TaskRecords, flatten_trace
+from repro.core.trace import (TaskRecords, concat_records, flatten_trace)
 from repro.core.workload import MAX_TASKS
 
 
@@ -235,8 +235,6 @@ def run_feedback_simulation(
                           perf_timeline=perf_tl, retrain_times=retrain_times)
 
 
-def _concat_records(recs: List[TaskRecords]) -> TaskRecords:
-    import dataclasses as dc
-    fields = [f.name for f in dc.fields(TaskRecords)]
-    return TaskRecords(**{f: np.concatenate([getattr(r, f) for r in recs])
-                          for f in fields})
+# Back-compat alias: the canonical concatenation (which NaN-pads per-attempt
+# columns of different widths) lives with the record type in trace.py.
+_concat_records = concat_records

@@ -39,6 +39,12 @@ class TaskRecords:
     # mid-retry records its failed attempt's finish, so NaNs can't tell);
     # falls back to finish being non-NaN
     pipeline_done: Optional[np.ndarray] = None
+    # [E, A] per-attempt start/finish times (failure/retry scenarios; NaN
+    # where the attempt never ran). None for pre-scenario runs and records
+    # persisted before these columns existed — accounting then falls back to
+    # the duration*attempts approximation
+    att_start: Optional[np.ndarray] = None
+    att_finish: Optional[np.ndarray] = None
 
     def __post_init__(self):
         if self.attempts is None:
@@ -57,7 +63,9 @@ class TaskRecords:
         return self.finish - self.start
 
     def save(self, path: str) -> None:
-        np.savez_compressed(path, **dataclasses.asdict(self))
+        cols = {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+        np.savez_compressed(path, **cols)
 
     @staticmethod
     def load(path: str) -> "TaskRecords":
@@ -87,7 +95,39 @@ def flatten_trace(trace: M.SimTrace, wl: M.Workload) -> TaskRecords:
         arrival=np.asarray(trace.arrival, np.float64)[pid],
         pipeline_done=None if trace.completed is None
         else np.asarray(trace.completed, bool)[pid],
+        att_start=None if trace.att_start is None
+        else np.asarray(trace.att_start, np.float64)[pid, pos],
+        att_finish=None if trace.att_finish is None
+        else np.asarray(trace.att_finish, np.float64)[pid, pos],
     )
+
+
+def concat_records(recs) -> TaskRecords:
+    """Concatenate record batches. The per-attempt columns may be absent or
+    have different attempt-slot widths across batches (e.g. co-simulation
+    windows with different failure draws): widths are NaN-padded to the
+    maximum, and batches without the columns contribute all-NaN rows."""
+    fields = [f.name for f in dataclasses.fields(TaskRecords)]
+    out = {}
+    for f in fields:
+        vals = [getattr(r, f) for r in recs]
+        if f in ("att_start", "att_finish"):
+            if all(v is None for v in vals):
+                out[f] = None
+                continue
+            width = max(v.shape[1] for v in vals if v is not None)
+            cols = []
+            for r, v in zip(recs, vals):
+                if v is None:
+                    v = np.full((r.start.shape[0], width), np.nan)
+                elif v.shape[1] < width:
+                    v = np.pad(v, ((0, 0), (0, width - v.shape[1])),
+                               constant_values=np.nan)
+                cols.append(v)
+            out[f] = np.concatenate(cols)
+        else:
+            out[f] = np.concatenate(vals)
+    return TaskRecords(**out)
 
 
 # ---------------------------------------------------------------------------

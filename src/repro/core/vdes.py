@@ -91,17 +91,30 @@ def _cummax(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.associative_scan(jnp.maximum, x)
 
 
-@partial(jax.jit, static_argnames=("policy",))
+@partial(jax.jit, static_argnames=("policy", "n_attempt_slots"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
-             backoff=None):
+             backoff=None,
+             attempt_service: Optional[jnp.ndarray] = None,
+             policy_dyn: Optional[jnp.ndarray] = None,
+             n_attempt_slots: Optional[int] = None):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
     ``cap_times [K]`` / ``cap_vals [K, nres]`` give a piecewise-constant
     capacity schedule (``cap_times[0]`` must be 0; ``capacities`` is ignored
     when given). ``backoff`` is the ``(base, mult, cap)`` retry-delay triple.
+
+    ``attempt_service [N, T, A]`` gives per-attempt service times (attempt
+    ``k`` of a task runs ``attempt_service[..., min(k, A-1)]``; overrides
+    ``vwl.service``) — retry resampling stays pure: every draw happens
+    outside the jitted function. ``policy_dyn`` is a *traced* i32 scalar that
+    overrides the static ``policy`` so a vmapped batch can mix admission
+    policies across its replica axis in one compiled program. With
+    ``n_attempt_slots = A`` the engine also records per-attempt
+    ``att_start``/``att_finish [N, T, A]`` tensors (NaN where the attempt
+    never ran) for exact utilization/cost accounting under heavy retry.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
@@ -132,6 +145,11 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         ready=jnp.full((n, T), jnp.nan, jnp.float32),
         att_out=jnp.zeros((n, T), jnp.int32),
     )
+    if n_attempt_slots is not None:
+        state["att_start"] = jnp.full((n, T, n_attempt_slots), jnp.nan,
+                                      jnp.float32)
+        state["att_finish"] = jnp.full((n, T, n_attempt_slots), jnp.nan,
+                                       jnp.float32)
 
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
@@ -192,8 +210,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         # ------------------------------------------------ admission round
         queued = phase == _QUEUED
         res_q = jnp.where(queued, vwl.task_res[ids, tcl], nres)  # sentinel
-        svc = vwl.service[ids, tcl]
-        if policy == POLICY_PRIORITY:
+        if attempt_service is None:
+            svc = vwl.service[ids, tcl]
+        else:
+            A = attempt_service.shape[2]
+            svc = attempt_service[ids, tcl, jnp.clip(att, 0, A - 1)]
+        if policy_dyn is not None:
+            pkey = jnp.where(policy_dyn == POLICY_PRIORITY, -vwl.priority,
+                             jnp.where(policy_dyn == POLICY_SJF, svc,
+                                       jnp.zeros((n,), jnp.float32)))
+        elif policy == POLICY_PRIORITY:
             pkey = -vwl.priority
         elif policy == POLICY_SJF:
             pkey = svc
@@ -228,15 +254,26 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                     num_segments=nres + 1)[:nres]
         free = free - taken
 
-        return dict(phase=phase, task_idx=task_idx, t_next=t_next,
-                    enq_wave=enq_wave, attempt=att, free=free,
-                    cap_idx=cap_idx, wave=s["wave"] + 1,
-                    start=start, finish=finish, ready=ready, att_out=att_out)
+        nxt = dict(phase=phase, task_idx=task_idx, t_next=t_next,
+                   enq_wave=enq_wave, attempt=att, free=free,
+                   cap_idx=cap_idx, wave=s["wave"] + 1,
+                   start=start, finish=finish, ready=ready, att_out=att_out)
+        if n_attempt_slots is not None:
+            ka = jnp.clip(att, 0, n_attempt_slots - 1)
+            nxt["att_start"] = s["att_start"].at[ids, tcl, ka].set(
+                jnp.where(admitted, t_star, s["att_start"][ids, tcl, ka]))
+            nxt["att_finish"] = s["att_finish"].at[ids, tcl, ka].set(
+                jnp.where(admitted, t_fin, s["att_finish"][ids, tcl, ka]))
+        return nxt
 
     out = jax.lax.while_loop(cond, body, state)
-    return dict(start=out["start"], finish=out["finish"], ready=out["ready"],
-                attempts=out["att_out"], done=out["phase"] == _DONE,
-                waves=out["wave"])
+    res = dict(start=out["start"], finish=out["finish"], ready=out["ready"],
+               attempts=out["att_out"], done=out["phase"] == _DONE,
+               waves=out["wave"])
+    if n_attempt_slots is not None:
+        res["att_start"] = out["att_start"]
+        res["att_finish"] = out["att_finish"]
+    return res
 
 
 def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
@@ -244,15 +281,27 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
     """Convenience: numpy Workload in, SimTrace out (single replica).
     ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`."""
     platform = platform or M.PlatformConfig()
+    att_start = att_finish = None
     if scenario is not None:
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
+        att_svc = getattr(scenario, "attempt_service", None)
+        slots = int(max(np.max(scenario.attempts), 1,
+                        att_svc.shape[2] if att_svc is not None else 1))
+        if slots == 1:   # no retries: single-attempt records already exact
+            slots = None
         res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy,
                        cap_times=jnp.asarray(scenario.cap_times, jnp.float32),
                        cap_vals=jnp.asarray(scenario.cap_vals, jnp.int32),
-                       backoff=jnp.asarray(scenario.backoff, jnp.float32))
+                       backoff=jnp.asarray(scenario.backoff, jnp.float32),
+                       attempt_service=None if att_svc is None
+                       else jnp.asarray(att_svc, jnp.float32),
+                       n_attempt_slots=slots)
         caps0 = np.asarray(scenario.cap_vals[0], np.int64)
         attempts = np.asarray(res["attempts"], np.int64)
         completed = np.asarray(res["done"])
+        if slots is not None:
+            att_start = np.asarray(res["att_start"], np.float64)
+            att_finish = np.asarray(res["att_finish"], np.float64)
     else:
         vwl = VWorkload.from_workload(wl, platform)
         res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy)
@@ -269,6 +318,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         capacities=caps0,
         attempts=attempts,
         completed=completed,
+        att_start=att_start,
+        att_finish=att_finish,
     )
 
 
@@ -276,17 +327,24 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 # Monte-Carlo ensembles: vmap over a replica axis. Tensors must share shapes.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("policy",))
+@partial(jax.jit, static_argnames=("policy", "n_attempt_slots"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
-                      backoff=None):
+                      backoff=None, policies=None, attempt_service=None,
+                      n_attempt_slots: Optional[int] = None):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
-    ``cap_times [R, K]`` / ``cap_vals [R, K, nres]``, ``backoff [R, 3]`` —
+    ``cap_times [R, K]`` / ``cap_vals [R, K, nres]``, ``backoff [R, 3]``,
+    ``attempt_service [R, N, T, A]`` (per-attempt resampled service times) —
     let one SPMD call A/B capacity-planning *and* autoscaler/failure
-    scenarios across the replica axis.
+    scenarios across the replica axis. ``policies [R]`` (i32) assigns a
+    (possibly different) admission policy per replica via the traced
+    ``policy_dyn`` path, so a whole experiment grid — capacities,
+    scenarios, *and* schedulers — lowers to this one jit+vmap call.
+    ``n_attempt_slots`` (static) turns on per-attempt start/finish
+    recording.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -300,12 +358,26 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         backoff = jnp.tile(jnp.asarray(_NO_RETRY_BACKOFF, jnp.float32)[None],
                            (R, 1))
 
-    def one(a, nt, tr, sv, pr, att, cap, ct, cv, bo):
-        return simulate(VWorkload(a, nt, tr, sv, pr, att), cap, policy,
-                        cap_times=ct, cap_vals=cv, backoff=bo)
+    mapped = dict(arrival=arrival, n_tasks=n_tasks, task_res=task_res,
+                  service=service, priority=priority,
+                  attempts=jnp.asarray(attempts, jnp.int32),
+                  capacities=capacities,
+                  cap_times=jnp.asarray(cap_times, jnp.float32),
+                  cap_vals=jnp.asarray(cap_vals, jnp.int32),
+                  backoff=jnp.asarray(backoff, jnp.float32))
+    if policies is not None:
+        mapped["policy_dyn"] = jnp.asarray(policies, jnp.int32)
+    if attempt_service is not None:
+        mapped["attempt_service"] = jnp.asarray(attempt_service, jnp.float32)
 
-    return jax.vmap(one)(arrival, n_tasks, task_res, service, priority,
-                         jnp.asarray(attempts, jnp.int32), capacities,
-                         jnp.asarray(cap_times, jnp.float32),
-                         jnp.asarray(cap_vals, jnp.int32),
-                         jnp.asarray(backoff, jnp.float32))
+    def one(m):
+        vwl = VWorkload(m["arrival"], m["n_tasks"], m["task_res"],
+                        m["service"], m["priority"], m["attempts"])
+        return simulate(vwl, m["capacities"], policy,
+                        cap_times=m["cap_times"], cap_vals=m["cap_vals"],
+                        backoff=m["backoff"],
+                        attempt_service=m.get("attempt_service"),
+                        policy_dyn=m.get("policy_dyn"),
+                        n_attempt_slots=n_attempt_slots)
+
+    return jax.vmap(one)(mapped)

@@ -15,8 +15,9 @@ import os
 import jax
 import numpy as np
 
-from repro.core import (Experiment, fit_simulation_params,
-                        generate_empirical_workload, run_experiment)
+from repro.core import (ExperimentSpec, PlatformConfig, ResourceConfig,
+                        fit_simulation_params, generate_empirical_workload,
+                        run_experiment)
 from repro.core.des import POLICY_NAMES
 
 
@@ -48,12 +49,14 @@ def main():
         params = fit_simulation_params(wl)
         params.save(args.params_cache)
 
-    exp = Experiment(
+    exp = ExperimentSpec(
         name="cli",
+        platform=PlatformConfig(resources=(
+            ResourceConfig("compute_cluster", args.compute_capacity),
+            ResourceConfig("learning_cluster", args.learning_capacity, 3.0),
+        )),
         horizon_s=args.horizon_days * 86400.0,
         interarrival_factor=args.interarrival_factor,
-        compute_capacity=args.compute_capacity,
-        learning_capacity=args.learning_capacity,
         policy=POLICY_NAMES.index(args.policy),
         seed=args.seed,
         n_replicas=args.replicas,

@@ -7,7 +7,7 @@ from repro.ops.capacity import (CapacitySchedule, MaintenanceWindows,
                                 ReactiveAutoscaler, ScheduledAutoscaler,
                                 StaticCapacity, apply_capacity_deltas,
                                 normalize, static_schedule)
-from repro.ops.failures import (FailureModel, OutageModel, RetryPolicy)
+from repro.ops.failures import FailureModel, OutageModel, RetryPolicy
 from repro.ops.scenario import (CompiledScenario, Scenario, compile_static,
                                 stack_compiled_scenarios)
 

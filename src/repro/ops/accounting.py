@@ -35,19 +35,32 @@ def busy_node_seconds(rec, nres: int, horizon_s: float = np.inf) -> np.ndarray:
     """[nres] node-seconds actually occupied within ``[0, horizon_s)``.
     Contributions are clipped at the horizon — matching the provisioned
     integral, so utilization-vs-provisioned stays <= 1 even when backlog
-    drains past the horizon. Per-attempt timestamps are not recorded, so the
-    (attempts - 1) failed attempts are modeled as occupying a back-to-back
-    window ending at the final attempt's start (latest-possible placement:
-    an in-horizon lower bound). Backoff gaps between attempts are idle and
-    excluded."""
-    start = np.nan_to_num(rec.start, nan=0.0)
-    finish = np.nan_to_num(rec.finish, nan=0.0)
-    dur = np.clip(finish - start, 0.0, None)
-    final = np.clip(np.minimum(finish, horizon_s) - start, 0.0, None)
-    prior_dur = (rec.attempts - 1) * dur
-    prior = np.clip(np.minimum(start, horizon_s)
-                    - np.clip(start - prior_dur, 0.0, None), 0.0, prior_dur)
-    busy = final + prior
+    drains past the horizon.
+
+    When the records carry per-attempt start/finish columns (``att_start``/
+    ``att_finish``, recorded by both engines under scenarios), occupancy is
+    summed over the *actual* attempt windows — exact even under heavy retry
+    with resampled per-attempt durations. Records persisted before those
+    columns existed fall back to the historical approximation: the
+    (attempts - 1) failed attempts modeled as a back-to-back window ending
+    at the final attempt's start (latest-possible placement, an in-horizon
+    lower bound). Backoff gaps between attempts are idle and excluded
+    either way."""
+    if rec.att_start is not None and rec.att_finish is not None:
+        s = np.nan_to_num(rec.att_start, nan=0.0)
+        f = np.nan_to_num(rec.att_finish, nan=0.0)
+        busy = np.clip(np.minimum(f, horizon_s) - np.clip(s, 0.0, None),
+                       0.0, None).sum(1)
+    else:
+        start = np.nan_to_num(rec.start, nan=0.0)
+        finish = np.nan_to_num(rec.finish, nan=0.0)
+        dur = np.clip(finish - start, 0.0, None)
+        final = np.clip(np.minimum(finish, horizon_s) - start, 0.0, None)
+        prior_dur = (rec.attempts - 1) * dur
+        prior = np.clip(np.minimum(start, horizon_s)
+                        - np.clip(start - prior_dur, 0.0, None),
+                        0.0, prior_dur)
+        busy = final + prior
     out = np.zeros(nres)
     for r in range(nres):
         out[r] = busy[rec.resource == r].sum()

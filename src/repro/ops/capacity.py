@@ -45,6 +45,19 @@ class CapacitySchedule:
                       0, self.n_changes - 1)
         return self.caps[idx]
 
+    def padded(self, n_changes: int, horizon_s: float) -> "CapacitySchedule":
+        """Pad to exactly ``n_changes`` change points with no-op changes past
+        the horizon — batched grid points must share the ``[K, nres]`` tensor
+        shape, and a change point after every finish time is semantically
+        inert in both engines."""
+        pad = n_changes - self.n_changes
+        if pad <= 0:
+            return self
+        times = np.concatenate(
+            [self.times, self.times[-1] + horizon_s + 1.0 + np.arange(pad)])
+        caps = np.concatenate([self.caps, np.tile(self.caps[-1:], (pad, 1))])
+        return CapacitySchedule(times=times, caps=caps)
+
     def provisioned_node_seconds(self, horizon_s: float) -> np.ndarray:
         """[nres] integral of capacity over [0, horizon_s)."""
         edges = np.concatenate([self.times, [max(horizon_s, self.times[-1])]])

@@ -53,11 +53,23 @@ DEFAULT_P_FAIL = (0.01, 0.05, 0.02, 0.04, 0.04, 0.01)
 
 @dataclasses.dataclass(frozen=True)
 class FailureModel:
-    """Per-attempt failure probabilities by task type, modulated per framework."""
+    """Per-attempt failure probabilities by task type, modulated per framework.
+
+    ``resample_service=True`` draws a fresh service time for every *retry*
+    attempt (attempt 0 keeps the synthesized duration, so the flag is a
+    strict extension: with no failures, behavior is identical to the flag
+    being off — the parity-test escape hatch the seed behavior relied on).
+    Retries are modeled as i.i.d. mean-preserving lognormal multiples of the
+    base service time (``exp(sigma*z - sigma^2/2)``), since the synthesizer's
+    per-task duration distribution is no longer available once the workload
+    is materialized.
+    """
 
     p_fail_by_type: Tuple[float, ...] = DEFAULT_P_FAIL
     framework_mult: Tuple[float, ...] = (1.0,) * M.N_FRAMEWORKS
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    resample_service: bool = False
+    resample_sigma: float = 0.35
 
     def failure_prob(self, wl: M.Workload) -> np.ndarray:
         """[N, T] per-attempt failure probability (0 on padding)."""
@@ -85,6 +97,24 @@ class FailureModel:
                              0.0)
         fails = np.clip(fails, 0, self.retry.max_retries).astype(np.int64)
         return 1 + fails
+
+    def sample_attempt_services(self, rng: np.random.Generator,
+                                service: np.ndarray) -> np.ndarray:
+        """[N, T, A] per-attempt service times (A = max_retries + 1).
+
+        Slot 0 is the base service time unchanged; slots k >= 1 are
+        independent mean-preserving lognormal resamples. Engines index
+        attempt k at ``min(k, A-1)``, so the tensor covers every attempt the
+        truncated-geometric ``sample_attempts`` can request.
+        """
+        s = np.asarray(service, np.float64)
+        n_slots = self.retry.max_retries + 1
+        out = np.repeat(s[..., None], n_slots, axis=-1)
+        if n_slots > 1 and self.resample_sigma > 0:
+            z = rng.standard_normal(s.shape + (n_slots - 1,))
+            out[..., 1:] = s[..., None] * np.exp(
+                self.resample_sigma * z - 0.5 * self.resample_sigma ** 2)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

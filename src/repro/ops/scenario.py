@@ -29,6 +29,9 @@ class CompiledScenario:
     schedule: CapacitySchedule
     attempts: np.ndarray                      # [N, T] i64 attempts per task
     backoff: Tuple[float, float, float] = (30.0, 2.0, 1800.0)
+    # [N, T, A] per-attempt service times (retry resampling); None = every
+    # attempt re-runs with the task's base service time (seed behavior)
+    attempt_service: Optional[np.ndarray] = None
 
     @property
     def cap_times(self) -> np.ndarray:
@@ -74,15 +77,22 @@ class Scenario:
         if schedule is None:
             schedule = self.compile_schedule(platform, horizon_s, seed=seed,
                                              workload=workload, policy=policy)
+        attempt_service = None
         if self.failures is not None:
             rng = np.random.default_rng(np.random.SeedSequence([seed, 0xF0]))
             attempts = self.failures.sample_attempts(rng, workload)
             backoff = self.failures.retry.backoff
+            if self.failures.resample_service:
+                rng_svc = np.random.default_rng(
+                    np.random.SeedSequence([seed, 0xA5]))
+                attempt_service = self.failures.sample_attempt_services(
+                    rng_svc, workload.service_time(platform.datastore))
         else:
             attempts = np.ones(workload.task_type.shape, np.int64)
             backoff = RetryPolicy().backoff
         return CompiledScenario(schedule=schedule, attempts=attempts,
-                                backoff=backoff)
+                                backoff=backoff,
+                                attempt_service=attempt_service)
 
 
 def compile_static(workload: M.Workload,
@@ -93,26 +103,17 @@ def compile_static(workload: M.Workload,
                                              np.int64))
 
 
-def stack_compiled_scenarios(compiled, n_max: int, horizon_s: float) -> dict:
+def stack_compiled_scenarios(compiled, n_max: int, horizon_s: float,
+                             services=None) -> dict:
     """Pad/stack per-replica CompiledScenarios into the ``[R, ...]`` tensors
     ``vdes.simulate_ensemble`` takes (``attempts``/``cap_times``/``cap_vals``
-    /``backoff`` kwargs). Schedules of different lengths are padded with
-    no-op change points past the horizon; workloads shorter than ``n_max``
-    pad their attempts with 1."""
-    K = max(c.cap_times.shape[0] for c in compiled)
-    cts, cvs, atts, bos = [], [], [], []
-    for c in compiled:
-        pad = K - c.cap_times.shape[0]
-        cts.append(np.concatenate(
-            [c.cap_times,
-             c.cap_times[-1] + horizon_s + 1.0 + np.arange(pad)]))
-        cvs.append(np.concatenate(
-            [c.cap_vals, np.tile(c.cap_vals[-1:], (pad, 1))]))
-        a = np.asarray(c.attempts, np.int64)
-        atts.append(np.pad(a, ((0, n_max - a.shape[0]), (0, 0)),
-                           constant_values=1))
-        bos.append(np.asarray(c.backoff, np.float64))
-    return dict(attempts=np.stack(atts).astype(np.int32),
-                cap_times=np.stack(cts).astype(np.float32),
-                cap_vals=np.stack(cvs).astype(np.int32),
-                backoff=np.stack(bos).astype(np.float32))
+    /``backoff`` kwargs, plus ``attempt_service`` when any entry resamples
+    retries — ``services`` must then supply each entry's base ``[N, T]``
+    service matrix). Back-compat wrapper over
+    :func:`repro.core.batching.stack_scenarios`; per-attempt recording
+    stays OFF here (historical callers never read those tensors — pass
+    ``record_attempts=True`` to ``stack_scenarios`` directly for exact
+    retry accounting)."""
+    from repro.core.batching import stack_scenarios
+    return stack_scenarios(compiled, n_max, horizon_s, services=services,
+                           record_attempts=False)
