@@ -1,0 +1,188 @@
+"""Closed-loop control plane & fused admission sort (PR 3 acceptance).
+
+Two measurements, one report (``artifacts/BENCH_controller.json``):
+
+  1. **Closed vs open loop**: a controller-gain grid of the in-engine
+     :class:`~repro.ops.capacity.ReactiveController` (ONE batched jit+vmap
+     ``Sweep`` call) against the open-loop ``ReactiveAutoscaler`` baseline
+     (same watermarks/steps, but each point pays a serial numpy planning
+     simulation before it can run). Reports wall clocks and the achieved
+     mean waits, plus the **numpy-vs-jax drift** of the closed-loop
+     controller on the integer-time workload (must be 0.0: the controller
+     does its arithmetic in f32 in both engines).
+  2. **Fused vs chained admission sort**: the same ensemble executed with
+     the single fused ``lax.sort(num_keys=3)`` admission round vs the
+     historical 3-chained-argsort wave loop — wave throughput and speedup.
+
+``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon/replicas for CI
+(`make ci` runs this suite via ``benchmarks.run --smoke``).
+
+  PYTHONPATH=src python -m benchmarks.run controller
+  PYTHONPATH=src python benchmarks/controller_bench.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import jax
+
+from benchmarks.common import ART, fitted_params
+from repro.core import des, vdes
+from repro.core.experiment import ExperimentSpec, Sweep
+from repro.core.synthesizer import synthesize_workload
+from repro.ops import ReactiveAutoscaler, ReactiveController, Scenario
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_controller.json"))
+
+GAINS = [(0.3, 0.5, 4.0), (0.5, 0.25, 2.0), (0.8, 0.25, 2.0),
+         (1.0, 0.5, 3.0)]
+
+
+def _integer_workload(horizon_s: float):
+    """Synthesized workload snapped to integer times (arrival floor, exec
+    ceil, no IO component) so numpy f64 and JAX f32 agree exactly — the
+    drift metric is then a real parity check, not float noise."""
+    params = fitted_params()
+    wl = synthesize_workload(params, jax.random.PRNGKey(23), horizon_s)
+    wl.arrival = np.floor(wl.arrival)
+    wl.exec_time = np.ceil(wl.exec_time)
+    wl.read_bytes[:] = 0.0
+    wl.write_bytes[:] = 0.0
+    return wl
+
+
+def _controller(hw, step, mx, interval):
+    return ReactiveController(high_watermark=hw, low_watermark=0.05,
+                              step=step, min_scale=0.5, max_scale=mx,
+                              interval_s=interval)
+
+
+def _autoscaler(hw, step, mx, interval):
+    return ReactiveAutoscaler(high_watermark=hw, low_watermark=0.05,
+                              step=step, min_scale=0.5, max_scale=mx,
+                              interval_s=interval)
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.125 if smoke else 0.5) * 86400.0
+    interval = 1800.0
+    wl = _integer_workload(horizon)
+    # a deliberately tight platform: congestion is what a controller reacts
+    # to (the 48+32-slot default never queues at these horizons)
+    base = ExperimentSpec(name="ctrlbench", horizon_s=horizon, engine="jax",
+                          workload=wl).with_(
+        **{"capacity:compute_cluster": 6, "capacity:learning_cluster": 4})
+
+    # --- closed loop: the whole gain grid is ONE jit+vmap call
+    closed_axes = {"controller": [_controller(*g, interval) for g in GAINS]}
+    sw = Sweep(base, closed_axes)
+    sw.run()                                    # compile
+    t0 = time.perf_counter()
+    closed = sw.run()
+    wall_closed = time.perf_counter() - t0
+
+    # --- open loop: same gains via the planning-pass autoscaler (each grid
+    # point must first simulate serially to observe its queues)
+    open_axes = {"scenario": [
+        Scenario(name=f"auto{i}", capacity=_autoscaler(*g, interval))
+        for i, g in enumerate(GAINS)]}
+    swo = Sweep(base, open_axes)
+    swo.run()                                   # compile (same warm-up as
+    t0 = time.perf_counter()                    # the closed-loop side)
+    open_ = swo.run()
+    wall_open = time.perf_counter() - t0
+
+    wait_closed = float(np.mean([r.summary["mean_wait_s"] for r in closed]))
+    wait_open = float(np.mean([r.summary["mean_wait_s"] for r in open_]))
+
+    # --- numpy-vs-jax closed-loop drift (integer times -> must be 0.0)
+    comp = Scenario(name="drift", controller=_controller(
+        *GAINS[0], interval)).compile(wl, base.platform, horizon)
+    t_np = des.simulate(wl, base.platform, scenario=comp)
+    t_jx = vdes.simulate_to_trace(wl, base.platform, scenario=comp)
+    live = np.arange(wl.max_tasks)[None, :] < wl.n_tasks[:, None]
+    drift = float(np.max(np.abs(
+        np.where(live, np.nan_to_num(t_np.start), 0.0)
+        - np.where(live, np.nan_to_num(t_jx.start), 0.0))))
+    waves_agree = bool(t_np.waves == t_jx.waves)
+
+    # --- fused vs chained admission round (same program, same waves)
+    plat = base.platform
+    R = 2 if smoke else 4
+    svc = wl.service_time(plat.datastore).astype(np.float32)
+    cols = [np.tile(np.asarray(a)[None], (R,) + (1,) * np.asarray(a).ndim)
+            for a in (wl.arrival.astype(np.float32), wl.n_tasks, wl.task_res,
+                      svc, wl.priority)]
+    caps = np.tile(plat.capacities[None], (R, 1)).astype(np.int32)
+
+    def timed(sort):
+        args = [jax.numpy.asarray(c) for c in cols]
+        out = vdes.simulate_ensemble(*args, jax.numpy.asarray(caps),
+                                     admission_sort=sort)   # compile
+        jax.block_until_ready(out["start"])
+        t0 = time.perf_counter()
+        out = vdes.simulate_ensemble(*args, jax.numpy.asarray(caps),
+                                     admission_sort=sort)
+        jax.block_until_ready(out["start"])
+        return time.perf_counter() - t0, int(np.sum(np.asarray(out["waves"])))
+
+    wall_fused, waves_f = timed("fused")
+    wall_chained, waves_c = timed("chained")
+    assert waves_f == waves_c, "sort paths diverged"
+
+    report = {
+        "grid_points": len(GAINS),
+        "pipelines": wl.n,
+        "horizon_s": horizon,
+        "closed_loop_wall_s": wall_closed,
+        "open_loop_wall_s": wall_open,
+        "closed_vs_open_speedup_x": wall_open / max(wall_closed, 1e-12),
+        "closed_loop_mean_wait_s": wait_closed,
+        "open_loop_mean_wait_s": wait_open,
+        "numpy_vs_jax_drift": drift,
+        "waves_agree": waves_agree,
+        "fused_wall_s": wall_fused,
+        "chained_wall_s": wall_chained,
+        "fused_speedup_x": wall_chained / max(wall_fused, 1e-12),
+        "waves_total": waves_f,
+        "fused_waves_per_s": waves_f / max(wall_fused, 1e-12),
+        "chained_waves_per_s": waves_c / max(wall_chained, 1e-12),
+        "replicas": R,
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        ("controller_closed_loop_grid", wall_closed * 1e6,
+         f"{report['closed_vs_open_speedup_x']:.1f}x_vs_open"),
+        ("controller_open_loop_grid", wall_open * 1e6,
+         f"wait{wait_open:.0f}s_vs_{wait_closed:.0f}s"),
+        ("controller_drift", drift * 1e6, f"waves_agree={waves_agree}"),
+        ("admission_sort_fused", wall_fused * 1e6,
+         f"{report['fused_waves_per_s']:.0f}waves/s"),
+        ("admission_sort_chained", wall_chained * 1e6,
+         f"{report['fused_speedup_x']:.2f}x_fused_speedup"),
+    ]
+
+
+def main():
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for r in rows():
+        print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,10 +23,11 @@ SUITES = [
     ("roofline", "benchmarks.roofline"),
     ("scenarios", "benchmarks.scenario_bench"),
     ("sweep", "benchmarks.sweep_bench"),
+    ("controller", "benchmarks.controller_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
-SMOKE_SUITES = ("scenarios", "sweep")
+SMOKE_SUITES = ("scenarios", "sweep", "controller")
 
 
 def main() -> None:

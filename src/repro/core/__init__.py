@@ -21,9 +21,8 @@ The paper's contribution as a composable JAX library:
 
 from repro.core.des import POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF  # noqa: F401
 from repro.core.engines import Engine, JaxEngine, NumpyEngine, get_engine, register_engine  # noqa: F401
-from repro.core.experiment import (Experiment, ExperimentResult,  # noqa: F401
-                                   ExperimentSpec, Sweep, as_spec,
-                                   run_experiment, sweep)
+from repro.core.experiment import (ExperimentResult, ExperimentSpec,  # noqa: F401
+                                   Sweep, as_spec, run_experiment)
 from repro.core.fitting import SimulationParams, fit_simulation_params  # noqa: F401
 from repro.core.model import PlatformConfig, ResourceConfig, Workload  # noqa: F401
 from repro.core.synthesizer import synthesize_workload  # noqa: F401

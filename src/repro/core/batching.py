@@ -67,14 +67,20 @@ def stack_scenarios(compiled, n_max: int, horizon_s: float,
     """Pad/stack per-entry CompiledScenarios into the ``[B, ...]`` scenario
     kwargs of ``vdes.simulate_ensemble`` (``attempts`` / ``cap_times`` /
     ``cap_vals`` / ``backoff``, plus ``attempt_service`` and the static
-    ``n_attempt_slots`` when any entry resamples retry durations).
+    ``n_attempt_slots`` when any entry resamples retry durations,
+    ``controllers [B, C]`` when any entry carries a closed-loop
+    ControllerParams tensor, and ``fail_holds_frac [B]`` when any entry
+    shortens failing attempts).
 
     Schedules of different lengths are padded with no-op change points past
     the horizon; workloads shorter than ``n_max`` pad their attempts with 1.
     When some entries carry an ``attempt_service [N, T, A]`` tensor and
     others don't, ``services`` must supply each entry's base ``[N, T]``
     service matrix so the missing ones broadcast to "every attempt re-runs
-    at the base duration" (exactly the non-resampled semantics).
+    at the base duration" (exactly the non-resampled semantics). Entries
+    without a controller get the all-zero disabled row; entries without
+    partial-progress failures get fraction 1.0 — both exactly the
+    no-scenario semantics.
     """
     K = max(c.cap_times.shape[0] for c in compiled)
     slot_widths = [c.attempt_service.shape[2] for c in compiled
@@ -112,6 +118,26 @@ def stack_scenarios(compiled, n_max: int, horizon_s: float,
                backoff=np.stack(bos).astype(np.float32))
     if A:
         out["attempt_service"] = np.stack(asvs).astype(np.float32)
+    ctrls = [getattr(c, "controller", None) for c in compiled]
+    if any(ct is not None for ct in ctrls):
+        from repro.ops.capacity import disabled_controller
+        nres = out["cap_vals"].shape[2]
+        C = disabled_controller(nres).shape[0]
+        rows = []
+        for ct in ctrls:
+            if ct is None:
+                rows.append(disabled_controller(nres))
+            elif ct.shape != (C,):
+                raise ValueError(
+                    f"controller tensor shape {ct.shape} does not match the "
+                    f"batch's ({C},) = CTRL_HEADER + CTRL_FIELDS * {nres}")
+            else:
+                rows.append(np.asarray(ct, np.float32))
+        out["controllers"] = np.stack(rows)
+    fracs = np.array([float(getattr(c, "fail_holds_frac", 1.0))
+                      for c in compiled], np.float32)
+    if (fracs < 1.0).any():
+        out["fail_holds_frac"] = fracs
     # per-attempt recording slots (opt-out via record_attempts=False, e.g.
     # for throughput benchmarks that never read them): enough for the
     # largest requested attempt count (and every resampled slot), so
@@ -145,4 +171,5 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
         else None,
         att_finish=sl("att_finish") if with_scenario and "att_finish" in out
         else None,
+        waves=int(out["waves"][idx]) if "waves" in out else None,
     )

@@ -4,16 +4,30 @@ This is the oracle for the vectorized JAX engine: capacity-constrained
 resources with queue admission ordered by a pluggable policy
 (FIFO / PRIORITY / SJF), pipelines as sequential task chains, and — via an
 optional :class:`repro.ops.scenario.CompiledScenario` — piecewise-constant
-capacity schedules plus stochastic task failures with bounded
-exponential-backoff retries.
+capacity schedules, stochastic task failures with bounded
+exponential-backoff retries (a failing attempt holds its slot for
+``fail_holds_frac`` of its service time), and a **closed-loop controller**
+mirroring ``vdes``'s in-loop control stage.
 
 Wave semantics (shared with ``vdes``): all events at the same timestamp are
 retired together — finishes first (slots released, successor tasks become
 ready at the same instant; a failed attempt re-queues after its backoff
-delay), then arrivals/re-queues, then the pending capacity change, then one
-admission round per resource. Admission order key: (policy key, enqueue wave,
-pipeline id) — the integer wave counter (not the float timestamp) breaks
-FIFO ties, exactly as in ``vdes``.
+delay), then arrivals/re-queues, then the pending capacity change, then the
+controller evaluation (if one is due), then one admission round per
+resource. Admission order key: (policy key, enqueue wave, pipeline id) — the
+integer wave counter (not the float timestamp) breaks FIFO ties, exactly as
+in ``vdes``. The returned :class:`~repro.core.model.SimTrace` carries the
+wave count so tests can assert *wave-for-wave* parity, not just equal
+timestamps.
+
+The controller consumes the same flat ``[C]`` ControllerParams tensor as
+``vdes`` (layout below) and — deliberately — performs its arithmetic in
+**float32** even though the rest of this engine is f64: watermark
+comparisons, multiplicative steps, clamps, and cooldown tests then agree
+bit-for-bit with the JAX engine, so closed-loop runs stay parity-exact on
+integer-time workloads. Controller evaluation ticks participate in the
+next-event minimum; the evaluation grid ends at ``t_end``, which keeps the
+loop finite even when a scale-to-zero controller stalls the queue forever.
 
 A capacity decrease never preempts running jobs: the free-slot count simply
 goes negative and admission stalls until enough jobs drain.
@@ -29,6 +43,35 @@ from repro.core import model as M
 
 POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF = 0, 1, 2
 POLICY_NAMES = ["fifo", "priority", "sjf"]
+
+# ControllerParams flat-tensor layout (shared by both engines and compiled by
+# repro.ops.capacity.ReactiveController): CTRL_HEADER leading scalars
+# [interval_s, cooldown_s, t_first, t_end], then CTRL_FIELDS per resource
+# [high watermark, low watermark, step, min_cap, max_cap, base].
+CTRL_HEADER = 4
+CTRL_FIELDS = 6
+
+# THE f32 "never" sentinel, shared by every layer that must agree on it
+# bit-for-bit: vdes.INF derives from this, the numpy mirror uses it for the
+# exhausted tick grid, and ReactiveController.compile uses it for the
+# unreachable watermarks of uncontrolled resources. Finite in f32 on
+# purpose (float("inf") would poison jnp.min reductions).
+CTRL_INF = np.float32(3.0e38)
+
+
+def unpack_controller(ctrl):
+    """Decode a flat ControllerParams tensor into
+    ``(interval, cooldown, t_first, t_end, high, low, step, min_cap,
+    max_cap, base)`` — the last six are per-resource columns. Plain strided
+    slicing, so numpy and JAX arrays both work: the ONE layout decoder for
+    the parity-mirrored engines."""
+    return (ctrl[0], ctrl[1], ctrl[2], ctrl[3],
+            ctrl[CTRL_HEADER + 0::CTRL_FIELDS],
+            ctrl[CTRL_HEADER + 1::CTRL_FIELDS],
+            ctrl[CTRL_HEADER + 2::CTRL_FIELDS],
+            ctrl[CTRL_HEADER + 3::CTRL_FIELDS],
+            ctrl[CTRL_HEADER + 4::CTRL_FIELDS],
+            ctrl[CTRL_HEADER + 5::CTRL_FIELDS])
 
 
 def _policy_key(policy: int, wl: M.Workload, svc_val: float,
@@ -57,12 +100,16 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         att_svc = getattr(scenario, "attempt_service", None)
         if att_svc is not None:
             att_svc = np.asarray(att_svc, np.float64)
+        ctrl = getattr(scenario, "controller", None)
+        holds_frac = float(getattr(scenario, "fail_holds_frac", 1.0))
     else:
         cap_times = np.zeros(1, np.float64)
         cap_vals = caps.astype(np.int64)[None, :]
         attempts_req = np.ones((n, T), np.int64)
         bo_base, bo_mult, bo_cap = 0.0, 2.0, 3600.0
         att_svc = None
+        ctrl = None
+        holds_frac = 1.0
     K = cap_times.shape[0]
     # per-attempt service lookup: attempt k of a task runs
     # attempt_service[..., min(k, A_svc-1)] (falls back to the base time)
@@ -72,6 +119,22 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if att_svc is None:
             return float(service[pid, tidx])
         return float(att_svc[pid, tidx, min(k, A_svc - 1)])
+
+    # closed-loop controller state — all float32 on purpose (see module
+    # docstring): decisions must agree bit-for-bit with the JAX engine
+    f32 = np.float32
+    if ctrl is not None:
+        ctrl = np.asarray(ctrl, f32)
+        if float(ctrl[0]) <= 0.0:
+            ctrl = None
+    if ctrl is not None:
+        (c_interval, c_cooldown, c_first, c_end, c_high, c_low, c_step,
+         c_min, c_max, c_base) = unpack_controller(ctrl)
+        ctrl_cap = c_base.copy()                      # continuous state, f32
+        ctrl_tgt = np.rint(c_base).astype(np.int64)   # integer target
+        base_i = ctrl_tgt.copy()
+        t_eval = c_first if c_first <= c_end else CTRL_INF
+        t_act = -CTRL_INF
 
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
@@ -113,6 +176,10 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 free[r] -= 1
                 k = int(att[pid])
                 s = svc_of(pid, tidx, k)
+                # a failing attempt (known from the pre-sampled attempt
+                # tensor) may hold its slot for only a fraction of s
+                if holds_frac < 1.0 and k + 1 < attempts_req[pid, tidx]:
+                    s = holds_frac * s
                 start[pid, tidx] = t
                 finish[pid, tidx] = t + s
                 attempts_out[pid, tidx] += 1
@@ -125,7 +192,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     while True:
         t_heap = ev[0][0] if ev else np.inf
         t_cap = cap_times[cap_ptr] if cap_ptr < K else np.inf
-        t_star = min(t_heap, t_cap)
+        t_ctrl = float(t_eval) if ctrl is not None and t_eval < CTRL_INF \
+            else np.inf
+        t_star = min(t_heap, t_cap, t_ctrl)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
         wave_ev = []
@@ -150,6 +219,28 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if cap_ptr < K and cap_times[cap_ptr] == t_star:
             free += cap_vals[cap_ptr] - cap_vals[cap_ptr - 1]
             cap_ptr += 1
+        # ---- control stage: closed-loop evaluation tick (f32 arithmetic,
+        # mirroring vdes._control_stage operation-for-operation)
+        if ctrl is not None and float(t_eval) == t_star:
+            qlen = np.array([len(waiting[r]) for r in range(nres)], np.int64)
+            cap_eff = cap_vals[cap_ptr - 1] + ctrl_tgt - base_i
+            per_slot = qlen.astype(f32) / np.maximum(cap_eff, 1).astype(f32)
+            if f32(t_star) - t_act >= c_cooldown:
+                new_cap = np.where(
+                    per_slot > c_high, ctrl_cap * (f32(1.0) + c_step),
+                    np.where(per_slot < c_low,
+                             ctrl_cap * (f32(1.0) - c_step), ctrl_cap))
+                new_cap = np.clip(new_cap, c_min, c_max).astype(f32)
+                new_tgt = np.rint(new_cap).astype(np.int64)
+                if (new_cap != ctrl_cap).any():
+                    t_act = f32(t_star)
+                free += new_tgt - ctrl_tgt
+                ctrl_cap, ctrl_tgt = new_cap, new_tgt
+            t_nxt = f32(t_eval + c_interval)
+            # a tick that cannot advance past the f32 ulp would spin this
+            # loop forever — exhaust the grid instead (mirrored in vdes)
+            t_eval = t_nxt if (t_nxt <= c_end and t_nxt > t_eval) \
+                else CTRL_INF
         admit(t_star)
         wave += 1
         if not ev and not any(waiting):
@@ -164,6 +255,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         completed=(task_idx >= wl.n_tasks) if scenario is not None else None,
         att_start=att_start,
         att_finish=att_finish,
+        waves=wave,
     )
 
 

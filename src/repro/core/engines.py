@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import List, Protocol, Sequence, runtime_checkable
 
 import jax
@@ -141,9 +142,9 @@ class NumpyEngine:
 
     name = "numpy"
 
-    def run(self, spec, params=None):
+    def run(self, spec, params=None, _cache=None):
         t0 = time.perf_counter()
-        wls, compiled = _spec_workloads(spec, params)
+        wls, compiled = _spec_workloads(spec, params, cache=_cache)
         if spec.n_replicas == 1:
             comp = compiled[0] if compiled is not None else None
             tr = des.simulate(wls[0], spec.platform, spec.policy,
@@ -161,7 +162,10 @@ class NumpyEngine:
                                    time.perf_counter() - t0)
 
     def run_sweep(self, specs: Sequence, params=None) -> List:
-        return [self.run(s, params) for s in specs]
+        # one synthesis cache for the whole grid, matching the batched
+        # path's dedup (grid points often share every workload axis)
+        cache = {}
+        return [self.run(s, params, _cache=cache) for s in specs]
 
 
 # ---------------------------------------------------------------------------
@@ -188,15 +192,29 @@ class JaxEngine:
         """Compile the whole grid — every (point, replica) pair — into one
         ``vdes.simulate_ensemble`` call. Heterogeneous capacities ride the
         ``capacities [B, nres]`` tensor, heterogeneous schedulers the traced
-        ``policies [B]`` tensor, heterogeneous scenarios the stacked
-        schedule/attempt tensors. Requires every point to share the number
-        of resources (pad the platform if you need ragged grids)."""
+        ``policies [B]`` tensor, heterogeneous scenarios/controllers the
+        stacked schedule/attempt/ControllerParams tensors. Batching requires
+        every point to share the number of resources; a *ragged* platform
+        grid cannot lower to one rectangular batch, so it falls back to the
+        exact numpy serial loop (with a warning naming the offending grid
+        points — pad the platform to a uniform resource count to stay on
+        the batched path)."""
         t0 = time.perf_counter()
         nres = {len(s.platform.resources) for s in specs}
         if len(nres) != 1:
-            raise ValueError(
-                f"batched sweep needs a uniform resource count, got {nres}; "
-                "use the numpy engine for ragged platform grids")
+            from collections import Counter
+            counts = Counter(len(s.platform.resources) for s in specs)
+            majority = counts.most_common(1)[0][0]
+            offenders = [f"{s.name} ({len(s.platform.resources)} resources)"
+                         for s in specs
+                         if len(s.platform.resources) != majority]
+            warnings.warn(
+                "batched sweep needs a uniform resource count, got "
+                f"{sorted(nres)} (modal count {majority}; differing "
+                f"points: {offenders}); falling back to the exact numpy "
+                "serial loop for this grid (pad the platform to batch)",
+                RuntimeWarning, stacklevel=2)
+            return get_engine("numpy").run_sweep(specs, params)
 
         entries = []                     # (spec index, workload, compiled)
         wl_cache = {}   # distinct workloads synthesized once for the grid

@@ -11,14 +11,15 @@ control. Specs are inert data — execution goes through the
 .run(spec, params)``), so no caller ever branches on the backend.
 
 :class:`Sweep` composes a spec with named axes (spec fields,
-``"capacity:<resource>"`` shorthands, scenario families, policies) into a
-Cartesian grid. On the JAX engine the *entire grid* lowers through
-:mod:`repro.core.batching` into one ``jit``+``vmap`` call; the numpy engine
-falls back to an exact serial loop for long-horizon runs.
+``"capacity:<resource>"`` shorthands, scenario families, closed-loop
+``"controller"`` gains, policies) into a Cartesian grid. On the JAX engine
+the *entire grid* lowers through :mod:`repro.core.batching` into one
+``jit``+``vmap`` call; the numpy engine falls back to an exact serial loop
+for long-horizon runs.
 
-The legacy two-resource :class:`Experiment` dataclass and the
-``sweep(base, params, grid)`` helper remain as a deprecation shim for one
-release — see the README migration guide.
+The legacy two-resource ``Experiment`` dataclass and the
+``sweep(base, params, grid)`` helper (deprecated in the previous release)
+have been removed — see the README migration guide.
 """
 from __future__ import annotations
 
@@ -26,7 +27,6 @@ import dataclasses
 import itertools
 import json
 import os
-import warnings
 from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
@@ -35,6 +35,8 @@ from repro.core import des, trace
 from repro.core import model as M
 from repro.core.fitting import SimulationParams
 from repro.ops.scenario import Scenario
+
+_UNSET = object()   # sentinel: "controller" axis absent vs explicitly None
 
 
 @dataclasses.dataclass
@@ -64,9 +66,14 @@ class ExperimentSpec:
 
     def with_(self, **kw) -> "ExperimentSpec":
         """Functional update (``dataclasses.replace`` with axis shorthands):
-        plain field names, or ``**{"capacity:<resource>": n}`` to resize one
-        pool of the platform."""
+        plain field names, ``**{"capacity:<resource>": n}`` to resize one
+        pool of the platform, or ``controller=<ReactiveController>`` to set
+        the closed-loop controller on the spec's scenario (creating an
+        otherwise-empty scenario if the spec has none). ``controller`` is
+        applied after every other key, so combining it with a ``scenario``
+        axis composes the same way regardless of kwarg order."""
         out = self
+        ctrl = kw.pop("controller", _UNSET)
         for k, v in kw.items():
             if k.startswith("capacity:"):
                 out = dataclasses.replace(
@@ -74,6 +81,12 @@ class ExperimentSpec:
                         k.split(":", 1)[1], v))
             else:
                 out = dataclasses.replace(out, **{k: v})
+        if ctrl is not _UNSET and not (ctrl is None and out.scenario is None):
+            # (a None controller on a scenario-less spec stays pristine)
+            sc = out.scenario if out.scenario is not None \
+                else Scenario(name="controller")
+            out = dataclasses.replace(
+                out, scenario=dataclasses.replace(sc, controller=ctrl))
         return out
 
     def to_spec(self) -> "ExperimentSpec":
@@ -81,59 +94,8 @@ class ExperimentSpec:
 
 
 def as_spec(exp) -> "ExperimentSpec":
-    """Normalize an :class:`ExperimentSpec` or legacy :class:`Experiment`."""
+    """Normalize anything exposing ``to_spec`` to an :class:`ExperimentSpec`."""
     return exp.to_spec()
-
-
-@dataclasses.dataclass
-class Experiment:
-    """DEPRECATED two-resource shim over :class:`ExperimentSpec`.
-
-    Kept for one release: constructing it warns, and every runner accepts it
-    by converting through :meth:`to_spec`. Migrate::
-
-        Experiment(name="x", learning_capacity=16, ...)
-        # ->
-        ExperimentSpec(name="x",
-                       platform=PlatformConfig().with_capacity(
-                           "learning_cluster", 16), ...)
-    """
-
-    name: str
-    horizon_s: float = 7 * 24 * 3600.0
-    interarrival_factor: float = 1.0
-    compute_capacity: int = 48
-    learning_capacity: int = 32
-    policy: int = des.POLICY_FIFO
-    seed: int = 0
-    n_replicas: int = 1
-    engine: str = "numpy"  # "numpy" | "jax"
-    scenario: Optional[Scenario] = None
-    compute_cost_per_node_hour: float = 1.0
-    learning_cost_per_node_hour: float = 3.0
-
-    def __post_init__(self):
-        warnings.warn(
-            "Experiment is deprecated; use ExperimentSpec with a full "
-            "PlatformConfig (see the README migration guide)",
-            DeprecationWarning, stacklevel=3)
-
-    def platform(self) -> M.PlatformConfig:
-        return M.PlatformConfig(resources=(
-            M.ResourceConfig("compute_cluster", self.compute_capacity,
-                             self.compute_cost_per_node_hour),
-            M.ResourceConfig("learning_cluster", self.learning_capacity,
-                             self.learning_cost_per_node_hour),
-        ))
-
-    def to_spec(self) -> ExperimentSpec:
-        return ExperimentSpec(
-            name=self.name, platform=self.platform(),
-            horizon_s=self.horizon_s,
-            interarrival_factor=self.interarrival_factor,
-            policy=self.policy, seed=self.seed,
-            n_replicas=self.n_replicas, engine=self.engine,
-            scenario=self.scenario)
 
 
 @dataclasses.dataclass
@@ -167,7 +129,7 @@ def _json_default(x):
 
 def run_experiment(exp, params: Optional[SimulationParams] = None
                    ) -> ExperimentResult:
-    """Run one experiment (spec or legacy shim) on its declared engine."""
+    """Run one experiment spec on its declared engine."""
     from repro.core.engines import get_engine
     spec = as_spec(exp)
     res = get_engine(spec.engine).run(spec, params)
@@ -189,15 +151,26 @@ class Sweep:
 
     ``axes`` maps axis names to value lists. An axis name is either a spec
     field (``interarrival_factor``, ``policy``, ``scenario``, ``seed``,
-    ``platform``, ...) or the shorthand ``"capacity:<resource name>"``
-    which resizes one pool of the platform — the replacement for the legacy
-    two-capacity fields that works for any resource count.
+    ``platform``, ...), the shorthand ``"capacity:<resource name>"`` which
+    resizes one pool of the platform (works for any resource count), or
+    ``"controller"`` — a list of
+    :class:`~repro.ops.capacity.ReactiveController` gains (or None) set on
+    each point's scenario, so a closed-loop controller-gain grid lowers to
+    one batched call.
 
     ``run`` dispatches through the Engine protocol: on the JAX engine the
     whole grid (heterogeneous capacities, interarrival factors, policies,
-    and per-point operational scenarios, times ``n_replicas`` Monte-Carlo
-    replicas each) executes as a single ``jit``+``vmap``
-    ``simulate_ensemble`` call; the numpy engine runs an exact serial loop.
+    controller gains, and per-point operational scenarios, times
+    ``n_replicas`` Monte-Carlo replicas each) executes as a single
+    ``jit``+``vmap`` ``simulate_ensemble`` call; the numpy engine runs an
+    exact serial loop.
+
+    Batching requires a uniform resource count across grid points: a
+    *ragged* platform grid (e.g. a ``"platform"`` axis mixing 2- and
+    3-resource platforms) cannot form one rectangular batch, so the JAX
+    engine emits a ``RuntimeWarning`` naming the offending points and falls
+    back to the exact numpy serial loop for that grid. Pad platforms to a
+    common resource set to stay on the batched path.
     """
 
     base: ExperimentSpec
@@ -228,20 +201,3 @@ class Sweep:
                     [specs[i] for i in idx], params)):
                 results[i] = r
         return results
-
-
-def sweep(base, params: Optional[SimulationParams],
-          grid: Dict[str, List]) -> List[ExperimentResult]:
-    """Legacy serial sweep (kept for one release): a Python loop of
-    ``run_experiment`` over ``dataclasses.replace`` mutations of ``base``.
-    Prefer ``Sweep(base, axes).run(params)``, which lowers the grid to one
-    batched SPMD call on the JAX engine."""
-    names = list(grid)
-    results = []
-    for combo in itertools.product(*[grid[k] for k in names]):
-        exp = dataclasses.replace(base, **dict(zip(names, combo)))
-        exp = dataclasses.replace(
-            exp, name=f"{base.name}/" + ",".join(
-                f"{k}={_fmt_axis_value(v)}" for k, v in zip(names, combo)))
-        results.append(run_experiment(exp, params))
-    return results

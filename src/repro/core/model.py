@@ -206,6 +206,10 @@ class SimTrace:
     # under heavy retry instead of the duration*attempts approximation
     att_start: Optional[np.ndarray] = None
     att_finish: Optional[np.ndarray] = None
+    # engine wave-loop iteration count (None = engine predates wave
+    # reporting); both engines retire events in identical waves, so tests
+    # assert *wave-for-wave* parity with this, not just equal timestamps
+    waves: Optional[int] = None
 
     @property
     def wait(self) -> np.ndarray:

@@ -1,29 +1,58 @@
 """Vectorized discrete-event engine in pure JAX (DESIGN.md §3).
 
 State is a struct-of-arrays over pipelines; a ``lax.while_loop`` advances the
-global clock to the next event time and retires *all* events at that instant
-(finish -> release -> advance/retry -> enqueue, arrivals -> enqueue, pending
-capacity change, then one ranked admission round per resource). Semantics
-match ``repro.core.des`` exactly (same wave ordering, same
-FIFO/PRIORITY/SJF keys), verified by tests on integer-time workloads —
-including under operational scenarios:
+global clock to the next event time and retires *all* events at that instant.
+Each loop iteration (a **wave**) is composed of four named kernel stages:
+
+  1. **event selection** (``_select_events``): the global next-event time
+     ``t_star`` is the minimum over pending task events, the next scheduled
+     capacity change, and the next controller evaluation tick;
+  2. **completion/retry** (``_completion_stage``): finishes release slots,
+     successful attempts advance the pipeline, failed attempts re-enter the
+     arrival path after a deterministic bounded exponential backoff
+     ``min(base * mult**k, cap)``; arrivals and successor tasks enqueue;
+  3. **control** (``_control_stage``): the pending piecewise-constant
+     capacity change applies, then the *closed-loop controller* (if
+     configured) observes the live queue lengths and adjusts capacity —
+     entirely inside the jitted loop, no Python-level replanning;
+  4. **admission** (``_admission_stage``): one ranked admission round per
+     resource via a single fused lexicographic ``lax.sort`` over
+     ``(resource, policy key, enqueue wave)`` keys (``num_keys=3``) —
+     replacing three chained stable argsorts (kept as the ``"chained"``
+     reference path for equivalence tests and benchmarks).
+
+Semantics match ``repro.core.des`` exactly — same wave ordering, same
+FIFO/PRIORITY/SJF keys — verified wave-for-wave by tests on integer-time
+workloads, including under operational scenarios:
 
   - **capacity schedules**: a time-indexed ``[K, nres]`` tensor of
-    piecewise-constant capacities; the next change time participates in the
-    global next-event minimum, and the delta is applied to the free-slot
-    vector before the admission round (decreases never preempt — free goes
-    negative and admission stalls until jobs drain);
+    piecewise-constant capacities; decreases never preempt — free goes
+    negative and admission stalls until jobs drain;
+  - **closed-loop controller**: a flat ``[C]`` ``ControllerParams`` tensor
+    (see :func:`repro.ops.capacity.ReactiveController.compile`; layout
+    ``[interval, cooldown, t_first, t_end]`` then per-resource
+    ``[high, low, step, min_cap, max_cap, base]``). At every evaluation tick
+    the controller compares the queued-jobs-per-effective-slot ratio against
+    the per-resource watermarks and scales its continuous capacity state
+    multiplicatively (clamped to ``[min_cap, max_cap]``); the rounded integer
+    target composes with the schedule as a *delta*: effective capacity =
+    schedule(t) + (target - base). Any movement of the continuous state
+    starts the cooldown window, during which evaluations are suppressed.
+    Controller arithmetic is float32 in BOTH engines, so decisions agree
+    bit-for-bit. Evaluations stop after ``t_end``, which bounds the loop
+    even when a scale-to-zero controller stalls the queue forever;
   - **failure/retry injection**: a pre-sampled ``attempts[N, T]`` tensor
-    (every random draw happens outside the jitted function); a failed attempt
-    holds its slot for the full service time, then re-enters the arrival path
-    after a deterministic bounded exponential backoff
-    ``min(base * mult**k, cap)``.
+    (every random draw happens outside the jitted function). A failing
+    attempt holds its slot for ``fail_holds_frac * service`` (default 1.0:
+    the full service time — partial-progress failures model a task that
+    crashes part-way through).
 
 Because the function stays pure jnp, it can be ``jax.vmap``-ed over a replica
 axis and ``jax.jit``-ed / sharded — the TPU-native payoff: Monte-Carlo
 ensembles of *operational scenarios* (per-replica capacity schedules,
-failure draws, and backoff constants) run as one SPMD program (see
-``benchmarks/scenario_bench.py`` and ``examples/autoscaling_scenarios.py``).
+controller gains, failure draws, and backoff constants) run as one SPMD
+program (see ``benchmarks/controller_bench.py`` and
+``examples/autoscaling_scenarios.py``).
 
 Time is float32; recommended horizons <= ~30 days keep the clock ulp below
 0.5 s (DESIGN.md §3 numerics note). FIFO ordering never depends on float
@@ -40,9 +69,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
-from repro.core.des import POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF
+from repro.core.des import (CTRL_FIELDS, CTRL_HEADER, CTRL_INF, POLICY_FIFO,
+                            POLICY_PRIORITY, POLICY_SJF, unpack_controller)
 
-INF = jnp.float32(3.0e38)
+INF = jnp.float32(CTRL_INF)   # the ONE shared f32 "never" sentinel
 
 # phases
 _NOT_ARRIVED, _QUEUED, _RUNNING, _DONE = 0, 1, 2, 3
@@ -91,14 +121,42 @@ def _cummax(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.associative_scan(jnp.maximum, x)
 
 
-@partial(jax.jit, static_argnames=("policy", "n_attempt_slots"))
+def admission_order(res_q: jnp.ndarray, pkey: jnp.ndarray,
+                    enq_wave: jnp.ndarray) -> tuple:
+    """Fused admission ranking: ONE stable lexicographic ``lax.sort`` over
+    the stacked ``(resource, policy key, enqueue wave)`` keys
+    (``num_keys=3``; pipeline-id ties resolved by sort stability). Returns
+    ``(sorted resource column, permutation)``."""
+    n = res_q.shape[0]
+    r_s, _, _, o = jax.lax.sort(
+        (res_q, pkey, enq_wave, jnp.arange(n, dtype=jnp.int32)),
+        num_keys=3, is_stable=True)
+    return r_s, o
+
+
+def admission_order_chained(res_q: jnp.ndarray, pkey: jnp.ndarray,
+                            enq_wave: jnp.ndarray) -> tuple:
+    """Reference ranking: three chained stable argsorts (the pre-fusion
+    implementation) — kept for equivalence tests and the
+    ``benchmarks/controller_bench.py`` fused-vs-chained comparison."""
+    o = jnp.argsort(enq_wave, stable=True)
+    o = o[jnp.argsort(pkey[o], stable=True)]
+    o = o[jnp.argsort(res_q[o], stable=True)]
+    return res_q[o], o
+
+
+@partial(jax.jit,
+         static_argnames=("policy", "n_attempt_slots", "admission_sort"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
              backoff=None,
              attempt_service: Optional[jnp.ndarray] = None,
              policy_dyn: Optional[jnp.ndarray] = None,
-             n_attempt_slots: Optional[int] = None):
+             n_attempt_slots: Optional[int] = None,
+             controller: Optional[jnp.ndarray] = None,
+             fail_holds_frac=None,
+             admission_sort: str = "fused"):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
@@ -115,10 +173,22 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     ``n_attempt_slots = A`` the engine also records per-attempt
     ``att_start``/``att_finish [N, T, A]`` tensors (NaN where the attempt
     never ran) for exact utilization/cost accounting under heavy retry.
+
+    ``controller`` is a flat ``[C]`` ControllerParams tensor (see module
+    docstring; ``C = CTRL_HEADER + CTRL_FIELDS * nres``) driving closed-loop
+    queue-reactive scaling inside the loop. ``fail_holds_frac`` (traced
+    scalar, default None = 1.0) makes a *failing* attempt hold its slot for
+    only that fraction of its service time. ``admission_sort`` selects the
+    fused ``lax.sort`` ranking (default) or the ``"chained"`` 3-argsort
+    reference.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
         raise ValueError("cap_times and cap_vals must be given together")
+    if admission_sort not in ("fused", "chained"):
+        raise ValueError(f"unknown admission_sort {admission_sort!r}")
+    rank = (admission_order if admission_sort == "fused"
+            else admission_order_chained)
     if cap_times is None:
         cap_times = jnp.zeros((1,), jnp.float32)
         cap_vals = jnp.asarray(capacities, jnp.int32)[None, :]
@@ -130,6 +200,14 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     att_req = (jnp.ones((n, T), jnp.int32) if vwl.attempts is None
                else jnp.maximum(jnp.asarray(vwl.attempts, jnp.int32), 1))
     ids = jnp.arange(n, dtype=jnp.int32)
+
+    has_ctrl = controller is not None
+    if has_ctrl:
+        ctrl = jnp.asarray(controller, jnp.float32)
+        (c_interval, c_cooldown, c_first, c_end, c_high, c_low, c_step,
+         c_min, c_max, c_base) = unpack_controller(ctrl)
+        c_enabled = c_interval > 0.0
+        base_i = jnp.round(c_base).astype(jnp.int32)
 
     state = dict(
         phase=jnp.full((n,), _NOT_ARRIVED, jnp.int32),
@@ -150,35 +228,44 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                       jnp.float32)
         state["att_finish"] = jnp.full((n, T, n_attempt_slots), jnp.nan,
                                        jnp.float32)
+    if has_ctrl:
+        state["ctrl_cap"] = c_base                       # continuous, f32
+        state["ctrl_tgt"] = base_i                       # integer target
+        state["t_eval"] = jnp.where(c_enabled & (c_first <= c_end),
+                                    c_first, INF)
+        state["t_act"] = -INF                            # last action time
 
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
                          INF)
 
-    def cond(s):
-        t_star = jnp.minimum(jnp.min(s["t_next"]),
-                             next_cap_time(s["cap_idx"]))
-        # exit when everything is done OR nothing can ever happen again
-        # (e.g. capacity held at zero past the end of the schedule)
-        return jnp.any(s["phase"] != _DONE) & (t_star < INF)
+    # ------------------------------------------------------------ stages
 
-    def body(s):
-        phase, task_idx, t_next = s["phase"], s["task_idx"], s["t_next"]
+    def _select_events(s):
+        """Stage 1: the global next-event time. Task events, the next
+        scheduled capacity change, and the next controller tick all
+        participate in the minimum."""
         t_cap = next_cap_time(s["cap_idx"])
-        t_star = jnp.minimum(jnp.min(t_next), t_cap)
+        t_star = jnp.minimum(jnp.min(s["t_next"]), t_cap)
+        if has_ctrl:
+            t_star = jnp.minimum(t_star, s["t_eval"])
+        return t_star, t_cap
 
+    def _completion_stage(s, t_star):
+        """Stage 2: finishes release slots; failed attempts re-enter the
+        arrival path after their backoff delay; successful ones advance the
+        pipeline; arrivals and successor tasks enqueue."""
+        s = dict(s)
+        phase, task_idx, t_next = s["phase"], s["task_idx"], s["t_next"]
         finishing = (phase == _RUNNING) & (t_next == t_star)
         arriving = (phase == _NOT_ARRIVED) & (t_next == t_star)
 
-        # release slots held by finishing jobs
         tcl0 = jnp.clip(task_idx, 0, T - 1)
         res_now = vwl.task_res[ids, tcl0]
         freed = jax.ops.segment_sum(finishing.astype(jnp.int32), res_now,
                                     num_segments=nres)
-        free = s["free"] + freed
+        s["free"] = s["free"] + freed
 
-        # failed attempts re-enter the arrival path after a backoff delay;
-        # successful ones advance the pipeline
         att = s["attempt"]
         retrying = finishing & (att + 1 < att_req[ids, tcl0])
         succeeding = finishing & ~retrying
@@ -189,26 +276,73 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                         jnp.where(succeeding, 0, att))
         done_now = succeeding & (task_idx >= vwl.n_tasks)
         to_queue = (succeeding & ~done_now) | arriving
-        phase = jnp.where(done_now, _DONE,
-                          jnp.where(to_queue, _QUEUED,
-                                    jnp.where(retrying, _NOT_ARRIVED, phase)))
-        t_next = jnp.where(succeeding | arriving, INF,
-                           jnp.where(retrying, t_star + delay, t_next))
-        enq_wave = jnp.where(to_queue, s["wave"], s["enq_wave"])
+        s["phase"] = jnp.where(
+            done_now, _DONE,
+            jnp.where(to_queue, _QUEUED,
+                      jnp.where(retrying, _NOT_ARRIVED, phase)))
+        s["t_next"] = jnp.where(succeeding | arriving, INF,
+                                jnp.where(retrying, t_star + delay, t_next))
+        s["enq_wave"] = jnp.where(to_queue, s["wave"], s["enq_wave"])
+        s["task_idx"], s["attempt"] = task_idx, att
 
         tcl = jnp.clip(task_idx, 0, T - 1)
-        ready = s["ready"].at[ids, tcl].set(
+        s["ready"] = s["ready"].at[ids, tcl].set(
             jnp.where(to_queue, t_star, s["ready"][ids, tcl]))
+        return s
 
-        # pending capacity change applies before the admission round
+    def _control_stage(s, t_star, t_cap):
+        """Stage 3: the pending scheduled capacity change applies, then the
+        closed-loop controller observes live queue lengths and adjusts
+        capacity — all before the admission round."""
+        s = dict(s)
         cap_changing = (t_cap == t_star) & (s["cap_idx"] < K)
         hi = jnp.clip(s["cap_idx"], 0, K - 1)
         lo = jnp.clip(s["cap_idx"] - 1, 0, K - 1)
-        free = free + jnp.where(cap_changing, cap_vals[hi] - cap_vals[lo], 0)
+        free = s["free"] + jnp.where(cap_changing, cap_vals[hi] - cap_vals[lo],
+                                     0)
         cap_idx = s["cap_idx"] + cap_changing.astype(jnp.int32)
+        if has_ctrl:
+            firing = c_enabled & (s["t_eval"] == t_star)
+            queued = s["phase"] == _QUEUED
+            tcl = jnp.clip(s["task_idx"], 0, T - 1)
+            res_q = jnp.where(queued, vwl.task_res[ids, tcl], nres)
+            qlen = jax.ops.segment_sum(queued.astype(jnp.int32), res_q,
+                                       num_segments=nres + 1)[:nres]
+            sched_now = cap_vals[jnp.clip(cap_idx - 1, 0, K - 1)]
+            cap_eff = sched_now + s["ctrl_tgt"] - base_i
+            per_slot = (qlen.astype(jnp.float32)
+                        / jnp.maximum(cap_eff, 1).astype(jnp.float32))
+            can_act = firing & (t_star - s["t_act"] >= c_cooldown)
+            cap_f = s["ctrl_cap"]
+            new_cap = jnp.where(
+                per_slot > c_high, cap_f * (jnp.float32(1.0) + c_step),
+                jnp.where(per_slot < c_low,
+                          cap_f * (jnp.float32(1.0) - c_step), cap_f))
+            new_cap = jnp.where(can_act, jnp.clip(new_cap, c_min, c_max),
+                                cap_f)
+            new_tgt = jnp.round(new_cap).astype(jnp.int32)
+            changed = can_act & jnp.any(new_cap != cap_f)
+            free = free + (new_tgt - s["ctrl_tgt"])
+            s["ctrl_cap"], s["ctrl_tgt"] = new_cap, new_tgt
+            s["t_act"] = jnp.where(changed, t_star, s["t_act"])
+            # a tick that cannot advance past the f32 ulp would spin the
+            # wave loop forever — exhaust the grid instead (numpy mirrors)
+            t_nxt = s["t_eval"] + c_interval
+            s["t_eval"] = jnp.where(
+                firing,
+                jnp.where((t_nxt > c_end) | (t_nxt <= s["t_eval"]),
+                          INF, t_nxt),
+                s["t_eval"])
+        s["free"], s["cap_idx"] = free, cap_idx
+        return s
 
-        # ------------------------------------------------ admission round
-        queued = phase == _QUEUED
+    def _admission_stage(s, t_star):
+        """Stage 4: one ranked admission round per resource (fused
+        lexicographic sort), recording start/finish for admitted attempts."""
+        s = dict(s)
+        att, task_idx = s["attempt"], s["task_idx"]
+        tcl = jnp.clip(task_idx, 0, T - 1)
+        queued = s["phase"] == _QUEUED
         res_q = jnp.where(queued, vwl.task_res[ids, tcl], nres)  # sentinel
         if attempt_service is None:
             svc = vwl.service[ids, tcl]
@@ -226,45 +360,63 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         else:
             pkey = jnp.zeros((n,), jnp.float32)
 
-        # lexicographic stable sort: pid (implicit) -> enq_wave -> pkey -> res
-        o = jnp.argsort(enq_wave, stable=True)
-        o = o[jnp.argsort(pkey[o], stable=True)]
-        o = o[jnp.argsort(res_q[o], stable=True)]
-        r_s = res_q[o]
+        # lexicographic stable ranking: res -> pkey -> enq_wave -> pid
+        r_s, o = rank(res_q, pkey, s["enq_wave"])
         pos = jnp.arange(n, dtype=jnp.int32)
         is_start = jnp.concatenate([jnp.array([True]), r_s[1:] != r_s[:-1]])
         seg_start = _cummax(jnp.where(is_start, pos, -1))
-        rank = pos - seg_start
-        free_ext = jnp.concatenate([free, jnp.zeros((1,), jnp.int32)])
-        admit_sorted = rank < free_ext[r_s]
+        seat = pos - seg_start
+        free_ext = jnp.concatenate([s["free"], jnp.zeros((1,), jnp.int32)])
+        admit_sorted = seat < free_ext[r_s]
         admitted = jnp.zeros((n,), bool).at[o].set(admit_sorted) & queued
 
-        t_fin = t_star + svc
-        t_next = jnp.where(admitted, t_fin, t_next)
-        phase = jnp.where(admitted, _RUNNING, phase)
-        start = s["start"].at[ids, tcl].set(
+        # a failing attempt (known at admission from the pre-sampled attempt
+        # tensor) may hold its slot for only a fraction of the service time
+        if fail_holds_frac is None:
+            dur = svc
+        else:
+            will_fail = (att + 1) < att_req[ids, tcl]
+            dur = jnp.where(will_fail,
+                            jnp.asarray(fail_holds_frac, jnp.float32) * svc,
+                            svc)
+        t_fin = t_star + dur
+        s["t_next"] = jnp.where(admitted, t_fin, s["t_next"])
+        s["phase"] = jnp.where(admitted, _RUNNING, s["phase"])
+        s["start"] = s["start"].at[ids, tcl].set(
             jnp.where(admitted, t_star, s["start"][ids, tcl]))
-        finish = s["finish"].at[ids, tcl].set(
+        s["finish"] = s["finish"].at[ids, tcl].set(
             jnp.where(admitted, t_fin, s["finish"][ids, tcl]))
         # executed attempts (matches the numpy engine's attempts_out: a task
         # stranded mid-retry reports the admissions that actually happened)
-        att_out = s["att_out"].at[ids, tcl].add(admitted.astype(jnp.int32))
+        s["att_out"] = s["att_out"].at[ids, tcl].add(admitted.astype(jnp.int32))
         # res_q of admitted jobs is < nres by construction (sentinel never admits)
         taken = jax.ops.segment_sum(admitted.astype(jnp.int32), res_q,
                                     num_segments=nres + 1)[:nres]
-        free = free - taken
-
-        nxt = dict(phase=phase, task_idx=task_idx, t_next=t_next,
-                   enq_wave=enq_wave, attempt=att, free=free,
-                   cap_idx=cap_idx, wave=s["wave"] + 1,
-                   start=start, finish=finish, ready=ready, att_out=att_out)
+        s["free"] = s["free"] - taken
         if n_attempt_slots is not None:
             ka = jnp.clip(att, 0, n_attempt_slots - 1)
-            nxt["att_start"] = s["att_start"].at[ids, tcl, ka].set(
+            s["att_start"] = s["att_start"].at[ids, tcl, ka].set(
                 jnp.where(admitted, t_star, s["att_start"][ids, tcl, ka]))
-            nxt["att_finish"] = s["att_finish"].at[ids, tcl, ka].set(
+            s["att_finish"] = s["att_finish"].at[ids, tcl, ka].set(
                 jnp.where(admitted, t_fin, s["att_finish"][ids, tcl, ka]))
-        return nxt
+        return s
+
+    # -------------------------------------------------------- wave loop
+
+    def cond(s):
+        t_star, _ = _select_events(s)
+        # exit when everything is done OR nothing can ever happen again
+        # (e.g. capacity held at zero past the end of the schedule and the
+        # controller's evaluation grid is exhausted)
+        return jnp.any(s["phase"] != _DONE) & (t_star < INF)
+
+    def body(s):
+        t_star, t_cap = _select_events(s)
+        s = _completion_stage(s, t_star)
+        s = _control_stage(s, t_star, t_cap)
+        s = _admission_stage(s, t_star)
+        s["wave"] = s["wave"] + 1
+        return s
 
     out = jax.lax.while_loop(cond, body, state)
     res = dict(start=out["start"], finish=out["finish"], ready=out["ready"],
@@ -285,6 +437,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
     if scenario is not None:
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
         att_svc = getattr(scenario, "attempt_service", None)
+        ctrl = getattr(scenario, "controller", None)
+        frac = float(getattr(scenario, "fail_holds_frac", 1.0))
         slots = int(max(np.max(scenario.attempts), 1,
                         att_svc.shape[2] if att_svc is not None else 1))
         if slots == 1:   # no retries: single-attempt records already exact
@@ -295,7 +449,10 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
                        backoff=jnp.asarray(scenario.backoff, jnp.float32),
                        attempt_service=None if att_svc is None
                        else jnp.asarray(att_svc, jnp.float32),
-                       n_attempt_slots=slots)
+                       n_attempt_slots=slots,
+                       controller=None if ctrl is None
+                       else jnp.asarray(ctrl, jnp.float32),
+                       fail_holds_frac=None if frac >= 1.0 else frac)
         caps0 = np.asarray(scenario.cap_vals[0], np.int64)
         attempts = np.asarray(res["attempts"], np.int64)
         completed = np.asarray(res["done"])
@@ -320,6 +477,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         completed=completed,
         att_start=att_start,
         att_finish=att_finish,
+        waves=int(res["waves"]),
     )
 
 
@@ -327,24 +485,30 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 # Monte-Carlo ensembles: vmap over a replica axis. Tensors must share shapes.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("policy", "n_attempt_slots"))
+@partial(jax.jit,
+         static_argnames=("policy", "n_attempt_slots", "admission_sort"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
                       backoff=None, policies=None, attempt_service=None,
-                      n_attempt_slots: Optional[int] = None):
+                      n_attempt_slots: Optional[int] = None,
+                      controllers=None, fail_holds_frac=None,
+                      admission_sort: str = "fused"):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
     ``cap_times [R, K]`` / ``cap_vals [R, K, nres]``, ``backoff [R, 3]``,
-    ``attempt_service [R, N, T, A]`` (per-attempt resampled service times) —
-    let one SPMD call A/B capacity-planning *and* autoscaler/failure
-    scenarios across the replica axis. ``policies [R]`` (i32) assigns a
-    (possibly different) admission policy per replica via the traced
-    ``policy_dyn`` path, so a whole experiment grid — capacities,
-    scenarios, *and* schedulers — lowers to this one jit+vmap call.
-    ``n_attempt_slots`` (static) turns on per-attempt start/finish
-    recording.
+    ``attempt_service [R, N, T, A]`` (per-attempt resampled service times),
+    ``controllers [R, C]`` (closed-loop ControllerParams rows; an all-zero
+    row disables the controller for that replica), ``fail_holds_frac [R]``
+    (slot-holding fraction of failing attempts) — let one SPMD call A/B
+    capacity-planning *and* autoscaler/controller/failure scenarios across
+    the replica axis. ``policies [R]`` (i32) assigns a (possibly different)
+    admission policy per replica via the traced ``policy_dyn`` path, so a
+    whole experiment grid — capacities, scenarios, controller gains, *and*
+    schedulers — lowers to this one jit+vmap call. ``n_attempt_slots``
+    (static) turns on per-attempt start/finish recording;
+    ``admission_sort`` (static) selects the fused or chained ranking.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -369,6 +533,10 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         mapped["policy_dyn"] = jnp.asarray(policies, jnp.int32)
     if attempt_service is not None:
         mapped["attempt_service"] = jnp.asarray(attempt_service, jnp.float32)
+    if controllers is not None:
+        mapped["controllers"] = jnp.asarray(controllers, jnp.float32)
+    if fail_holds_frac is not None:
+        mapped["fail_holds_frac"] = jnp.asarray(fail_holds_frac, jnp.float32)
 
     def one(m):
         vwl = VWorkload(m["arrival"], m["n_tasks"], m["task_res"],
@@ -378,6 +546,9 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         backoff=m["backoff"],
                         attempt_service=m.get("attempt_service"),
                         policy_dyn=m.get("policy_dyn"),
-                        n_attempt_slots=n_attempt_slots)
+                        n_attempt_slots=n_attempt_slots,
+                        controller=m.get("controllers"),
+                        fail_holds_frac=m.get("fail_holds_frac"),
+                        admission_sort=admission_sort)
 
     return jax.vmap(one)(mapped)

@@ -4,8 +4,9 @@ from repro.ops.accounting import (SLOConfig, busy_node_seconds, capacity_cost,
                                   pipeline_spans, scenario_summary,
                                   slo_metrics)
 from repro.ops.capacity import (CapacitySchedule, MaintenanceWindows,
-                                ReactiveAutoscaler, ScheduledAutoscaler,
-                                StaticCapacity, apply_capacity_deltas,
+                                ReactiveAutoscaler, ReactiveController,
+                                ScheduledAutoscaler, StaticCapacity,
+                                apply_capacity_deltas, disabled_controller,
                                 normalize, static_schedule)
 from repro.ops.failures import FailureModel, OutageModel, RetryPolicy
 from repro.ops.scenario import (CompiledScenario, Scenario, compile_static,
@@ -13,8 +14,9 @@ from repro.ops.scenario import (CompiledScenario, Scenario, compile_static,
 
 __all__ = [
     "CapacitySchedule", "StaticCapacity", "MaintenanceWindows",
-    "ScheduledAutoscaler", "ReactiveAutoscaler", "static_schedule",
-    "normalize", "apply_capacity_deltas",
+    "ScheduledAutoscaler", "ReactiveAutoscaler", "ReactiveController",
+    "static_schedule", "normalize", "apply_capacity_deltas",
+    "disabled_controller",
     "FailureModel", "OutageModel", "RetryPolicy",
     "SLOConfig", "busy_node_seconds", "capacity_cost", "pipeline_spans",
     "scenario_summary", "slo_metrics",

@@ -13,6 +13,14 @@ walks it with a pointer in its event loop, the JAX engine indexes it as a
     baseline simulation of the same workload (open-loop approximation of a
     closed-loop autoscaler; iterate ``n_iters`` for a fixed point).
 
+:class:`ReactiveController` is the *closed-loop* counterpart: it does not
+produce a schedule at all. It compiles to a flat ``[C]`` ControllerParams
+tensor that both DES engines evaluate **inside** their wave loops, reacting
+to live queue lengths with no pre-planned trajectory (capacity = schedule
+baseline + controller delta). Controller tensors batch per-replica
+(``[R, C]``) through :func:`repro.core.batching.stack_scenarios`, so a
+controller-gain grid lowers to one ``jit``+``vmap`` call.
+
 Node-outage injection (see :mod:`repro.ops.failures`) composes onto any policy
 schedule via :func:`apply_capacity_deltas`.
 """
@@ -22,6 +30,8 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.des import CTRL_FIELDS, CTRL_HEADER, CTRL_INF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,3 +249,101 @@ class ReactiveAutoscaler:
                 caps[b, r] = max(round(cap[r]), 1)
         times = np.arange(nbins) * self.interval_s
         return normalize(times, caps)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop control: compiled to a flat tensor the engines evaluate inside
+# their wave loops (no schedule, no planning pass).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReactiveController:
+    """Closed-loop queue-reactive controller evaluated INSIDE the engines.
+
+    Unlike :class:`ReactiveAutoscaler` (an open-loop planning pass that
+    simulates, observes queues, and emits a schedule), this controller runs
+    in the engine's control stage: every ``interval_s`` it observes the live
+    queued-jobs-per-effective-slot ratio of each resource and scales its
+    continuous capacity state by ``1 +- step`` when the ratio crosses
+    ``high_watermark`` / ``low_watermark``, clamped to
+    ``[min_scale, max_scale] * base``. The rounded integer target composes
+    with the capacity schedule as a delta (effective capacity =
+    schedule(t) + target - base), so maintenance windows / outages and the
+    controller stack. Any movement of the continuous state starts the
+    ``cooldown_s`` window during which evaluations are suppressed.
+
+    ``compile`` materializes the flat ``[C]`` ControllerParams tensor
+    (``C = CTRL_HEADER + CTRL_FIELDS * nres``; layout documented in
+    :mod:`repro.core.des`) both engines consume. Evaluation ticks run from
+    ``interval_s`` to the compile horizon; the finite grid keeps the wave
+    loop bounded even when a scale-to-zero controller stalls the queue.
+    """
+
+    high_watermark: float = 0.5    # waiting jobs per effective slot
+    low_watermark: float = 0.05
+    step: float = 0.25             # multiplicative scale step per action
+    min_scale: float = 0.5
+    max_scale: float = 2.0
+    interval_s: float = 3600.0
+    cooldown_s: float = 0.0
+    resources: Optional[Tuple[int, ...]] = None   # None = control every pool
+
+    @property
+    def name(self) -> str:
+        """Label for sweep-axis point names — includes every field that can
+        distinguish two gain settings (defaults elided), so grid points
+        never collide on name."""
+        parts = [f"hw={self.high_watermark:g}", f"lw={self.low_watermark:g}",
+                 f"step={self.step:g}",
+                 f"sc={self.min_scale:g}-{self.max_scale:g}",
+                 f"iv={self.interval_s:g}"]
+        if self.cooldown_s:
+            parts.append(f"cd={self.cooldown_s:g}")
+        if self.resources is not None:
+            parts.append("res=" + "+".join(str(r) for r in self.resources))
+        return "ctrl(" + ",".join(parts) + ")"
+
+    def compile(self, base_caps: np.ndarray, horizon_s: float) -> np.ndarray:
+        """The ``[C]`` f32 ControllerParams tensor for ``base_caps``.
+
+        Uncontrolled resources get unreachable watermarks and a zero step,
+        so their delta stays 0 forever.
+        """
+        if self.interval_s <= 0:
+            raise ValueError("ReactiveController.interval_s must be > 0")
+        # the engines advance the tick grid in f32; an interval below the
+        # clock ulp at the horizon could never advance (the engines also
+        # guard at runtime by exhausting the grid, but that would silently
+        # stop controlling — fail loudly here instead)
+        if np.float32(horizon_s) + np.float32(self.interval_s) \
+                <= np.float32(horizon_s):
+            raise ValueError(
+                f"interval_s={self.interval_s} is below the f32 clock ulp "
+                f"({np.spacing(np.float32(horizon_s))}) at horizon "
+                f"{horizon_s}; evaluation ticks could not advance")
+        base = np.asarray(base_caps, np.float64)
+        nres = base.shape[0]
+        out = np.zeros(CTRL_HEADER + CTRL_FIELDS * nres, np.float32)
+        out[0] = self.interval_s
+        out[1] = self.cooldown_s
+        out[2] = self.interval_s          # first evaluation tick
+        out[3] = horizon_s                # last evaluation tick
+        which = set(range(nres)) if self.resources is None \
+            else {int(r) for r in self.resources}
+        for r in range(nres):
+            o = CTRL_HEADER + CTRL_FIELDS * r
+            if r in which:
+                out[o:o + CTRL_FIELDS] = (
+                    self.high_watermark, self.low_watermark, self.step,
+                    base[r] * self.min_scale, base[r] * self.max_scale,
+                    base[r])
+            else:
+                out[o:o + CTRL_FIELDS] = (CTRL_INF, -CTRL_INF, 0.0,
+                                          base[r], base[r], base[r])
+        return out
+
+
+def disabled_controller(nres: int) -> np.ndarray:
+    """An all-zero ``[C]`` row: the engines treat interval <= 0 as 'no
+    controller' — the inert padding row for batched ensembles."""
+    return np.zeros(CTRL_HEADER + CTRL_FIELDS * int(nres), np.float32)

@@ -63,6 +63,13 @@ class FailureModel:
     base service time (``exp(sigma*z - sigma^2/2)``), since the synthesizer's
     per-task duration distribution is no longer available once the workload
     is materialized.
+
+    ``fail_holds_frac < 1.0`` models *partial-progress* failures: a failing
+    attempt holds its resource slot for only that fraction of its service
+    time before crashing (the default 1.0 — fail at the very end — preserves
+    the historical trace semantics exactly). Both engines shorten the
+    attempt's recorded start/finish window accordingly, so per-attempt
+    ``busy_node_seconds`` accounting stays exact.
     """
 
     p_fail_by_type: Tuple[float, ...] = DEFAULT_P_FAIL
@@ -70,6 +77,14 @@ class FailureModel:
     retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
     resample_service: bool = False
     resample_sigma: float = 0.35
+    fail_holds_frac: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.fail_holds_frac <= 1.0:
+            raise ValueError(
+                f"fail_holds_frac must be in (0, 1], got "
+                f"{self.fail_holds_frac} (a non-positive hold would emit "
+                "finish events in the past)")
 
     def failure_prob(self, wl: M.Workload) -> np.ndarray:
         """[N, T] per-attempt failure probability (0 on padding)."""

@@ -1,12 +1,13 @@
 """Operational scenario: capacity policy + failure/retry + outages + SLOs.
 
 A :class:`Scenario` is the declarative description an experiment carries
-(:class:`repro.core.experiment.Experiment` grows a ``scenario`` field, and
-``sweep`` can grid over scenarios). ``compile`` materializes it against a
+(:class:`repro.core.experiment.ExperimentSpec` has a ``scenario`` field, and
+:class:`~repro.core.experiment.Sweep` can grid over scenarios and over
+closed-loop ``"controller"`` gains). ``compile`` materializes it against a
 concrete workload/platform/horizon into a :class:`CompiledScenario` — plain
-tensors (capacity schedule, pre-sampled attempt counts, backoff constants)
-that both engines consume: the numpy engine directly, the JAX engine as
-``jit``/``vmap``-friendly device arrays.
+tensors (capacity schedule, pre-sampled attempt counts, backoff constants,
+the flat ControllerParams vector) that both engines consume: the numpy
+engine directly, the JAX engine as ``jit``/``vmap``-friendly device arrays.
 """
 from __future__ import annotations
 
@@ -32,6 +33,17 @@ class CompiledScenario:
     # [N, T, A] per-attempt service times (retry resampling); None = every
     # attempt re-runs with the task's base service time (seed behavior)
     attempt_service: Optional[np.ndarray] = None
+    # flat [C] ControllerParams tensor (closed-loop in-engine control; see
+    # repro.ops.capacity.ReactiveController.compile); None = no controller
+    controller: Optional[np.ndarray] = None
+    # slot-holding fraction of a *failing* attempt (partial-progress
+    # failures); 1.0 = hold for the full service time (historical semantics)
+    fail_holds_frac: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.fail_holds_frac <= 1.0:
+            raise ValueError(f"fail_holds_frac must be in (0, 1], got "
+                             f"{self.fail_holds_frac}")
 
     @property
     def cap_times(self) -> np.ndarray:
@@ -53,6 +65,9 @@ class Scenario:
     failures: Optional[FailureModel] = None
     outages: Optional[OutageModel] = None
     slo: Optional[SLOConfig] = None
+    # closed-loop in-engine controller (repro.ops.capacity.ReactiveController)
+    # — composes with `capacity` as a delta on top of the planned schedule
+    controller: Optional[object] = None
 
     def compile_schedule(self, platform: M.PlatformConfig, horizon_s: float,
                          seed: int = 0, workload: Optional[M.Workload] = None,
@@ -78,10 +93,12 @@ class Scenario:
             schedule = self.compile_schedule(platform, horizon_s, seed=seed,
                                              workload=workload, policy=policy)
         attempt_service = None
+        fail_holds_frac = 1.0
         if self.failures is not None:
             rng = np.random.default_rng(np.random.SeedSequence([seed, 0xF0]))
             attempts = self.failures.sample_attempts(rng, workload)
             backoff = self.failures.retry.backoff
+            fail_holds_frac = float(self.failures.fail_holds_frac)
             if self.failures.resample_service:
                 rng_svc = np.random.default_rng(
                     np.random.SeedSequence([seed, 0xA5]))
@@ -90,9 +107,15 @@ class Scenario:
         else:
             attempts = np.ones(workload.task_type.shape, np.int64)
             backoff = RetryPolicy().backoff
+        controller = None
+        if self.controller is not None:
+            controller = self.controller.compile(platform.capacities,
+                                                 horizon_s)
         return CompiledScenario(schedule=schedule, attempts=attempts,
                                 backoff=backoff,
-                                attempt_service=attempt_service)
+                                attempt_service=attempt_service,
+                                controller=controller,
+                                fail_holds_frac=fail_holds_frac)
 
 
 def compile_static(workload: M.Workload,

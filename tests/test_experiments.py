@@ -4,7 +4,7 @@ import pytest
 
 from benchmarks.common import fitted_params
 from repro.core import des
-from repro.core.experiment import Experiment, run_experiment, sweep
+from repro.core.experiment import ExperimentSpec, Sweep, run_experiment
 from repro.core.trace import (arrivals_per_hour, mean_utilization,
                               network_traffic, queue_length_timeline,
                               summarize)
@@ -15,8 +15,15 @@ def params():
     return fitted_params()
 
 
+def _spec(name, learning_capacity=None, **kw):
+    spec = ExperimentSpec(name=name, **kw)
+    if learning_capacity is not None:
+        spec = spec.with_(**{"capacity:learning_cluster": learning_capacity})
+    return spec
+
+
 def test_run_experiment_numpy(params):
-    exp = Experiment(name="t", horizon_s=12 * 3600.0, seed=1)
+    exp = _spec("t", horizon_s=12 * 3600.0, seed=1)
     res = run_experiment(exp, params)
     s = res.summary
     assert s["n_pipelines"] > 20
@@ -26,32 +33,32 @@ def test_run_experiment_numpy(params):
 
 def test_capacity_scaling_reduces_wait(params):
     """Fewer learning-cluster slots -> more queueing (C4 mechanism)."""
-    lo = run_experiment(Experiment(name="lo", horizon_s=86400.0,
-                                   learning_capacity=4, seed=2), params)
-    hi = run_experiment(Experiment(name="hi", horizon_s=86400.0,
-                                   learning_capacity=64, seed=2), params)
+    lo = run_experiment(_spec("lo", horizon_s=86400.0,
+                              learning_capacity=4, seed=2), params)
+    hi = run_experiment(_spec("hi", horizon_s=86400.0,
+                              learning_capacity=64, seed=2), params)
     assert lo.summary["mean_wait_s"] >= hi.summary["mean_wait_s"]
     assert lo.summary["utilization"]["learning_cluster"] >= \
         hi.summary["utilization"]["learning_cluster"] - 1e-9
 
 
 def test_interarrival_factor_scales_load(params):
-    fast = run_experiment(Experiment(name="f", horizon_s=43200.0,
-                                     interarrival_factor=0.5, seed=3), params)
-    slow = run_experiment(Experiment(name="s", horizon_s=43200.0,
-                                     interarrival_factor=2.0, seed=3), params)
+    fast = run_experiment(_spec("f", horizon_s=43200.0,
+                                interarrival_factor=0.5, seed=3), params)
+    slow = run_experiment(_spec("s", horizon_s=43200.0,
+                                interarrival_factor=2.0, seed=3), params)
     assert fast.summary["n_pipelines"] > 1.5 * slow.summary["n_pipelines"]
 
 
 def test_jax_engine_experiment(params):
-    exp = Experiment(name="j", horizon_s=6 * 3600.0, engine="jax", seed=4)
+    exp = _spec("j", horizon_s=6 * 3600.0, engine="jax", seed=4)
     res = run_experiment(exp, params)
     assert res.summary["n_pipelines"] > 5
 
 
 def test_ensemble_confidence_interval(params):
-    exp = Experiment(name="mc", horizon_s=6 * 3600.0, engine="jax",
-                     n_replicas=4, seed=5, learning_capacity=6)
+    exp = _spec("mc", horizon_s=6 * 3600.0, engine="jax",
+                n_replicas=4, seed=5, learning_capacity=6)
     res = run_experiment(exp, params)
     assert res.summary["n_replicas"] == 4
     assert res.summary["wait_ci95_halfwidth"] >= 0.0
@@ -59,24 +66,24 @@ def test_ensemble_confidence_interval(params):
 
 
 def test_sweep_grid(params):
-    base = Experiment(name="g", horizon_s=4 * 3600.0, seed=6)
-    results = sweep(base, params, {"learning_capacity": [8, 32],
-                                   "policy": [des.POLICY_FIFO,
-                                              des.POLICY_SJF]})
+    base = _spec("g", horizon_s=4 * 3600.0, seed=6)
+    results = Sweep(base, {"capacity:learning_cluster": [8, 32],
+                           "policy": [des.POLICY_FIFO,
+                                      des.POLICY_SJF]}).run(params)
     assert len(results) == 4
     names = [r.experiment.name for r in results]
     assert len(set(names)) == 4
 
 
 def test_analytics_roundtrip(params, tmp_path):
-    exp = Experiment(name="a", horizon_s=12 * 3600.0, seed=7)
+    exp = _spec("a", horizon_s=12 * 3600.0, seed=7)
     res = run_experiment(exp, params)
     res.save(str(tmp_path / "exp"))
     from repro.core.trace import TaskRecords
     rec = TaskRecords.load(str(tmp_path / "exp" / "records.npz"))
     assert rec.start.shape == res.records.start.shape
 
-    caps = exp.platform().capacities
+    caps = exp.platform.capacities
     util = mean_utilization(rec, caps, exp.horizon_s)
     assert (util >= 0).all() and (util <= 1.0 + 1e-9).all()
     q = queue_length_timeline(rec, caps.shape[0], 3600.0, exp.horizon_s)

@@ -459,13 +459,13 @@ def test_ensemble_single_spmd_call_with_scenarios(rng):
 
 
 def test_experiment_with_scenario(rng):
-    """End-to-end: Experiment.scenario flows into the summary (both engines)."""
+    """End-to-end: spec.scenario flows into the summary (both engines)."""
     from benchmarks.common import fitted_params
-    from repro.core.experiment import Experiment, run_experiment
+    from repro.core.experiment import ExperimentSpec, run_experiment
     params = fitted_params()
     sc = Scenario(name="ops", failures=FailureModel(), slo=SLOConfig())
     for engine in ("numpy", "jax"):
-        res = run_experiment(Experiment(
+        res = run_experiment(ExperimentSpec(
             name="t", horizon_s=6 * 3600.0, seed=3, engine=engine,
             scenario=sc), params)
         s = res.summary
@@ -476,12 +476,12 @@ def test_experiment_with_scenario(rng):
 
 def test_sweep_over_scenarios(rng):
     from benchmarks.common import fitted_params
-    from repro.core.experiment import Experiment, sweep
+    from repro.core.experiment import ExperimentSpec, Sweep
     params = fitted_params()
     scenarios = [Scenario(name="base"),
                  Scenario(name="fail", failures=FailureModel())]
-    res = sweep(Experiment(name="g", horizon_s=3 * 3600.0, seed=2), params,
-                {"scenario": scenarios})
+    res = Sweep(ExperimentSpec(name="g", horizon_s=3 * 3600.0, seed=2),
+                {"scenario": scenarios}).run(params)
     assert len(res) == 2
     assert res[0].experiment.name.endswith("scenario=base")
     assert res[1].experiment.name.endswith("scenario=fail")

@@ -3,13 +3,13 @@
   - vectorized Sweep grids produce the same summaries as serial per-point
     run_experiment calls (both engines, with and without scenarios, with a
     heterogeneous policy axis in one jit+vmap call);
-  - deprecation shim: the legacy two-resource Experiment keeps working;
+  - the deprecated two-resource Experiment shim is fully removed;
+  - ragged platform grids warn and fall back to the numpy serial loop;
   - retry resampling (per-attempt service times) with engine parity and the
     flag-off escape hatch;
   - per-attempt start/finish records and exact busy-time accounting.
 """
 import dataclasses
-import warnings
 
 import numpy as np
 import pytest
@@ -18,8 +18,8 @@ from repro.core import des, trace, vdes
 from repro.core import model as M
 from repro.core.batching import pad_workloads, stack_scenarios
 from repro.core.engines import JaxEngine, NumpyEngine, get_engine
-from repro.core.experiment import (Experiment, ExperimentSpec, Sweep,
-                                   as_spec, run_experiment, sweep)
+from repro.core.experiment import (ExperimentSpec, Sweep, as_spec,
+                                   run_experiment)
 from repro.ops import (CompiledScenario, FailureModel, MaintenanceWindows,
                        RetryPolicy, Scenario, SLOConfig, busy_node_seconds,
                        static_schedule)
@@ -92,42 +92,16 @@ def test_engine_protocol_registry():
         get_engine("fortran")
 
 
-# --------------------------------------------------------- deprecation shim
+# ---------------------------------------------------- shim removal (PR 3)
 
-def test_experiment_shim_warns_and_converts():
-    with pytest.warns(DeprecationWarning):
-        exp = Experiment(name="old", learning_capacity=16,
-                         compute_capacity=24, learning_cost_per_node_hour=5.0)
-    spec = as_spec(exp)
-    assert isinstance(spec, ExperimentSpec)
-    assert spec.platform.capacities.tolist() == [24, 16]
-    assert spec.platform.cost_rates.tolist() == [1.0, 5.0]
-    assert spec.name == "old"
-
-
-def test_experiment_shim_runs_like_spec(rng):
-    wl = int_workload(rng, n=60)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        exp = Experiment(name="old", horizon_s=300.0, compute_capacity=3,
-                         learning_capacity=2)
-    spec = dataclasses.replace(as_spec(exp), workload=wl)
-    old_style = run_experiment(dataclasses.replace(spec, name="viashim"))
-    new_style = run_experiment(ExperimentSpec(
-        name="new", platform=platform(3, 2), horizon_s=300.0, workload=wl))
-    for k in ("mean_wait_s", "p95_wait_s", "n_pipelines"):
-        assert old_style.summary[k] == pytest.approx(new_style.summary[k])
-
-
-def test_legacy_sweep_still_works(rng):
-    wl = int_workload(rng, n=40)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        base = ExperimentSpec(name="g", horizon_s=300.0, workload=wl)
-        results = sweep(base, None, {"policy": [des.POLICY_FIFO,
-                                                des.POLICY_SJF]})
-    assert len(results) == 2
-    assert results[0].experiment.name.endswith("policy=0")
+def test_legacy_experiment_shim_is_gone():
+    """The deprecated two-resource Experiment and the serial sweep() helper
+    were removed after their one-release deprecation window; as_spec still
+    normalizes anything exposing to_spec."""
+    import repro.core.experiment as ex
+    assert not hasattr(ex, "Experiment")
+    assert not hasattr(ex, "sweep")
+    assert as_spec(ExperimentSpec(name="s")).name == "s"
 
 
 # ------------------------------------------------- batched vs serial parity
@@ -225,15 +199,26 @@ def test_sweep_single_point_throughput_counts_pipelines(rng):
         wl.n / res[0].summary["wall_s"], rel=1e-6)
 
 
-def test_sweep_rejects_ragged_resource_counts(rng):
+def test_sweep_ragged_platforms_warn_and_fall_back_to_numpy(rng):
+    """A ragged platform grid cannot batch: it must warn (naming the
+    offending points) and fall back to the exact numpy serial loop, whose
+    results match running the points on the numpy engine directly."""
     wl = int_workload(rng, n=20)
     p3 = M.PlatformConfig(resources=(
         M.ResourceConfig("a", 3), M.ResourceConfig("b", 2),
         M.ResourceConfig("c", 2)))
     base = ExperimentSpec(name="g", platform=platform(), horizon_s=300.0,
                           engine="jax", workload=wl)
-    with pytest.raises(ValueError, match="uniform resource count"):
-        Sweep(base, {"platform": [platform(), p3]}).run()
+    sw = Sweep(base, {"platform": [platform(), p3]})
+    with pytest.warns(RuntimeWarning, match="uniform resource count"):
+        res = sw.run()
+    assert len(res) == 2
+    serial = [run_experiment(p.with_(engine="numpy")) for p in sw.points()]
+    for b, s in zip(res, serial):
+        assert b.summary["mean_wait_s"] == pytest.approx(
+            s.summary["mean_wait_s"])
+        # the warning names the point that disagrees with the first
+        assert "platform=" in b.experiment.name
 
 
 # ------------------------------------------------------- retry resampling
