@@ -1,7 +1,7 @@
 # Repo CI entry points. `make ci` is what a CI job should run.
 PYTHONPATH := src
 
-.PHONY: test smoke-bench bench ci
+.PHONY: test smoke-bench bench check-drift ci
 
 # tier-1 verification (ROADMAP.md)
 test:
@@ -14,4 +14,9 @@ smoke-bench:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
-ci: test smoke-bench
+# engine-parity gate: any nonzero *drift* key in artifacts/BENCH_*.json
+# fails the build (runs after smoke-bench refreshes the artifacts)
+check-drift:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check_drift
+
+ci: test smoke-bench check-drift

@@ -1,0 +1,48 @@
+"""CI gate: fail when any benchmark artifact reports numpy-vs-jax drift.
+
+Scans every ``artifacts/BENCH_*.json`` for keys containing ``drift`` (e.g.
+``numpy_vs_jax_drift``, ``realized_timeline_drift``,
+``max_rel_drift_vs_serial``) and exits nonzero if any value is not exactly
+0.0 — so an engine-parity regression cannot land silently just because the
+benchmark that measured it "succeeded". Run by ``make ci`` after the smoke
+benchmarks refresh the artifacts.
+
+  PYTHONPATH=src python -m benchmarks.check_drift
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                   "artifacts"))
+
+
+def check(art_dir: str = ART) -> list:
+    """Return a list of ``(file, key, value)`` offenders with nonzero drift."""
+    bad = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            report = json.load(f)
+        for key, val in report.items():
+            if "drift" not in key:
+                continue
+            if not isinstance(val, (int, float)) or val != 0.0:
+                bad.append((os.path.basename(path), key, val))
+    return bad
+
+
+def main() -> None:
+    offenders = check()
+    if offenders:
+        for fname, key, val in offenders:
+            print(f"DRIFT {fname}: {key} = {val!r} (expected 0.0)",
+                  file=sys.stderr)
+        sys.exit(1)
+    print("drift check: all BENCH_*.json artifacts report 0.0 drift")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,10 +6,14 @@ Two measurements, one report (``artifacts/BENCH_controller.json``):
      :class:`~repro.ops.capacity.ReactiveController` (ONE batched jit+vmap
      ``Sweep`` call) against the open-loop ``ReactiveAutoscaler`` baseline
      (same watermarks/steps, but each point pays a serial numpy planning
-     simulation before it can run). Reports wall clocks and the achieved
-     mean waits, plus the **numpy-vs-jax drift** of the closed-loop
-     controller on the integer-time workload (must be 0.0: the controller
-     does its arithmetic in f32 in both engines).
+     simulation before it can run). Reports wall clocks, the achieved mean
+     waits, and the **realized-vs-planned cost delta** (the summaries charge
+     the engine-recorded realized capacity timeline; the delta is what the
+     controller's scaling actions were worth in $), plus the
+     **numpy-vs-jax drift** of the closed-loop controller on the
+     integer-time workload — of the task timestamps AND of the recorded
+     realized action timeline (both must be 0.0: the controller does its
+     arithmetic in f32 in both engines).
   2. **Fused vs chained admission sort**: the same ensemble executed with
      the single fused ``lax.sort(num_keys=3)`` admission round vs the
      historical 3-chained-argsort wave loop — wave throughput and speedup.
@@ -103,6 +107,18 @@ def rows():
 
     wait_closed = float(np.mean([r.summary["mean_wait_s"] for r in closed]))
     wait_open = float(np.mean([r.summary["mean_wait_s"] for r in open_]))
+    # realized-vs-planned accounting: the closed-loop summaries charge the
+    # engine-recorded capacity timeline, not the pre-planned schedule. A
+    # gain setting whose controller never acts omits the planned keys
+    # (realized IS planned there): planned falls back to the realized cost
+    # and the delta to 0.
+    cost_realized = float(np.mean([r.summary["total_cost"] for r in closed]))
+    cost_planned = float(np.mean(
+        [r.summary.get("planned_total_cost", r.summary["total_cost"])
+         for r in closed]))
+    cost_delta = float(np.mean(
+        [r.summary.get("realized_vs_planned_cost_delta", 0.0)
+         for r in closed]))
 
     # --- numpy-vs-jax closed-loop drift (integer times -> must be 0.0)
     comp = Scenario(name="drift", controller=_controller(
@@ -114,6 +130,14 @@ def rows():
         np.where(live, np.nan_to_num(t_np.start), 0.0)
         - np.where(live, np.nan_to_num(t_jx.start), 0.0))))
     waves_agree = bool(t_np.waves == t_jx.waves)
+    # ... and of the recorded realized action timeline itself
+    if t_np.ctrl_times.shape == t_jx.ctrl_times.shape:
+        timeline_drift = float(max(
+            np.max(np.abs(t_np.ctrl_times - t_jx.ctrl_times), initial=0.0),
+            np.max(np.abs(t_np.ctrl_caps - t_jx.ctrl_caps), initial=0.0)))
+    else:               # different action counts: report the count gap
+        timeline_drift = float(abs(t_np.ctrl_times.shape[0]
+                                   - t_jx.ctrl_times.shape[0]))
 
     # --- fused vs chained admission round (same program, same waves)
     plat = base.platform
@@ -148,7 +172,11 @@ def rows():
         "closed_vs_open_speedup_x": wall_open / max(wall_closed, 1e-12),
         "closed_loop_mean_wait_s": wait_closed,
         "open_loop_mean_wait_s": wait_open,
+        "realized_total_cost": cost_realized,
+        "planned_total_cost": cost_planned,
+        "realized_vs_planned_cost_delta": cost_delta,
         "numpy_vs_jax_drift": drift,
+        "realized_timeline_drift": timeline_drift,
         "waves_agree": waves_agree,
         "fused_wall_s": wall_fused,
         "chained_wall_s": wall_chained,
@@ -169,6 +197,8 @@ def rows():
         ("controller_open_loop_grid", wall_open * 1e6,
          f"wait{wait_open:.0f}s_vs_{wait_closed:.0f}s"),
         ("controller_drift", drift * 1e6, f"waves_agree={waves_agree}"),
+        ("controller_realized_cost_delta", timeline_drift * 1e6,
+         f"realized-planned=${cost_delta:+.2f}"),
         ("admission_sort_fused", wall_fused * 1e6,
          f"{report['fused_waves_per_s']:.0f}waves/s"),
         ("admission_sort_chained", wall_chained * 1e6,

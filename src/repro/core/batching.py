@@ -63,14 +63,16 @@ def pad_workloads(wls: Sequence[M.Workload], platform,
 
 
 def stack_scenarios(compiled, n_max: int, horizon_s: float,
-                    services=None, record_attempts: bool = True) -> dict:
+                    services=None, record_attempts: bool = True,
+                    record_ctrl: bool = True) -> dict:
     """Pad/stack per-entry CompiledScenarios into the ``[B, ...]`` scenario
     kwargs of ``vdes.simulate_ensemble`` (``attempts`` / ``cap_times`` /
     ``cap_vals`` / ``backoff``, plus ``attempt_service`` and the static
     ``n_attempt_slots`` when any entry resamples retry durations,
-    ``controllers [B, C]`` when any entry carries a closed-loop
-    ControllerParams tensor, and ``fail_holds_frac [B]`` when any entry
-    shortens failing attempts).
+    ``controllers [B, C]`` — plus the static ``n_ctrl_slots`` for
+    realized-timeline recording, opt-out via ``record_ctrl=False`` — when
+    any entry carries a closed-loop ControllerParams tensor, and
+    ``fail_holds_frac [B]`` when any entry shortens failing attempts).
 
     Schedules of different lengths are padded with no-op change points past
     the horizon; workloads shorter than ``n_max`` pad their attempts with 1.
@@ -120,6 +122,7 @@ def stack_scenarios(compiled, n_max: int, horizon_s: float,
         out["attempt_service"] = np.stack(asvs).astype(np.float32)
     ctrls = [getattr(c, "controller", None) for c in compiled]
     if any(ct is not None for ct in ctrls):
+        from repro.core.des import ctrl_tick_bound
         from repro.ops.capacity import disabled_controller
         nres = out["cap_vals"].shape[2]
         C = disabled_controller(nres).shape[0]
@@ -134,6 +137,16 @@ def stack_scenarios(compiled, n_max: int, horizon_s: float,
             else:
                 rows.append(np.asarray(ct, np.float32))
         out["controllers"] = np.stack(rows)
+        # realized-timeline recording: one [B, E, 1+nres] action buffer, E
+        # the largest tick grid in the batch (its own opt-out,
+        # record_ctrl, independent of per-attempt recording — exact
+        # closed-loop cost accounting must not vanish just because a
+        # caller skips the attempt tensors)
+        if record_ctrl:
+            slots_ctrl = max(ctrl_tick_bound(ct) for ct in ctrls
+                             if ct is not None)
+            if slots_ctrl > 0:
+                out["n_ctrl_slots"] = slots_ctrl
     fracs = np.array([float(getattr(c, "fail_holds_frac", 1.0))
                       for c in compiled], np.float32)
     if (fracs < 1.0).any():
@@ -158,6 +171,11 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
     the trace is indistinguishable from a plain single-replica run."""
     n = wl.n
     sl = lambda k: np.asarray(out[k][idx][:n], np.float64)
+    ctrl_times = ctrl_caps = None
+    if with_scenario and "ctrl_act" in out:
+        from repro.core.des import unpack_ctrl_actions
+        ctrl_times, ctrl_caps = unpack_ctrl_actions(out["ctrl_act"][idx],
+                                                    out["ctrl_n"][idx])
     return M.SimTrace(
         start=sl("start"), finish=sl("finish"), ready=sl("ready"),
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
@@ -171,5 +189,7 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
         else None,
         att_finish=sl("att_finish") if with_scenario and "att_finish" in out
         else None,
+        ctrl_times=ctrl_times,
+        ctrl_caps=ctrl_caps,
         waves=int(out["waves"][idx]) if "waves" in out else None,
     )

@@ -28,12 +28,17 @@ bit-for-bit with the JAX engine, so closed-loop runs stay parity-exact on
 integer-time workloads. Controller evaluation ticks participate in the
 next-event minimum; the evaluation grid ends at ``t_end``, which keeps the
 loop finite even when a scale-to-zero controller stalls the queue forever.
+Every integer-target move is recorded (f32 time + per-resource target) into
+the trace's realized capacity timeline (``ctrl_times``/``ctrl_caps``),
+mirroring ``vdes``'s action buffer action-for-action, so provisioned
+cost/utilization accounting charges what the engine actually provisioned.
 
 A capacity decrease never preempts running jobs: the free-slot count simply
 goes negative and admission stalls until enough jobs drain.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 from typing import Optional
 
@@ -72,6 +77,59 @@ def unpack_controller(ctrl):
             ctrl[CTRL_HEADER + 3::CTRL_FIELDS],
             ctrl[CTRL_HEADER + 4::CTRL_FIELDS],
             ctrl[CTRL_HEADER + 5::CTRL_FIELDS])
+
+
+# the action-recording buffer must be preallocated at trace time; a grid
+# bound beyond this is infeasible to carry through the wave loop (and far
+# beyond any sane evaluation cadence)
+MAX_CTRL_SLOTS = 1 << 24
+
+
+def ctrl_tick_bound(ctrl) -> int:
+    """Number of evaluation ticks a ControllerParams tensor can ever fire —
+    the compile-time bound ``E`` on the engines' realized-action recording
+    buffer (an action only happens at a tick, so actions <= ticks).
+
+    Walks the tick grid exactly as both engines advance it (f32
+    ``t += interval`` with the exhaust-on-no-advance guard), so the bound is
+    tight even where f32 rounding stops the grid early. Returns 0 for a
+    disabled controller (``interval <= 0``) or an empty grid
+    (``t_first > t_end``). The walk is memoized on the grid header (one
+    controller tensor is typically reused across many replicas/runs)."""
+    ctrl = np.asarray(ctrl, np.float32)
+    if float(ctrl[0]) <= 0.0:
+        return 0
+    return _tick_bound_walk(float(ctrl[0]), float(ctrl[2]), float(ctrl[3]))
+
+
+@functools.lru_cache(maxsize=512)
+def _tick_bound_walk(interval: float, t_first: float, t_end: float) -> int:
+    interval = np.float32(interval)
+    t = np.float32(t_first)
+    t_end = np.float32(t_end)
+    count = 0
+    while t <= t_end:
+        count += 1
+        if count > MAX_CTRL_SLOTS:
+            raise ValueError(
+                f"controller evaluation grid exceeds {MAX_CTRL_SLOTS} ticks "
+                f"(interval_s={float(interval)} over "
+                f"[{float(t_first)}, {float(t_end)}]); the realized-action "
+                "recording buffer cannot be preallocated at this size")
+        nxt = np.float32(t + interval)
+        if nxt <= t:          # f32 ulp: the engines exhaust the grid here
+            break
+        t = nxt
+    return count
+
+
+def unpack_ctrl_actions(buf, count):
+    """Decode an engine's ``[E, 1+nres]`` realized-action buffer (first
+    ``count`` rows valid: f32 time in column 0, integer per-resource targets
+    after) into ``(ctrl_times [count] f64, ctrl_caps [count, nres] i64)`` —
+    the ONE decoder shared by the single-replica and batched trace paths."""
+    acts = np.asarray(buf, np.float64)[: int(count)]
+    return acts[:, 0], np.rint(acts[:, 1:]).astype(np.int64)
 
 
 def _policy_key(policy: int, wl: M.Workload, svc_val: float,
@@ -135,6 +193,11 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         base_i = ctrl_tgt.copy()
         t_eval = c_first if c_first <= c_end else CTRL_INF
         t_act = -CTRL_INF
+    # realized capacity timeline: every controller action (f32 time +
+    # integer per-resource target) — what ops.accounting.realized_schedule
+    # splices onto the planned schedule for exact cost/utilization under
+    # closed-loop control. Mirrors vdes's [E, 1+nres] action buffer.
+    ctrl_actions: list = []
 
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
@@ -234,6 +297,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 new_tgt = np.rint(new_cap).astype(np.int64)
                 if (new_cap != ctrl_cap).any():
                     t_act = f32(t_star)
+                if (new_tgt != ctrl_tgt).any():
+                    ctrl_actions.append((f32(t_star), new_tgt.copy()))
                 free += new_tgt - ctrl_tgt
                 ctrl_cap, ctrl_tgt = new_cap, new_tgt
             t_nxt = f32(t_eval + c_interval)
@@ -246,6 +311,12 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if not ev and not any(waiting):
             break                       # all pipelines done (or never arrive)
 
+    ctrl_times = ctrl_caps = None
+    if ctrl is not None:     # enabled controller: timeline present (maybe empty)
+        ctrl_times = np.array([t for t, _ in ctrl_actions], np.float64)
+        ctrl_caps = (np.stack([c for _, c in ctrl_actions])
+                     if ctrl_actions else np.zeros((0, nres), np.int64))
+
     return M.SimTrace(
         start=start, finish=finish, ready=ready,
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
@@ -255,6 +326,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         completed=(task_idx >= wl.n_tasks) if scenario is not None else None,
         att_start=att_start,
         att_finish=att_finish,
+        ctrl_times=ctrl_times,
+        ctrl_caps=ctrl_caps,
         waves=wave,
     )
 

@@ -49,6 +49,23 @@ class Engine(Protocol):
 # shared pieces
 # ---------------------------------------------------------------------------
 
+def _pad_platform(plat, nres: int):
+    """Pad a platform to ``nres`` resources with inert pools (zero capacity,
+    zero cost rate): nothing routes to them, nothing is provisioned on them,
+    and they cost nothing — so a ragged platform grid can share one
+    rectangular ``[B, nres]`` batch without changing any point's physics
+    or accounting."""
+    from repro.core import model as M
+    pad = nres - len(plat.resources)
+    if pad <= 0:
+        return plat
+    extra = tuple(
+        M.ResourceConfig(name=f"__pad{len(plat.resources) + i}",
+                         capacity=0, cost_per_node_hour=0.0)
+        for i in range(pad))
+    return dataclasses.replace(plat, resources=tuple(plat.resources) + extra)
+
+
 def _workload_key(spec):
     """Grid points that differ only in capacities/policy/scenario draw the
     *same* workload; this key lets a sweep synthesize each distinct one
@@ -97,18 +114,30 @@ def _spec_workloads(spec, params, cache=None):
     return wls, compiled
 
 
-def _summarize(spec, rec, compiled):
+def _summarize(spec, rec, compiled, tr=None):
+    """Summary for one replica. ``tr`` (the SimTrace) carries the
+    engine-recorded controller action timeline: under closed-loop control
+    cost/utilization integrate the *realized* capacity schedule, not the
+    planned one (identical — same object — when the controller never
+    acted, so scenario-less and open-loop summaries are unchanged)."""
+    realized = None
+    if compiled is not None and tr is not None:
+        from repro.ops.accounting import realized_schedule
+        realized = realized_schedule(tr, compiled)
+        if realized is compiled.schedule:
+            realized = None            # planned == realized: legacy path
     return trace.summarize(
         rec, spec.platform.capacities, spec.horizon_s,
         schedule=compiled.schedule if compiled is not None else None,
         cost_rates=spec.platform.cost_rates if compiled is not None else None,
-        slo=spec.scenario.slo if spec.scenario is not None else None)
+        slo=spec.scenario.slo if spec.scenario is not None else None,
+        realized=realized)
 
 
 def _single_result(spec, wl, compiled, tr, wall):
     from repro.core.experiment import ExperimentResult
     rec = trace.flatten_trace(tr, wl)
-    summary = _summarize(spec, rec, compiled)
+    summary = _summarize(spec, rec, compiled, tr)
     summary["wall_s"] = wall
     summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
     return ExperimentResult(spec, summary, rec, wall)
@@ -126,7 +155,8 @@ def _aggregate_replicas(spec, rep_sums, recs, wall):
         "n_replicas": len(rep_sums),
     }
     for k in ("total_cost", "deadline_miss_rate", "wait_slo_violation_rate",
-              "mean_attempts"):
+              "mean_attempts", "planned_total_cost",
+              "realized_vs_planned_cost_delta"):
         if all(k in s for s in rep_sums):
             summary[k] = float(np.mean([s[k] for s in rep_sums]))
     return ExperimentResult(spec, summary, trace.concat_records(recs), wall,
@@ -157,7 +187,7 @@ class NumpyEngine:
             tr = des.simulate(w, spec.platform, spec.policy, scenario=comp)
             rec = trace.flatten_trace(tr, w)
             recs.append(rec)
-            sums.append(_summarize(spec, rec, comp))
+            sums.append(_summarize(spec, rec, comp, tr))
         return _aggregate_replicas(spec, sums, recs,
                                    time.perf_counter() - t0)
 
@@ -193,42 +223,48 @@ class JaxEngine:
         ``vdes.simulate_ensemble`` call. Heterogeneous capacities ride the
         ``capacities [B, nres]`` tensor, heterogeneous schedulers the traced
         ``policies [B]`` tensor, heterogeneous scenarios/controllers the
-        stacked schedule/attempt/ControllerParams tensors. Batching requires
-        every point to share the number of resources; a *ragged* platform
-        grid cannot lower to one rectangular batch, so it falls back to the
-        exact numpy serial loop (with a warning naming the offending grid
-        points — pad the platform to a uniform resource count to stay on
-        the batched path)."""
+        stacked schedule/attempt/ControllerParams tensors. A *ragged*
+        platform grid (points with differing resource counts) is auto-padded
+        to the common resource superset — padded pools have zero capacity
+        and zero cost rate, so they are semantically inert (no task routes
+        to them, nothing is provisioned or charged) and the grid stays on
+        the batched path. Only genuinely incompatible grids (e.g. pinned
+        workloads with differing ``max_tasks``) warn and fall back to the
+        exact numpy serial loop."""
         t0 = time.perf_counter()
         nres = {len(s.platform.resources) for s in specs}
+        exec_specs = list(specs)
         if len(nres) != 1:
-            from collections import Counter
-            counts = Counter(len(s.platform.resources) for s in specs)
-            majority = counts.most_common(1)[0][0]
-            offenders = [f"{s.name} ({len(s.platform.resources)} resources)"
-                         for s in specs
-                         if len(s.platform.resources) != majority]
-            warnings.warn(
-                "batched sweep needs a uniform resource count, got "
-                f"{sorted(nres)} (modal count {majority}; differing "
-                f"points: {offenders}); falling back to the exact numpy "
-                "serial loop for this grid (pad the platform to batch)",
-                RuntimeWarning, stacklevel=2)
-            return get_engine("numpy").run_sweep(specs, params)
+            # ragged platform grid: pad every point to the superset so ONE
+            # rectangular batch still covers the grid (results/summaries
+            # are computed against each point's own unpadded platform)
+            nres_max = max(nres)
+            exec_specs = [
+                dataclasses.replace(s, platform=_pad_platform(s.platform,
+                                                              nres_max))
+                for s in specs]
 
         entries = []                     # (spec index, workload, compiled)
         wl_cache = {}   # distinct workloads synthesized once for the grid
-        for g, spec in enumerate(specs):
+        for g, spec in enumerate(exec_specs):
             wls, compiled = _spec_workloads(spec, params, cache=wl_cache)
             for r, w in enumerate(wls):
                 entries.append(
                     (g, w, compiled[r] if compiled is not None else None))
 
-        plats = [specs[g].platform for g, _, _ in entries]
-        cols = batching.pad_workloads([w for _, w, _ in entries], plats)
+        plats = [exec_specs[g].platform for g, _, _ in entries]
+        try:
+            cols = batching.pad_workloads([w for _, w, _ in entries], plats)
+        except ValueError as e:          # genuinely incompatible grid
+            warnings.warn(
+                f"sweep grid cannot lower to one rectangular batch ({e}); "
+                "falling back to the exact numpy serial loop",
+                RuntimeWarning, stacklevel=2)
+            return get_engine("numpy").run_sweep(specs, params)
         n_max = cols.pop("n_max")
         caps = np.stack([p.capacities for p in plats]).astype(np.int32)
-        pol = np.array([specs[g].policy for g, _, _ in entries], np.int32)
+        pol = np.array([exec_specs[g].policy for g, _, _ in entries],
+                       np.int32)
         uniform_policy = bool((pol == pol[0]).all())
 
         scen_kw = {}
@@ -239,7 +275,8 @@ class JaxEngine:
             for g, w, c in entries:
                 if c is None:           # inert placeholder row
                     c = CompiledScenario(
-                        schedule=static_schedule(specs[g].platform.capacities),
+                        schedule=static_schedule(
+                            exec_specs[g].platform.capacities),
                         attempts=np.ones(w.task_type.shape, np.int64),
                         backoff=vdes._NO_RETRY_BACKOFF)
                 comps.append(c)
@@ -267,7 +304,10 @@ class JaxEngine:
                                           with_scenario=comp is not None)
                 rec = trace.flatten_trace(tr, wl)
                 recs.append(rec)
-                sums.append(_summarize(spec, rec, comp))
+                # summarize against the executed (possibly padded) platform
+                # so cost/schedule tensors line up; padded pools contribute
+                # zero everywhere
+                sums.append(_summarize(exec_specs[g], rec, comp, tr))
             i += spec.n_replicas
             if spec.n_replicas == 1:
                 from repro.core.experiment import ExperimentResult

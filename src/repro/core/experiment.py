@@ -165,12 +165,18 @@ class Sweep:
     ``jit``+``vmap`` ``simulate_ensemble`` call; the numpy engine runs an
     exact serial loop.
 
-    Batching requires a uniform resource count across grid points: a
-    *ragged* platform grid (e.g. a ``"platform"`` axis mixing 2- and
-    3-resource platforms) cannot form one rectangular batch, so the JAX
-    engine emits a ``RuntimeWarning`` naming the offending points and falls
-    back to the exact numpy serial loop for that grid. Pad platforms to a
-    common resource set to stay on the batched path.
+    A *ragged* platform grid (e.g. a ``"platform"`` axis mixing 2- and
+    3-resource platforms) is auto-padded to the common resource superset —
+    padded pools are inert (zero capacity, zero cost rate), so ragged grids
+    stay on the batched jit+vmap path. Only genuinely incompatible grids
+    (e.g. pinned workloads disagreeing on ``max_tasks``) warn and fall back
+    to the exact numpy serial loop.
+
+    Under a closed-loop ``"controller"`` axis, each point's summary charges
+    the engine-recorded *realized* capacity timeline (see
+    :func:`repro.ops.accounting.realized_schedule`) and reports the planned
+    figures alongside (``planned_total_cost``,
+    ``realized_vs_planned_cost_delta``).
     """
 
     base: ExperimentSpec

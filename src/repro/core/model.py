@@ -206,6 +206,15 @@ class SimTrace:
     # under heavy retry instead of the duration*attempts approximation
     att_start: Optional[np.ndarray] = None
     att_finish: Optional[np.ndarray] = None
+    # realized capacity timeline under closed-loop control: ctrl_times [E]
+    # action times and ctrl_caps [E, R] the integer per-resource targets the
+    # controller set at those instants (engine-recorded, identical in both
+    # engines). None when the run had no enabled controller; empty arrays
+    # when a controller ran but never acted. ops.accounting.realized_schedule
+    # splices this onto the planned schedule so provisioned cost/utilization
+    # integrate what the engines actually provisioned
+    ctrl_times: Optional[np.ndarray] = None
+    ctrl_caps: Optional[np.ndarray] = None
     # engine wave-loop iteration count (None = engine predates wave
     # reporting); both engines retire events in identical waves, so tests
     # assert *wave-for-wave* parity with this, not just equal timestamps

@@ -160,6 +160,8 @@ def mean_utilization(rec: TaskRecords, capacities: np.ndarray,
     out = np.zeros(nres)
     ran = ~np.isnan(rec.start)    # stranded tasks (scenario starvation) idle
     for r in range(nres):
+        if capacities[r] <= 0:    # inert pool (e.g. ragged-grid padding)
+            continue
         m = (rec.resource == r) & ran
         busy = np.clip(np.minimum(rec.finish[m], horizon_s) - rec.start[m],
                        0.0, None).sum()
@@ -215,7 +217,8 @@ def network_traffic(rec: TaskRecords, bin_s: float = 3600.0,
 
 def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
               schedule=None, cost_rates: Optional[np.ndarray] = None,
-              slo=None, deadlines: Optional[np.ndarray] = None) -> Dict:
+              slo=None, deadlines: Optional[np.ndarray] = None,
+              realized=None) -> Dict:
     """Dashboard summary. The optional operational-scenario kwargs fold in
     cost/SLO accounting: ``schedule`` (a :class:`repro.ops.capacity.
     CapacitySchedule`) adds a ``utilization_vs_provisioned`` block computed
@@ -223,7 +226,14 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
     stays relative to the static ``capacities`` argument) and, with
     ``cost_rates`` ($/node-hour), dollar cost; ``slo`` (a :class:`repro.ops.
     accounting.SLOConfig`) adds deadline-miss and wait-SLO metrics
-    (``deadlines`` optionally per-pipeline, indexed by pipeline id)."""
+    (``deadlines`` optionally per-pipeline, indexed by pipeline id).
+
+    ``realized`` (a second :class:`~repro.ops.capacity.CapacitySchedule`,
+    normally from :func:`repro.ops.accounting.realized_schedule`) is the
+    engine-recorded capacity timeline under closed-loop control: when given,
+    cost/utilization integrate *it* instead of the planned ``schedule``, and
+    the planned figures come back alongside as ``planned_node_seconds`` /
+    ``planned_total_cost`` / ``realized_vs_planned_cost_delta``."""
     util = mean_utilization(rec, capacities, horizon_s)
     out = {
         "n_tasks": int(rec.start.shape[0]),
@@ -239,12 +249,13 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
         m = rec.task_type == t
         if m.any():
             out[f"wait_{M.TASK_TYPE_NAMES[t]}_s"] = float(np.nanmean(rec.wait[m]))
-    if schedule is not None or slo is not None:
+    if schedule is not None or slo is not None or realized is not None:
         from repro.ops import accounting
         from repro.ops.capacity import static_schedule
         sched = schedule if schedule is not None \
             else static_schedule(capacities)
         out.update(accounting.scenario_summary(
-            rec, sched, horizon_s, cost_rates=cost_rates, slo=slo,
-            deadlines=deadlines))
+            rec, realized if realized is not None else sched, horizon_s,
+            cost_rates=cost_rates, slo=slo, deadlines=deadlines,
+            planned=sched if realized is not None else None))
     return out

@@ -14,7 +14,11 @@ Each loop iteration (a **wave**) is composed of four named kernel stages:
   3. **control** (``_control_stage``): the pending piecewise-constant
      capacity change applies, then the *closed-loop controller* (if
      configured) observes the live queue lengths and adjusts capacity —
-     entirely inside the jitted loop, no Python-level replanning;
+     entirely inside the jitted loop, no Python-level replanning. Each
+     integer-target move is appended to a preallocated ``[E, 1+nres]``
+     action buffer (the *realized capacity timeline*; ``E`` bounded by the
+     compile-time evaluation-tick grid) so cost/utilization accounting can
+     charge what was actually provisioned;
   4. **admission** (``_admission_stage``): one ranked admission round per
      resource via a single fused lexicographic ``lax.sort`` over
      ``(resource, policy key, enqueue wave)`` keys (``num_keys=3``) —
@@ -146,7 +150,8 @@ def admission_order_chained(res_q: jnp.ndarray, pkey: jnp.ndarray,
 
 
 @partial(jax.jit,
-         static_argnames=("policy", "n_attempt_slots", "admission_sort"))
+         static_argnames=("policy", "n_attempt_slots", "admission_sort",
+                          "n_ctrl_slots"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
@@ -156,7 +161,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              n_attempt_slots: Optional[int] = None,
              controller: Optional[jnp.ndarray] = None,
              fail_holds_frac=None,
-             admission_sort: str = "fused"):
+             admission_sort: str = "fused",
+             n_ctrl_slots: Optional[int] = None):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
@@ -181,6 +187,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     only that fraction of its service time. ``admission_sort`` selects the
     fused ``lax.sort`` ranking (default) or the ``"chained"`` 3-argsort
     reference.
+
+    ``n_ctrl_slots = E`` (static; use :func:`repro.core.des.ctrl_tick_bound`
+    — actions only happen at evaluation ticks, so the compile-time tick grid
+    bounds the buffer) turns on *realized capacity timeline* recording: each
+    controller action (f32 time + integer per-resource target) is written
+    into a preallocated ``[E, 1+nres]`` buffer carried through the
+    ``lax.while_loop``, returned as ``ctrl_act`` with the action count
+    ``ctrl_n`` — the engine-recorded ground truth that
+    ``ops.accounting.realized_schedule`` splices onto the planned schedule
+    for exact provisioned cost/utilization under closed-loop scaling.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
@@ -228,12 +244,19 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                       jnp.float32)
         state["att_finish"] = jnp.full((n, T, n_attempt_slots), jnp.nan,
                                        jnp.float32)
+    rec_ctrl = has_ctrl and n_ctrl_slots is not None and n_ctrl_slots > 0
     if has_ctrl:
         state["ctrl_cap"] = c_base                       # continuous, f32
         state["ctrl_tgt"] = base_i                       # integer target
         state["t_eval"] = jnp.where(c_enabled & (c_first <= c_end),
                                     c_first, INF)
         state["t_act"] = -INF                            # last action time
+    if rec_ctrl:
+        # realized-timeline action buffer: [E, 1+nres] rows of
+        # (f32 action time, integer per-resource target)
+        state["ctrl_act"] = jnp.full((n_ctrl_slots, 1 + nres), jnp.nan,
+                                     jnp.float32)
+        state["ctrl_n"] = jnp.int32(0)
 
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
@@ -322,6 +345,17 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                 cap_f)
             new_tgt = jnp.round(new_cap).astype(jnp.int32)
             changed = can_act & jnp.any(new_cap != cap_f)
+            if rec_ctrl:
+                # an integer-target move is a provisioning action: append
+                # (t, target) to the realized timeline (numpy mirrors)
+                tgt_changed = can_act & jnp.any(new_tgt != s["ctrl_tgt"])
+                idx = jnp.minimum(s["ctrl_n"], n_ctrl_slots - 1)
+                row = jnp.concatenate([jnp.reshape(t_star, (1,)),
+                                       new_tgt.astype(jnp.float32)])
+                s["ctrl_act"] = s["ctrl_act"].at[idx].set(
+                    jnp.where(tgt_changed, row, s["ctrl_act"][idx]))
+                s["ctrl_n"] = jnp.minimum(
+                    s["ctrl_n"] + tgt_changed.astype(jnp.int32), n_ctrl_slots)
             free = free + (new_tgt - s["ctrl_tgt"])
             s["ctrl_cap"], s["ctrl_tgt"] = new_cap, new_tgt
             s["t_act"] = jnp.where(changed, t_star, s["t_act"])
@@ -425,6 +459,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     if n_attempt_slots is not None:
         res["att_start"] = out["att_start"]
         res["att_finish"] = out["att_finish"]
+    if rec_ctrl:
+        res["ctrl_act"] = out["ctrl_act"]
+        res["ctrl_n"] = out["ctrl_n"]
     return res
 
 
@@ -434,7 +471,9 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
     ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`."""
     platform = platform or M.PlatformConfig()
     att_start = att_finish = None
+    ctrl_times = ctrl_caps = None
     if scenario is not None:
+        from repro.core.des import ctrl_tick_bound, unpack_ctrl_actions
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
         att_svc = getattr(scenario, "attempt_service", None)
         ctrl = getattr(scenario, "controller", None)
@@ -443,6 +482,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
                         att_svc.shape[2] if att_svc is not None else 1))
         if slots == 1:   # no retries: single-attempt records already exact
             slots = None
+        n_ctrl = ctrl_tick_bound(ctrl) if ctrl is not None else 0
         res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy,
                        cap_times=jnp.asarray(scenario.cap_times, jnp.float32),
                        cap_vals=jnp.asarray(scenario.cap_vals, jnp.int32),
@@ -452,13 +492,24 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
                        n_attempt_slots=slots,
                        controller=None if ctrl is None
                        else jnp.asarray(ctrl, jnp.float32),
-                       fail_holds_frac=None if frac >= 1.0 else frac)
+                       fail_holds_frac=None if frac >= 1.0 else frac,
+                       n_ctrl_slots=n_ctrl if n_ctrl > 0 else None)
         caps0 = np.asarray(scenario.cap_vals[0], np.int64)
         attempts = np.asarray(res["attempts"], np.int64)
         completed = np.asarray(res["done"])
         if slots is not None:
             att_start = np.asarray(res["att_start"], np.float64)
             att_finish = np.asarray(res["att_finish"], np.float64)
+        if ctrl is not None and float(np.asarray(ctrl)[0]) > 0.0:
+            # enabled controller: realized timeline present (maybe empty),
+            # exactly as the numpy engine reports it
+            nres = int(scenario.cap_vals.shape[1])
+            if n_ctrl > 0:
+                ctrl_times, ctrl_caps = unpack_ctrl_actions(
+                    res["ctrl_act"], res["ctrl_n"])
+            else:
+                ctrl_times = np.zeros(0, np.float64)
+                ctrl_caps = np.zeros((0, nres), np.int64)
     else:
         vwl = VWorkload.from_workload(wl, platform)
         res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy)
@@ -477,6 +528,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         completed=completed,
         att_start=att_start,
         att_finish=att_finish,
+        ctrl_times=ctrl_times,
+        ctrl_caps=ctrl_caps,
         waves=int(res["waves"]),
     )
 
@@ -486,14 +539,16 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit,
-         static_argnames=("policy", "n_attempt_slots", "admission_sort"))
+         static_argnames=("policy", "n_attempt_slots", "admission_sort",
+                          "n_ctrl_slots"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
                       backoff=None, policies=None, attempt_service=None,
                       n_attempt_slots: Optional[int] = None,
                       controllers=None, fail_holds_frac=None,
-                      admission_sort: str = "fused"):
+                      admission_sort: str = "fused",
+                      n_ctrl_slots: Optional[int] = None):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
@@ -508,7 +563,11 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
     whole experiment grid — capacities, scenarios, controller gains, *and*
     schedulers — lowers to this one jit+vmap call. ``n_attempt_slots``
     (static) turns on per-attempt start/finish recording;
-    ``admission_sort`` (static) selects the fused or chained ranking.
+    ``admission_sort`` (static) selects the fused or chained ranking;
+    ``n_ctrl_slots`` (static; the max :func:`repro.core.des.ctrl_tick_bound`
+    over the batch) turns on realized-capacity-timeline recording — the
+    per-replica action buffers come back stacked ``ctrl_act [R, E, 1+nres]``
+    with counts ``ctrl_n [R]``.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -549,6 +608,7 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         n_attempt_slots=n_attempt_slots,
                         controller=m.get("controllers"),
                         fail_holds_frac=m.get("fail_holds_frac"),
-                        admission_sort=admission_sort)
+                        admission_sort=admission_sort,
+                        n_ctrl_slots=n_ctrl_slots)
 
     return jax.vmap(one)(mapped)

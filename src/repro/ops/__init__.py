@@ -1,8 +1,8 @@
 """Operational scenarios: dynamic capacity, failure/retry injection, and
 cost/SLO accounting for both DES engines (see DESIGN in each submodule)."""
 from repro.ops.accounting import (SLOConfig, busy_node_seconds, capacity_cost,
-                                  pipeline_spans, scenario_summary,
-                                  slo_metrics)
+                                  pipeline_spans, realized_schedule,
+                                  scenario_summary, slo_metrics)
 from repro.ops.capacity import (CapacitySchedule, MaintenanceWindows,
                                 ReactiveAutoscaler, ReactiveController,
                                 ScheduledAutoscaler, StaticCapacity,
@@ -19,7 +19,7 @@ __all__ = [
     "disabled_controller",
     "FailureModel", "OutageModel", "RetryPolicy",
     "SLOConfig", "busy_node_seconds", "capacity_cost", "pipeline_spans",
-    "scenario_summary", "slo_metrics",
+    "realized_schedule", "scenario_summary", "slo_metrics",
     "Scenario", "CompiledScenario", "compile_static",
     "stack_compiled_scenarios",
 ]

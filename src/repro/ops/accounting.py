@@ -5,6 +5,14 @@ Folds into :func:`repro.core.trace.summarize` (via its ``schedule`` /
 from the capacity schedule, busy node-seconds (failed attempts included),
 utilization against *time-varying* provisioning, pipeline deadline-miss rate
 and per-task wait-SLO violations.
+
+Under closed-loop control the *planned* schedule is not what the platform
+paid for: the in-engine controller moves effective capacity mid-run. Both
+engines record that action timeline (``SimTrace.ctrl_times``/``ctrl_caps``);
+:func:`realized_schedule` splices it onto the planned schedule so
+provisioned node-seconds, dollar cost, and utilization-vs-provisioned
+integrate what the engines *actually* provisioned (with no controller the
+realized schedule is the planned one, bit-identical).
 """
 from __future__ import annotations
 
@@ -14,7 +22,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import model as M
-from repro.ops.capacity import CapacitySchedule
+from repro.core.des import unpack_controller
+from repro.ops.capacity import CapacitySchedule, normalize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +91,38 @@ def capacity_cost(schedule: CapacitySchedule, horizon_s: float,
     }
 
 
+def realized_schedule(tr, compiled) -> CapacitySchedule:
+    """The capacity timeline the engines *actually* provisioned: the planned
+    schedule overlaid with the controller's recorded action timeline.
+
+    ``tr`` is the :class:`~repro.core.model.SimTrace` (its ``ctrl_times`` /
+    ``ctrl_caps`` columns are the engine-recorded actions), ``compiled`` the
+    :class:`~repro.ops.scenario.CompiledScenario` that produced it. The
+    controller composes with the schedule as a delta (effective capacity =
+    schedule(t) + target(t) - base, exactly the engines' control stage), so
+    the realized schedule is that sum clipped at 0. With no controller, a
+    disabled row, or zero recorded actions, the *planned schedule object* is
+    returned unchanged — existing summaries stay bit-identical.
+    """
+    sched = compiled.schedule
+    ctrl = getattr(compiled, "controller", None)
+    times = getattr(tr, "ctrl_times", None)
+    if ctrl is None or times is None or times.shape[0] == 0:
+        return sched
+    base = np.rint(np.asarray(
+        unpack_controller(np.asarray(ctrl, np.float64))[9])).astype(np.int64)
+    times = np.asarray(times, np.float64)
+    targets = np.asarray(tr.ctrl_caps, np.int64)
+    cuts = np.unique(np.concatenate([sched.times, times]))
+    planned = sched.at(cuts)
+    # controller target in effect at each cut: the last action at or before
+    # it, else the base (delta 0)
+    idx = np.searchsorted(times, cuts, side="right") - 1
+    tgt = np.where(idx[:, None] >= 0, targets[np.clip(idx, 0, None)],
+                   base[None, :])
+    return normalize(cuts, np.clip(planned + tgt - base[None, :], 0, None))
+
+
 def pipeline_spans(rec) -> Dict[str, np.ndarray]:
     """Per-pipeline (arrival, completion, makespan) from flat task records.
     Uses the records' arrival column — NOT ready, which retry re-queues
@@ -111,14 +152,21 @@ def slo_metrics(rec, slo: SLOConfig,
     """Deadline-miss and wait-SLO violation rates. ``deadlines`` optionally
     gives a per-pipeline deadline (indexed by pipeline id) overriding the
     global ``slo.pipeline_deadline_s``; a never-finishing pipeline counts as
-    a miss."""
+    a miss.
+
+    The wait-SLO rate is over tasks that actually ran (``attempts >= 1``,
+    the same mask :func:`scenario_summary` uses): a stranded task has NaN
+    wait, which ``NaN <= x -> False`` would otherwise silently count as a
+    violation — stranding is reported via ``stranded_task_frac``, not here.
+    """
     spans = pipeline_spans(rec)
     if deadlines is not None:
         dl = np.asarray(deadlines, np.float64)[spans["pipeline"]]
     else:
         dl = np.full(spans["pipeline"].shape, slo.pipeline_deadline_s)
     ok = spans["makespan"] <= dl          # NaN makespan -> False -> miss
-    wait = rec.wait
+    ran = np.asarray(rec.attempts) >= 1
+    wait = rec.wait[ran]
     wait_ok = wait <= slo.task_wait_slo_s
     finite_ms = spans["makespan"][np.isfinite(spans["makespan"])]
     return {
@@ -134,8 +182,18 @@ def slo_metrics(rec, slo: SLOConfig,
 def scenario_summary(rec, schedule: CapacitySchedule, horizon_s: float,
                      cost_rates: Optional[np.ndarray] = None,
                      slo: Optional[SLOConfig] = None,
-                     deadlines: Optional[np.ndarray] = None) -> Dict:
-    """The cost/SLO block :func:`repro.core.trace.summarize` folds in."""
+                     deadlines: Optional[np.ndarray] = None,
+                     planned: Optional[CapacitySchedule] = None) -> Dict:
+    """The cost/SLO block :func:`repro.core.trace.summarize` folds in.
+
+    ``schedule`` is the capacity timeline to charge for — under closed-loop
+    control the *realized* one (see :func:`realized_schedule`), so
+    provisioned node-seconds, cost, and utilization-vs-provisioned reflect
+    what the engines actually provisioned. Pass the planning-time schedule
+    as ``planned`` to additionally report ``planned_node_seconds`` and (with
+    ``cost_rates``) ``planned_total_cost`` plus the
+    ``realized_vs_planned_cost_delta`` the controller's actions were worth.
+    """
     nres = schedule.caps.shape[1]
     prov = schedule.provisioned_node_seconds(horizon_s)
     busy = busy_node_seconds(rec, nres, horizon_s)
@@ -154,6 +212,15 @@ def scenario_summary(rec, schedule: CapacitySchedule, horizon_s: float,
     }
     if cost_rates is not None:
         out.update(capacity_cost(schedule, horizon_s, cost_rates))
+    if planned is not None:
+        pprov = planned.provisioned_node_seconds(horizon_s)
+        out["planned_node_seconds"] = {_res_name(r): float(pprov[r])
+                                       for r in range(nres)}
+        if cost_rates is not None:
+            pcost = capacity_cost(planned, horizon_s, cost_rates)
+            out["planned_total_cost"] = pcost["total_cost"]
+            out["realized_vs_planned_cost_delta"] = float(
+                out["total_cost"] - pcost["total_cost"])
     if slo is not None:
         out.update(slo_metrics(rec, slo, deadlines))
     return out

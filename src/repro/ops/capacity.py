@@ -246,7 +246,13 @@ class ReactiveAutoscaler:
                     elif per_slot < self.low_watermark:
                         cap[r] = max(cap[r] * (1.0 - self.step),
                                      base_caps[r] * self.min_scale)
-                caps[b, r] = max(round(cap[r]), 1)
+                    caps[b, r] = max(round(cap[r]), 1)
+                else:
+                    # uncontrolled pools keep their base capacity verbatim:
+                    # the >= 1 floor above is a liveness guard for *scaled*
+                    # pools only and must not resurrect a deliberately
+                    # zero-capacity pool (e.g. one drained for maintenance)
+                    caps[b, r] = base_caps[r]
         times = np.arange(nbins) * self.interval_s
         return normalize(times, caps)
 

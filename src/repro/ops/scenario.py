@@ -25,7 +25,13 @@ from repro.ops.failures import FailureModel, OutageModel, RetryPolicy
 
 @dataclasses.dataclass(frozen=True)
 class CompiledScenario:
-    """Scenario materialized for one workload: what the engines execute."""
+    """Scenario materialized for one workload: what the engines execute.
+
+    ``schedule`` is the *planned* capacity timeline; under a closed-loop
+    ``controller`` the engines additionally record the realized action
+    timeline (``SimTrace.ctrl_times``/``ctrl_caps``), which
+    :func:`repro.ops.accounting.realized_schedule` splices back onto this
+    schedule for exact provisioned cost/utilization accounting."""
 
     schedule: CapacitySchedule
     attempts: np.ndarray                      # [N, T] i64 attempts per task
@@ -133,10 +139,11 @@ def stack_compiled_scenarios(compiled, n_max: int, horizon_s: float,
     /``backoff`` kwargs, plus ``attempt_service`` when any entry resamples
     retries — ``services`` must then supply each entry's base ``[N, T]``
     service matrix). Back-compat wrapper over
-    :func:`repro.core.batching.stack_scenarios`; per-attempt recording
-    stays OFF here (historical callers never read those tensors — pass
-    ``record_attempts=True`` to ``stack_scenarios`` directly for exact
-    retry accounting)."""
+    :func:`repro.core.batching.stack_scenarios`; per-attempt recording AND
+    realized-controller-timeline recording stay OFF here (historical
+    callers never read those tensors — pass ``record_attempts=True`` to
+    ``stack_scenarios`` directly for exact retry + closed-loop cost
+    accounting)."""
     from repro.core.batching import stack_scenarios
     return stack_scenarios(compiled, n_max, horizon_s, services=services,
-                           record_attempts=False)
+                           record_attempts=False, record_ctrl=False)

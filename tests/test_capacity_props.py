@@ -1,0 +1,218 @@
+"""Property tests for the capacity-schedule algebra and the realized-timeline
+recording (PR 4 satellite):
+
+  - :func:`normalize` invariants: t=0 anchor, strictly increasing times,
+    caps >= 0, last-duplicate-wins;
+  - :func:`apply_capacity_deltas`: overlay integral identity (adding
+    ``(t0, t1, r, d)`` changes the provisioned integral by exactly
+    ``d * |[t0, t1) ∩ [0, H)|`` when nothing clips) and the clip-at-zero
+    floor otherwise;
+  - :func:`CapacitySchedule.provisioned_node_seconds`: exact piecewise
+    integral, monotone in the horizon;
+  - wave-for-wave numpy-vs-jax parity of the engine-recorded controller
+    action timeline over random gains.
+
+Hypothesis drives the randomized versions (skipping cleanly when it is not
+installed, via the ``_hypothesis_compat`` shim); seeded deterministic
+sweeps of the same invariants always run so CI keeps the coverage either
+way.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import des, vdes
+from repro.core import model as M
+from repro.ops import (CapacitySchedule, ReactiveController, Scenario,
+                       apply_capacity_deltas, normalize, static_schedule)
+from test_des_engines import make_workload, platform
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator (suite order independence)."""
+    return np.random.default_rng(20261101)
+
+
+# ----------------------------------------------------------- shared checks
+
+def check_normalize_invariants(times, caps):
+    s = normalize(times, caps)
+    assert s.times[0] == 0.0                       # t=0 anchor
+    assert (np.diff(s.times) > 0).all()            # strictly increasing
+    assert (s.caps >= 0).all()                     # clipped at zero
+    assert s.caps.shape == (s.times.shape[0], np.asarray(caps).shape[1])
+    # piecewise lookup agrees with the last change at or before t
+    for t in np.linspace(0.0, float(s.times[-1]) + 10.0, 7):
+        k = int(np.searchsorted(s.times, t, side="right") - 1)
+        assert (s.at(t) == s.caps[max(k, 0)]).all()
+    return s
+
+
+def check_overlay_identity(sched, deltas, horizon):
+    base = sched.provisioned_node_seconds(horizon)
+    over = apply_capacity_deltas(sched, deltas)
+    assert (over.caps >= 0).all()
+    # if no interval ever drives a capacity negative, the overlay integral
+    # is exactly additive
+    expect = base.copy()
+    for t0, t1, r, d in deltas:
+        expect[int(r)] += d * max(min(t1, horizon) - max(t0, 0.0), 0.0)
+    got = over.provisioned_node_seconds(horizon)
+    if (expect >= -1e-9).all() and not _overlay_clips(sched, deltas):
+        assert np.allclose(got, expect), (deltas, got, expect)
+    else:                                          # clipping only adds back
+        assert (got >= expect - 1e-9).all()
+
+
+def _overlay_clips(sched, deltas) -> bool:
+    """Whether any delta interval would push a capacity below zero."""
+    cuts = sorted({float(t) for t in sched.times}
+                  | {max(float(t0), 0.0) for t0, *_ in deltas}
+                  | {max(float(t1), 0.0) for _, t1, *_ in deltas})
+    for t in cuts:
+        cap = sched.at(t).astype(np.int64).copy()
+        for t0, t1, r, d in deltas:
+            if t0 <= t < t1:
+                cap[int(r)] += int(d)
+        if (cap < 0).any():
+            return True
+    return False
+
+
+def check_timeline_parity(wl, plat, controller, horizon=400.0):
+    comp = Scenario(name="p", controller=controller).compile(
+        wl, plat, horizon, seed=1)
+    t_np = des.simulate(wl, plat, scenario=comp)
+    t_jx = vdes.simulate_to_trace(wl, plat, scenario=comp)
+    assert t_np.waves == t_jx.waves, "wave-level divergence"
+    assert np.array_equal(t_np.ctrl_times, t_jx.ctrl_times)
+    assert np.array_equal(t_np.ctrl_caps, t_jx.ctrl_caps)
+    assert t_np.ctrl_times.shape[0] <= des.ctrl_tick_bound(comp.controller)
+    if t_np.ctrl_times.shape[0]:
+        assert (np.diff(t_np.ctrl_times) > 0).all()
+
+
+# ------------------------------------------------------ deterministic sweeps
+
+def test_normalize_invariants_seeded(rng):
+    for _ in range(25):
+        k = int(rng.integers(1, 8))
+        times = np.concatenate([[0.0], rng.uniform(0.0, 500.0, k - 1)])
+        caps = rng.integers(-3, 9, (k, 2))
+        check_normalize_invariants(times, caps)
+
+
+def test_normalize_requires_t0_anchor():
+    with pytest.raises(ValueError, match="t=0"):
+        normalize(np.array([5.0]), np.array([[1, 1]]))
+
+
+def test_normalize_duplicate_timestamps_last_wins():
+    s = normalize(np.array([0.0, 10.0, 10.0]),
+                  np.array([[4, 4], [9, 9], [2, 2]]))
+    assert (s.at(10.0) == [2, 2]).all()
+
+
+def test_overlay_identity_seeded(rng):
+    for _ in range(25):
+        k = int(rng.integers(1, 5))
+        times = np.concatenate([[0.0], rng.uniform(0.0, 300.0, k - 1)])
+        sched = normalize(times, rng.integers(0, 8, (k, 2)))
+        deltas = [(float(rng.uniform(0, 250)), float(rng.uniform(0, 350)),
+                   int(rng.integers(0, 2)), int(rng.integers(-6, 7)))
+                  for _ in range(int(rng.integers(0, 4)))]
+        deltas = [(min(t0, t1), max(t0, t1), r, d) for t0, t1, r, d in deltas]
+        check_overlay_identity(sched, deltas, horizon=320.0)
+
+
+def test_provisioned_integral_exact_and_monotone(rng):
+    for _ in range(25):
+        k = int(rng.integers(1, 6))
+        times = np.sort(np.concatenate([[0.0], rng.uniform(0, 200.0, k - 1)]))
+        sched = normalize(times, rng.integers(0, 10, (k, 3)))
+        horizons = np.sort(rng.uniform(0.0, 400.0, 4))
+        prev = np.zeros(3)
+        for h in horizons:
+            got = sched.provisioned_node_seconds(float(h))
+            # brute-force Riemann check on the exact cut points
+            edges = np.unique(np.clip(np.concatenate([sched.times, [h]]),
+                                      0.0, h))
+            expect = np.zeros(3)
+            for lo, hi in zip(edges[:-1], edges[1:]):
+                expect += sched.at(lo) * (hi - lo)
+            assert np.allclose(got, expect)
+            assert (got >= prev - 1e-9).all()      # monotone in horizon
+            prev = got
+
+
+def test_recorded_timeline_parity_seeded(rng):
+    wl = make_workload(rng, 80, integer_time=True, horizon=300.0)
+    plat = platform(2, 2)
+    for _ in range(6):
+        ctrl = ReactiveController(
+            high_watermark=float(rng.uniform(0.05, 1.5)),
+            low_watermark=float(rng.uniform(-1.0, 0.05)),
+            step=float(rng.uniform(0.1, 1.0)),
+            min_scale=float(rng.uniform(0.0, 1.0)),
+            max_scale=float(rng.uniform(1.0, 6.0)),
+            interval_s=float(rng.integers(5, 60)),
+            cooldown_s=float(rng.choice([0.0, 25.0, 80.0])))
+        check_timeline_parity(wl, plat, ctrl)
+
+
+# ------------------------------------------------------- hypothesis-driven
+
+@given(times=st.lists(st.floats(0.0, 1000.0, allow_nan=False), min_size=0,
+                      max_size=8),
+       caps=st.lists(st.tuples(st.integers(-5, 12), st.integers(-5, 12)),
+                     min_size=9, max_size=9))
+@settings(max_examples=60, deadline=None)
+def test_normalize_invariants_prop(times, caps):
+    times = np.concatenate([[0.0], np.asarray(times, np.float64)])
+    caps = np.asarray(caps, np.int64)[: times.shape[0]]
+    check_normalize_invariants(times, caps)
+
+
+@given(times=st.lists(st.floats(0.0, 300.0, allow_nan=False), min_size=0,
+                      max_size=4),
+       caps=st.lists(st.tuples(st.integers(0, 8), st.integers(0, 8)),
+                     min_size=5, max_size=5),
+       deltas=st.lists(st.tuples(st.floats(0.0, 250.0, allow_nan=False),
+                                 st.floats(0.0, 350.0, allow_nan=False),
+                                 st.integers(0, 1), st.integers(-6, 7)),
+                       min_size=0, max_size=3))
+@settings(max_examples=60, deadline=None)
+def test_overlay_identity_prop(times, caps, deltas):
+    times = np.concatenate([[0.0], np.asarray(times, np.float64)])
+    sched = normalize(times, np.asarray(caps, np.int64)[: times.shape[0]])
+    deltas = [(min(t0, t1), max(t0, t1), r, d) for t0, t1, r, d in deltas]
+    check_overlay_identity(sched, deltas, horizon=320.0)
+
+
+@given(h1=st.floats(0.0, 500.0, allow_nan=False),
+       h2=st.floats(0.0, 500.0, allow_nan=False),
+       caps=st.lists(st.tuples(st.integers(0, 9)), min_size=1, max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_provisioned_monotone_prop(h1, h2, caps):
+    k = len(caps)
+    sched = normalize(np.arange(k, dtype=np.float64) * 40.0,
+                      np.asarray(caps, np.int64))
+    lo, hi = sorted([h1, h2])
+    assert (sched.provisioned_node_seconds(hi)
+            >= sched.provisioned_node_seconds(lo) - 1e-9).all()
+
+
+@given(hw=st.floats(0.05, 1.5, allow_nan=False),
+       lw=st.floats(-1.0, 0.05, allow_nan=False),
+       step=st.floats(0.1, 1.0, allow_nan=False),
+       mx=st.floats(1.0, 6.0, allow_nan=False),
+       interval=st.integers(5, 60),
+       cooldown=st.sampled_from([0.0, 25.0, 80.0]))
+@settings(max_examples=12, deadline=None)
+def test_recorded_timeline_parity_prop(hw, lw, step, mx, interval, cooldown):
+    wl = make_workload(np.random.default_rng(77), 60, integer_time=True,
+                       horizon=300.0)
+    check_timeline_parity(wl, platform(2, 2), ReactiveController(
+        high_watermark=hw, low_watermark=lw, step=step, max_scale=mx,
+        interval_s=float(interval), cooldown_s=cooldown))

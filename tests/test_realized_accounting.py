@@ -1,0 +1,345 @@
+"""Realized capacity-timeline accounting under closed-loop control (PR 4):
+
+  - both engines record the controller action timeline identically
+    (ctrl_times/ctrl_caps), wave-for-wave;
+  - realized_schedule splices the timeline onto the planned schedule
+    (hand-computed, clip-at-zero, bit-identical passthrough with no
+    controller);
+  - scenario summaries charge the realized schedule: utilization vs
+    provisioned stays <= 1 where the planned-schedule accounting exceeded
+    it, scale-up raises total_cost, and the planned figures ride alongside;
+  - batched Sweep/ensemble paths report the same realized accounting as
+    per-point numpy runs;
+  - the wait-SLO violation rate no longer counts stranded tasks (NaN wait);
+  - ReactiveAutoscaler leaves uncontrolled pools at their base capacity
+    (a drained zero-capacity pool stays drained);
+  - the make-ci drift gate flags any nonzero *drift* artifact key.
+"""
+import dataclasses
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import des, trace, vdes
+from repro.core import model as M
+from repro.core.des import ctrl_tick_bound
+from repro.core.experiment import ExperimentSpec, Sweep, run_experiment
+from repro.ops import (CapacitySchedule, CompiledScenario, MaintenanceWindows,
+                       ReactiveAutoscaler, ReactiveController, Scenario,
+                       SLOConfig, normalize, realized_schedule,
+                       scenario_summary, slo_metrics, static_schedule)
+from test_des_engines import make_workload, platform
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator (suite order independence)."""
+    return np.random.default_rng(20261015)
+
+
+def int_workload(rng, n=120, horizon=400.0, **kw):
+    return make_workload(rng, n, integer_time=True, horizon=horizon, **kw)
+
+
+def _up_controller(interval=20.0, **kw):
+    """Gains that scale UP under congestion (the accounting acceptance
+    scenario: planned-schedule utilization would exceed 1.0)."""
+    kw.setdefault("high_watermark", 0.3)
+    kw.setdefault("step", 0.5)
+    kw.setdefault("max_scale", 4.0)
+    return ReactiveController(interval_s=interval, **kw)
+
+
+def _single_res_workload(n, svc, arrivals=None):
+    return M.Workload(
+        arrival=np.zeros(n) if arrivals is None
+        else np.asarray(arrivals, np.float64),
+        n_tasks=np.ones(n, np.int32),
+        task_type=np.zeros((n, 1), np.int32),
+        task_res=np.zeros((n, 1), np.int32),
+        exec_time=np.full((n, 1), float(svc)),
+        read_bytes=np.zeros((n, 1)), write_bytes=np.zeros((n, 1)),
+        framework=np.zeros(n, np.int32), priority=np.zeros(n, np.float32),
+        model_perf=np.zeros(n, np.float32), model_size=np.zeros(n, np.float32),
+        model_clever=np.zeros(n, np.float32))
+
+
+def _both_engines(wl, plat, comp):
+    t_np = des.simulate(wl, plat, scenario=comp)
+    t_jx = vdes.simulate_to_trace(wl, plat, scenario=comp)
+    return t_np, t_jx
+
+
+# ------------------------------------------------- engine-recorded timeline
+
+def test_engines_record_identical_action_timeline(rng):
+    wl = int_workload(rng)
+    plat = platform(2, 2)
+    comp = Scenario(name="c", controller=_up_controller()).compile(
+        wl, plat, 400.0, seed=3)
+    t_np, t_jx = _both_engines(wl, plat, comp)
+    assert t_np.waves == t_jx.waves
+    assert t_np.ctrl_times.shape[0] > 0          # controller actually acted
+    assert np.array_equal(t_np.ctrl_times, t_jx.ctrl_times)
+    assert np.array_equal(t_np.ctrl_caps, t_jx.ctrl_caps)
+    # actions land on the evaluation grid, strictly increasing, bounded by
+    # the compile-time tick grid
+    assert (np.diff(t_np.ctrl_times) > 0).all()
+    assert t_np.ctrl_times.shape[0] <= ctrl_tick_bound(comp.controller)
+
+
+def test_timeline_hand_computed_doubling_controller():
+    """5 jobs x 100 s on one base slot, doubling every 10 s (the PR 3
+    cooldown test's workload): actions at t=10 (target 2) and t=20
+    (target 4, the clamp)."""
+    wl = _single_res_workload(5, 100.0)
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    comp = Scenario(name="c", controller=ReactiveController(
+        high_watermark=0.4, low_watermark=-1.0, step=1.0, min_scale=1.0,
+        max_scale=4.0, interval_s=10.0)).compile(wl, plat, 1000.0)
+    for tr in _both_engines(wl, plat, comp):
+        assert tr.ctrl_times.tolist() == [10.0, 20.0]
+        assert tr.ctrl_caps.tolist() == [[2], [4]]
+    # realized schedule: 1 slot on [0,10), 2 on [10,20), 4 from t=20
+    rs = realized_schedule(des.simulate(wl, plat, scenario=comp), comp)
+    assert rs.times.tolist() == [0.0, 10.0, 20.0]
+    assert rs.caps[:, 0].tolist() == [1, 2, 4]
+    assert rs.provisioned_node_seconds(1000.0)[0] == pytest.approx(
+        1 * 10 + 2 * 10 + 4 * 980)
+
+
+def test_no_controller_realized_is_planned_object(rng):
+    """Without a controller (or with one that never acts) the realized
+    schedule IS the planned schedule — same object, summaries unchanged."""
+    wl = int_workload(rng, n=40)
+    plat = platform()
+    comp = CompiledScenario(schedule=static_schedule(plat.capacities),
+                            attempts=np.ones(wl.task_type.shape, np.int64))
+    tr = des.simulate(wl, plat, scenario=comp)
+    assert tr.ctrl_times is None
+    assert realized_schedule(tr, comp) is comp.schedule
+    # an enabled controller whose watermarks never trip: empty timeline,
+    # same passthrough
+    calm = Scenario(name="calm", controller=ReactiveController(
+        high_watermark=1e9, low_watermark=-1e9, interval_s=50.0)).compile(
+            wl, plat, 400.0)
+    t_np, t_jx = _both_engines(wl, plat, calm)
+    assert t_np.ctrl_times.shape == (0,) and t_jx.ctrl_times.shape == (0,)
+    assert realized_schedule(t_np, calm) is calm.schedule
+
+
+def test_realized_schedule_composes_with_planned_steps_and_clips():
+    """Controller delta overlays the planned schedule (delta = target -
+    base) and the sum clips at zero."""
+    sched = normalize(np.array([0.0, 50.0]), np.array([[2], [0]]))
+    ctrl = ReactiveController().compile(np.array([2]), 100.0)   # base 2
+    tr = types.SimpleNamespace(ctrl_times=np.array([10.0]),
+                               ctrl_caps=np.array([[1]]))       # delta -1
+    comp = CompiledScenario(schedule=sched,
+                            attempts=np.ones((1, 1), np.int64),
+                            controller=ctrl)
+    rs = realized_schedule(tr, comp)
+    assert rs.times.tolist() == [0.0, 10.0, 50.0]
+    # [2, 2-1, max(0-1, 0)]
+    assert rs.caps[:, 0].tolist() == [2, 1, 0]
+
+
+# ----------------------------------------------------- summary integration
+
+def test_utilization_vs_provisioned_bounded_under_scale_up(rng):
+    """The PR 4 acceptance: with the controller scaling up under
+    congestion, charging the planned schedule made utilization exceed 1.0
+    (scale-up looked free); charging the realized timeline bounds it."""
+    wl = int_workload(rng)
+    plat = platform(2, 2)
+    # a pure scale-up controller (low watermark unreachable): capacity
+    # never decreases, so no running job can overhang a scale-down and the
+    # realized-utilization bound is exact
+    comp = Scenario(name="c", controller=_up_controller(
+        low_watermark=-1.0)).compile(wl, plat, 400.0, seed=3)
+    tr = des.simulate(wl, plat, scenario=comp)
+    rec = trace.flatten_trace(tr, wl)
+    planned = scenario_summary(rec, comp.schedule, 400.0,
+                               cost_rates=plat.cost_rates)
+    realized = scenario_summary(rec, realized_schedule(tr, comp), 400.0,
+                                cost_rates=plat.cost_rates,
+                                planned=comp.schedule)
+    assert max(planned["utilization_vs_provisioned"].values()) > 1.0
+    for v in realized["utilization_vs_provisioned"].values():
+        assert 0.0 <= v <= 1.0 + 1e-9
+    # scale-up is not free: realized cost > planned cost, delta positive
+    assert realized["total_cost"] > realized["planned_total_cost"]
+    assert realized["realized_vs_planned_cost_delta"] == pytest.approx(
+        realized["total_cost"] - realized["planned_total_cost"])
+    assert realized["planned_total_cost"] == pytest.approx(
+        planned["total_cost"])
+
+
+def test_run_experiment_charges_realized_timeline_both_engines(rng):
+    wl = int_workload(rng, n=80, horizon=300.0)
+    base = ExperimentSpec(name="x", platform=platform(), horizon_s=300.0,
+                          workload=wl).with_(controller=_up_controller())
+    sums = {}
+    for eng in ("numpy", "jax"):
+        s = run_experiment(base.with_(engine=eng)).summary
+        assert {"planned_total_cost", "realized_vs_planned_cost_delta",
+                "planned_node_seconds"} <= set(s)
+        assert s["total_cost"] == pytest.approx(
+            s["planned_total_cost"] + s["realized_vs_planned_cost_delta"])
+        sums[eng] = s
+    # identical realized accounting across engines (integer times)
+    for k in ("total_cost", "planned_total_cost",
+              "realized_vs_planned_cost_delta"):
+        assert sums["numpy"][k] == pytest.approx(sums["jax"][k], abs=1e-9), k
+    # a controller-less run gains none of the new keys
+    s0 = run_experiment(dataclasses.replace(
+        base.with_(engine="jax"),
+        scenario=Scenario(name="s", slo=SLOConfig()))).summary
+    assert "planned_total_cost" not in s0
+    assert "realized_vs_planned_cost_delta" not in s0
+
+
+def test_scale_down_controller_reduces_realized_cost(rng):
+    """An idle platform with a scale-down controller: realized cost drops
+    below planned (the delta is negative) — scale-down is now credited."""
+    wl = int_workload(rng, n=10, horizon=50.0)
+    plat = platform(8, 8)                      # way over-provisioned
+    base = ExperimentSpec(name="idle", platform=plat, horizon_s=400.0,
+                          workload=wl).with_(controller=ReactiveController(
+                              high_watermark=1e9, low_watermark=0.9,
+                              step=0.5, min_scale=0.25, interval_s=20.0))
+    for eng in ("numpy", "jax"):
+        s = run_experiment(base.with_(engine=eng)).summary
+        assert s["realized_vs_planned_cost_delta"] < 0.0, eng
+        assert s["total_cost"] < s["planned_total_cost"], eng
+
+
+def test_sweep_batched_realized_accounting_matches_serial_numpy(rng):
+    """Controller-gain grid through the batched jit+vmap path: every point's
+    realized cost keys equal its per-point numpy run."""
+    wl = int_workload(rng, n=60, horizon=300.0)
+    base = ExperimentSpec(name="cg", platform=platform(), horizon_s=300.0,
+                          engine="jax", workload=wl)
+    sw = Sweep(base, {"controller": [None, _up_controller(),
+                                     _up_controller(interval=50.0,
+                                                    cooldown_s=80.0)]})
+    batched = sw.run()
+    serial = [run_experiment(p.with_(engine="numpy")) for p in sw.points()]
+    for b, s in zip(batched, serial):
+        name = b.experiment.name
+        for k in ("total_cost", "planned_total_cost",
+                  "realized_vs_planned_cost_delta"):
+            assert (k in b.summary) == (k in s.summary), (name, k)
+            if k in s.summary:
+                assert b.summary[k] == pytest.approx(s.summary[k],
+                                                     abs=1e-9), (name, k)
+    assert "realized_vs_planned_cost_delta" not in batched[0].summary
+    assert "realized_vs_planned_cost_delta" in batched[1].summary
+
+
+def test_replica_ensemble_aggregates_realized_delta(rng):
+    wl = int_workload(rng, n=60, horizon=300.0)
+    spec = dataclasses.replace(
+        ExperimentSpec(name="mc", platform=platform(), horizon_s=300.0,
+                       engine="jax", workload=wl).with_(
+                           controller=_up_controller()),
+        n_replicas=3)
+    res = run_experiment(spec)
+    assert res.summary["n_replicas"] == 3
+    assert res.summary["realized_vs_planned_cost_delta"] == pytest.approx(
+        float(np.mean([s["realized_vs_planned_cost_delta"]
+                       for s in res.replica_summaries])))
+
+
+def test_timeline_survives_maintenance_composition(rng):
+    """Controller + maintenance window: the recorded timeline still agrees
+    across engines and the realized schedule keeps the window's cut."""
+    wl = int_workload(rng)
+    plat = platform(3, 2)
+    comp = Scenario(
+        name="c", controller=_up_controller(interval=25.0),
+        capacity=MaintenanceWindows(
+            windows=((50.0, 150.0, 0, 1.0 / 3.0),))).compile(
+                wl, plat, 400.0, seed=3)
+    t_np, t_jx = _both_engines(wl, plat, comp)
+    assert np.array_equal(t_np.ctrl_times, t_jx.ctrl_times)
+    assert np.array_equal(t_np.ctrl_caps, t_jx.ctrl_caps)
+    rs = realized_schedule(t_np, comp)
+    assert set(comp.schedule.times.tolist()) <= set(rs.times.tolist())
+
+
+# ------------------------------------------------ satellite: stranded SLO
+
+def test_wait_slo_ignores_stranded_tasks():
+    """A stranded task (NaN wait, attempts == 0) must not count as a
+    wait-SLO violation (NaN <= x is False): it is reported through
+    stranded_task_frac only."""
+    wl = _single_res_workload(2, 3.0, arrivals=[0.0, 50.0])
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("s", 1),))
+    # capacity drops to zero before job 1 arrives: it strands forever
+    comp = CompiledScenario(
+        schedule=normalize(np.array([0.0, 10.0]), np.array([[1], [0]])),
+        attempts=np.ones((2, 1), np.int64))
+    for tr in _both_engines(wl, plat, comp):
+        rec = trace.flatten_trace(tr, wl)
+        assert np.isnan(rec.wait).any()            # job 1 stranded
+        m = slo_metrics(rec, SLOConfig(pipeline_deadline_s=1e9,
+                                       task_wait_slo_s=1e9))
+        assert m["wait_slo_violation_rate"] == 0.0  # pre-fix: 0.5
+        s = scenario_summary(rec, comp.schedule, 100.0, slo=SLOConfig(
+            pipeline_deadline_s=1e9, task_wait_slo_s=1e9))
+        assert s["stranded_task_frac"] == pytest.approx(0.5)
+        assert s["wait_slo_violation_rate"] == 0.0
+
+
+def test_wait_slo_still_counts_real_violations(rng):
+    wl = int_workload(rng, n=80)
+    plat = platform(1, 1)                          # heavy queueing
+    rec = trace.flatten_trace(des.simulate(wl, plat), wl)
+    m = slo_metrics(rec, SLOConfig(task_wait_slo_s=0.0))
+    assert m["wait_slo_violation_rate"] > 0.0
+
+
+# --------------------------------- satellite: autoscaler uncontrolled pools
+
+def test_reactive_autoscaler_leaves_uncontrolled_pool_at_base(rng):
+    """A zero-capacity pool excluded from scaling must stay at zero — the
+    planner's >= 1 liveness floor only applies to pools it controls."""
+    wl = int_workload(rng, n=60, horizon=300.0)
+    wl.task_res[:] = 0                             # nothing routes to pool 1
+    plat = M.PlatformConfig(resources=(
+        M.ResourceConfig("a", 3), M.ResourceConfig("drained", 0)))
+    sched = ReactiveAutoscaler(interval_s=60.0, resources=(0,)).build(
+        plat.capacities, 300.0, workload=wl, platform=plat)
+    assert (sched.caps[:, 1] == 0).all()           # pre-fix: resurrected to 1
+    assert (sched.caps[:, 0] >= 1).all()           # controlled pool floored
+
+
+def test_reactive_autoscaler_uncontrolled_base_not_floored(rng):
+    """Uncontrolled pools track the base exactly (no rounding, no floor)."""
+    auto = ReactiveAutoscaler(resources=(0,))
+    qlen = np.ones((2, 4)) * 100.0                 # heavy congestion
+    sched = auto._plan(np.array([4, 7]), qlen)
+    assert (sched.caps[:, 1] == 7).all()
+    assert (np.diff(sched.caps[:, 0]) >= 0).all()  # pool 0 scales up
+
+
+# ---------------------------------------------- satellite: CI drift gate
+
+def test_check_drift_flags_nonzero_artifacts(tmp_path):
+    from benchmarks.check_drift import check
+    art = tmp_path / "artifacts"
+    art.mkdir()
+    (art / "BENCH_good.json").write_text(json.dumps(
+        {"numpy_vs_jax_drift": 0.0, "other_metric": 3.5}))
+    assert check(str(art)) == []
+    (art / "BENCH_bad.json").write_text(json.dumps(
+        {"realized_timeline_drift": 2.0, "max_rel_drift_vs_serial": 0.0}))
+    bad = check(str(art))
+    assert bad == [("BENCH_bad.json", "realized_timeline_drift", 2.0)]
+    # non-numeric drift values (e.g. NaN serialized as null) also fail
+    (art / "BENCH_null.json").write_text(json.dumps(
+        {"numpy_vs_jax_drift": None}))
+    assert ("BENCH_null.json", "numpy_vs_jax_drift", None) in check(str(art))

@@ -4,7 +4,9 @@
     run_experiment calls (both engines, with and without scenarios, with a
     heterogeneous policy axis in one jit+vmap call);
   - the deprecated two-resource Experiment shim is fully removed;
-  - ragged platform grids warn and fall back to the numpy serial loop;
+  - ragged platform grids auto-pad to the common resource superset and stay
+    on the batched path (only genuinely incompatible grids — e.g. mixed
+    max_tasks — warn and fall back to the numpy serial loop);
   - retry resampling (per-attempt service times) with engine parity and the
     flag-off escape hatch;
   - per-attempt start/finish records and exact busy-time accounting.
@@ -199,26 +201,52 @@ def test_sweep_single_point_throughput_counts_pipelines(rng):
         wl.n / res[0].summary["wall_s"], rel=1e-6)
 
 
-def test_sweep_ragged_platforms_warn_and_fall_back_to_numpy(rng):
-    """A ragged platform grid cannot batch: it must warn (naming the
-    offending points) and fall back to the exact numpy serial loop, whose
-    results match running the points on the numpy engine directly."""
+def test_sweep_ragged_platforms_auto_pad_onto_batched_path(rng):
+    """A ragged platform grid (2- and 3-resource points) is auto-padded to
+    the common resource superset with inert zero-capacity/zero-cost pools:
+    no warning, no numpy fallback, and every point matches its own numpy
+    serial run exactly."""
+    import warnings as _warnings
     wl = int_workload(rng, n=20)
     p3 = M.PlatformConfig(resources=(
         M.ResourceConfig("a", 3), M.ResourceConfig("b", 2),
         M.ResourceConfig("c", 2)))
     base = ExperimentSpec(name="g", platform=platform(), horizon_s=300.0,
-                          engine="jax", workload=wl)
+                          engine="jax", workload=wl,
+                          scenario=Scenario(name="s", slo=SLOConfig()))
     sw = Sweep(base, {"platform": [platform(), p3]})
-    with pytest.warns(RuntimeWarning, match="uniform resource count"):
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")        # any warning fails the test
         res = sw.run()
     assert len(res) == 2
     serial = [run_experiment(p.with_(engine="numpy")) for p in sw.points()]
     for b, s in zip(res, serial):
         assert b.summary["mean_wait_s"] == pytest.approx(
-            s.summary["mean_wait_s"])
-        # the warning names the point that disagrees with the first
+            s.summary["mean_wait_s"], abs=1e-2)
+        # accounting unchanged by the inert padding: the cost of the padded
+        # point equals the unpadded serial run's
+        assert b.summary["total_cost"] == pytest.approx(
+            s.summary["total_cost"], abs=1e-9)
         assert "platform=" in b.experiment.name
+
+
+def test_sweep_genuinely_incompatible_grid_warns_and_falls_back(rng):
+    """Pinned workloads disagreeing on max_tasks cannot share one
+    rectangular batch even with platform padding: that still warns and
+    falls back to the exact numpy serial loop."""
+    wl_a = int_workload(rng, n=20, max_tasks=3)
+    wl_b = int_workload(rng, n=20, max_tasks=5)
+    base = ExperimentSpec(name="g", platform=platform(), horizon_s=300.0,
+                          engine="jax")
+    specs = [base.with_(workload=wl_a, name="a"),
+             base.with_(workload=wl_b, name="b")]
+    with pytest.warns(RuntimeWarning, match="max_tasks"):
+        res = get_engine("jax").run_sweep(specs)
+    assert len(res) == 2
+    serial = [run_experiment(p.with_(engine="numpy")) for p in specs]
+    for b, s in zip(res, serial):
+        assert b.summary["mean_wait_s"] == pytest.approx(
+            s.summary["mean_wait_s"])
 
 
 # ------------------------------------------------------- retry resampling
