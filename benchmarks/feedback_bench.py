@@ -1,0 +1,198 @@
+"""Model-lifecycle feedback loop: in-engine batched grid vs the serial
+reference loop (PR 5 acceptance).
+
+Two measurements, one report (``artifacts/BENCH_feedback.json``):
+
+  1. **One-call trigger grid vs serial loop**: a >= 12-point lifecycle-policy
+     grid (``trigger:drift_threshold`` x ``trigger:cooldown_s`` x
+     ``fleet:drift_scale``) through ``Sweep`` on the JAX engine — the whole
+     grid is ONE ``jit``+``vmap`` ``simulate_ensemble`` call — against the
+     serial reference (one exact numpy-engine run per point, the successor
+     of the old windowed ``run_feedback_simulation`` co-simulation). Also
+     reports the **cost-vs-staleness frontier** the grid traces out
+     (provisioned cost vs mean staleness / retrain count per point).
+  2. **feedback_parity_drift**: numpy-vs-jax wave-for-wave parity with the
+     feedback stage enabled on an integer-time workload — the max absolute
+     difference over task timestamps, trigger times, redeploy times, AND
+     the per-tick performance/staleness timelines. Must be exactly 0.0
+     (the fleet stage accumulates presampled f32 drift increments in both
+     engines); ``benchmarks/check_drift.py`` gates it in ``make ci``.
+
+``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon/grid for CI.
+
+  PYTHONPATH=src python -m benchmarks.run feedback
+  PYTHONPATH=src python benchmarks/feedback_bench.py --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import jax
+
+from benchmarks.common import ART, fitted_params
+from repro.core import des, vdes
+from repro.core.experiment import ExperimentSpec, Sweep, run_experiment
+from repro.core.metrics import FLEET_FIELDS
+from repro.core.runtime import FleetSpec, TriggerSpec
+from repro.core.synthesizer import synthesize_workload
+from repro.ops import Scenario
+from repro.ops.scenario import compile_fleet
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_feedback.json"))
+
+
+def _integer_workload(horizon_s: float):
+    """Synthesized workload snapped to integer times (arrival floor, exec
+    ceil, no IO) so numpy f64 and JAX f32 agree exactly — the drift metric
+    is then a real parity check, not float noise."""
+    params = fitted_params()
+    wl = synthesize_workload(params, jax.random.PRNGKey(31), horizon_s)
+    wl.arrival = np.floor(wl.arrival)
+    wl.exec_time = np.ceil(wl.exec_time)
+    wl.read_bytes[:] = 0.0
+    wl.write_bytes[:] = 0.0
+    return wl
+
+
+def _fleet_tensor(n_models: int):
+    """Deterministic drift processes, seasonal OFF (the bit-parity
+    configuration) — accelerated-aging rates so a sub-day horizon sees the
+    whole trigger->retrain->redeploy cycle several times."""
+    r = np.random.default_rng(5)
+    fl = np.zeros((n_models, FLEET_FIELDS), np.float32)
+    fl[:, 0] = np.clip(r.beta(10, 3, n_models), 0.5, 0.995)
+    fl[:, 1] = r.lognormal(np.log(2e-5), 0.6, n_models)   # gradual /s
+    fl[:, 2] = r.lognormal(np.log(1 / (4 * 3600.0)), 0.5, n_models)
+    fl[:, 3] = r.uniform(0.01, 0.05, n_models)
+    fl[:, 5] = 7 * 24 * 3600.0
+    return fl
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.125 if smoke else 0.5) * 86400.0
+    n_models = 6 if smoke else 12
+    interval = 900.0
+    params = fitted_params()
+    trig = TriggerSpec(drift_threshold=0.04, cooldown_s=3600.0,
+                       obs_noise=0.005, interval_s=interval,
+                       retrain_durations=(1200.0, 90.0, 30.0))
+    base = ExperimentSpec(name="fb", horizon_s=horizon, engine="jax",
+                          seed=31, scenario=Scenario(name="static"),
+                          fleet=FleetSpec(params=_fleet_tensor(n_models)),
+                          trigger=trig).with_(
+        **{"capacity:compute_cluster": 8, "capacity:learning_cluster": 6})
+
+    axes = {"trigger:drift_threshold": [0.02, 0.04, 0.08],
+            "trigger:cooldown_s": [1800.0, 7200.0],
+            "fleet:drift_scale": [1.0, 2.0]}      # 3 x 2 x 2 = 12 points
+    sw = Sweep(base, axes)
+    points = sw.points()
+
+    # --- batched: the whole lifecycle-policy grid in ONE jit+vmap call
+    # (workload synthesis deduped across the grid, one XLA compile)
+    sw.run(params)                              # compile
+    t0 = time.perf_counter()
+    batched = sw.run(params)
+    wall_batched = time.perf_counter() - t0
+
+    # --- serial reference loop (the old windowed co-simulation's working
+    # style: one exact numpy-engine run per grid point, each paying its
+    # own synthesis — what a lifecycle-policy study cost before PR 5)
+    t0 = time.perf_counter()
+    serial = [run_experiment(p.with_(engine="numpy"), params)
+              for p in points]
+    wall_serial = time.perf_counter() - t0
+
+    # --- cost-vs-staleness frontier + batched-vs-serial summary gap
+    # (synthesized f64-vs-f32 workloads: a small gap is float noise, NOT
+    # engine drift — the gated 0.0 parity check runs below on an
+    # integer-time workload)
+    frontier = []
+    summary_gap = 0.0
+    for p, b, s in zip(points, batched, serial):
+        frontier.append({
+            "point": p.name.split("/", 1)[-1],
+            "total_cost": b.summary["total_cost"],
+            "retrain_node_hours":
+                b.summary["lifecycle"]["retrain_node_seconds"] / 3600.0,
+            "mean_staleness": b.summary["mean_staleness"],
+            "staleness_integral_s": b.summary["staleness_integral_s"],
+            "n_retrained": b.summary["n_retrained"],
+        })
+        summary_gap = max(
+            summary_gap,
+            abs(b.summary["mean_staleness"] - s.summary["mean_staleness"]))
+
+    # --- engine-level parity: one config, numpy vs jax, wave-for-wave on
+    # an integer-time workload (exactly representable in f32)
+    wl = _integer_workload(horizon)
+    cf, ext = compile_fleet(base.fleet, trig, wl, base.platform, horizon,
+                            seed=0)
+    t_np = des.simulate(ext, base.platform, fleet=cf)
+    t_jx = vdes.simulate_to_trace(ext, base.platform, fleet=cf)
+    live = np.arange(ext.max_tasks)[None, :] < ext.n_tasks[:, None]
+    live = live & np.isfinite(t_np.arrival)[:, None]
+    drift = max(
+        float(np.max(np.abs(np.where(live, np.nan_to_num(t_np.start), 0.0)
+                            - np.where(live, np.nan_to_num(t_jx.start),
+                                       0.0)))),
+        float(np.max(np.abs(np.nan_to_num(t_np.fleet_perf)
+                            - np.nan_to_num(t_jx.fleet_perf)))),
+        float(np.max(np.abs(np.nan_to_num(t_np.fleet_stale)
+                            - np.nan_to_num(t_jx.fleet_stale)))))
+    if t_np.fleet_times.shape == t_jx.fleet_times.shape:
+        drift = max(drift,
+                    float(np.max(np.abs(t_np.fleet_times - t_jx.fleet_times),
+                                 initial=0.0)),
+                    float(np.max(np.abs(t_np.fleet_model - t_jx.fleet_model),
+                                 initial=0.0)))
+    else:               # different action counts: report the count gap
+        drift = max(drift, float(abs(t_np.fleet_times.shape[0]
+                                     - t_jx.fleet_times.shape[0])))
+    waves_agree = bool(t_np.waves == t_jx.waves)
+
+    report = {
+        "smoke": smoke,
+        "horizon_s": horizon,
+        "n_models": n_models,
+        "n_pipelines": int(batched[0].summary["n_pipelines"]),
+        "grid_points": len(points),
+        "wall_batched_s": wall_batched,
+        "wall_serial_s": wall_serial,
+        "speedup_vs_serial": wall_serial / max(wall_batched, 1e-9),
+        "n_triggered_total": int(sum(b.summary["n_triggered"]
+                                     for b in batched)),
+        "n_retrained_total": int(sum(b.summary["n_retrained"]
+                                     for b in batched)),
+        "frontier": frontier,
+        "summary_batched_vs_serial_gap": summary_gap,
+        "feedback_parity_drift": drift,
+        "waves_agree": waves_agree,
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    yield ("feedback_grid_batched", wall_batched * 1e6,
+           f"{len(points)}pts_one_call")
+    yield ("feedback_grid_serial", wall_serial * 1e6,
+           f"speedup={report['speedup_vs_serial']:.2f}x")
+    yield ("feedback_parity_drift", 0, drift)
+    yield ("feedback_waves_agree", 0, waves_agree)
+    yield ("feedback_retrains", 0, report["n_retrained_total"])
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for row in rows():
+        print(",".join(str(x) for x in row))

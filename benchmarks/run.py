@@ -24,10 +24,11 @@ SUITES = [
     ("scenarios", "benchmarks.scenario_bench"),
     ("sweep", "benchmarks.sweep_bench"),
     ("controller", "benchmarks.controller_bench"),
+    ("feedback", "benchmarks.feedback_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
-SMOKE_SUITES = ("scenarios", "sweep", "controller")
+SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback")
 
 
 def main() -> None:

@@ -12,7 +12,8 @@ The paper's contribution as a composable JAX library:
 - :mod:`repro.core.des` / :mod:`repro.core.vdes` — exact reference engine and
   the vectorized JAX engine;
 - :mod:`repro.core.metrics`, :mod:`repro.core.runtime` — model metrics,
-  drift, triggers, feedback co-simulation;
+  the vectorized fleet drift algebra, and the declarative model-lifecycle
+  specs (FleetSpec/TriggerSpec) lowered into both engines;
 - :mod:`repro.core.trace` — columnar trace store + analytics;
 - :mod:`repro.core.experiment` — experiment runner / sweeps;
 - :mod:`repro.core.costmodel` — roofline-grounded task durations from the
@@ -25,5 +26,7 @@ from repro.core.experiment import (ExperimentResult, ExperimentSpec,  # noqa: F4
                                    Sweep, as_spec, run_experiment)
 from repro.core.fitting import SimulationParams, fit_simulation_params  # noqa: F401
 from repro.core.model import PlatformConfig, ResourceConfig, Workload  # noqa: F401
+from repro.core.runtime import (FleetSpec, LifecycleResult,  # noqa: F401
+                                TriggerSpec, run_feedback_simulation)
 from repro.core.synthesizer import synthesize_workload  # noqa: F401
 from repro.core.workload import generate_empirical_workload  # noqa: F401

@@ -162,13 +162,69 @@ def stack_scenarios(compiled, n_max: int, horizon_s: float,
     return out
 
 
+def stack_fleets(fleets, n_max: int) -> dict:
+    """Pad/stack per-entry :class:`~repro.ops.scenario.CompiledFleet`\\ s
+    (None entries allowed) into the fleet kwargs of
+    ``vdes.simulate_ensemble``: ``fleets [B, M, FLEET_FIELDS]``, ``trig
+    [B, TRIG_FIELDS]``, ``obs_noise``/``drift_inc [B, E, M]``, ``pool_gain
+    [B, P]``, ``pool_base [B]``, ``n_pool_eff [B]``.
+
+    Entries are padded to the batch's common (M, E, P): extra model rows
+    are all-zero (zero drift, zero threshold margin — they never trigger),
+    extra tick rows are unreachable (each entry's own ``t_end`` exhausts
+    its grid first), extra pool slots are gated off by ``n_pool_eff``.
+    Entries WITHOUT a fleet get the all-zero disabled ``trig`` row
+    (interval <= 0 turns the stage off — exactly the no-fleet semantics)
+    and ``pool_base = n_max`` (no latent rows).
+    """
+    from repro.core.des import TRIG_FIELDS
+    from repro.core.metrics import FLEET_FIELDS
+    live = [f for f in fleets if f is not None]
+    if not live:
+        return {}
+    M_ = max(f.n_models for f in live)
+    E = max(f.n_ticks for f in live)
+    P = max(f.n_pool for f in live)
+    fl, tg, ob, ji, pg, pb, pe = [], [], [], [], [], [], []
+    for f in fleets:
+        if f is None:
+            fl.append(np.zeros((M_, FLEET_FIELDS), np.float32))
+            tg.append(np.zeros(TRIG_FIELDS, np.float32))
+            ob.append(np.zeros((E, M_), np.float32))
+            ji.append(np.zeros((E, M_), np.float32))
+            pg.append(np.zeros(P, np.float32))
+            pb.append(n_max)
+            pe.append(0)
+            continue
+        m_pad, e_pad, p_pad = (M_ - f.n_models, E - f.n_ticks,
+                               P - f.n_pool)
+        fl.append(np.pad(np.asarray(f.fleet, np.float32),
+                         ((0, m_pad), (0, 0))))
+        tg.append(np.asarray(f.trig, np.float32))
+        ob.append(np.pad(np.asarray(f.obs_noise, np.float32),
+                         ((0, e_pad), (0, m_pad))))
+        ji.append(np.pad(np.asarray(f.drift_inc, np.float32),
+                         ((0, e_pad), (0, m_pad))))
+        pg.append(np.pad(np.asarray(f.pool_gain, np.float32), (0, p_pad)))
+        pb.append(f.pool_base)
+        pe.append(f.n_pool)
+    return dict(fleets=np.stack(fl), trig=np.stack(tg),
+                obs_noise=np.stack(ob), drift_inc=np.stack(ji),
+                pool_gain=np.stack(pg),
+                pool_base=np.asarray(pb, np.int32),
+                n_pool_eff=np.asarray(pe, np.int32))
+
+
 def batch_trace(out: dict, idx: int, wl: M.Workload,
                 capacities: np.ndarray,
-                with_scenario: bool = True) -> M.SimTrace:
+                with_scenario: bool = True, fleet=None) -> M.SimTrace:
     """Slice entry ``idx`` of a ``simulate_ensemble`` result back into a
     numpy :class:`SimTrace` for ``wl`` (dropping padded pipelines). With
     ``with_scenario=False`` the attempt/completion columns are omitted so
-    the trace is indistinguishable from a plain single-replica run."""
+    the trace is indistinguishable from a plain single-replica run.
+    ``fleet`` (the entry's :class:`~repro.ops.scenario.CompiledFleet`)
+    slices the entry's own model/tick/pool extents back out of the padded
+    lifecycle tensors."""
     n = wl.n
     sl = lambda k: np.asarray(out[k][idx][:n], np.float64)
     ctrl_times = ctrl_caps = None
@@ -176,15 +232,25 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
         from repro.core.des import unpack_ctrl_actions
         ctrl_times, ctrl_caps = unpack_ctrl_actions(out["ctrl_act"][idx],
                                                     out["ctrl_n"][idx])
+    fl_cols = {}
+    arrival = np.asarray(wl.arrival, np.float64)
+    if fleet is not None and "fleet_perf" in out:
+        from repro.core.des import fleet_trace_columns
+        E, M_, P = fleet.n_ticks, fleet.n_models, fleet.n_pool
+        arrival, fl_cols = fleet_trace_columns(
+            fleet, arrival, out["pool_arr"][idx][:P],
+            out["fleet_act"][idx], out["fleet_n"][idx],
+            out["fleet_perf"][idx][:E, :M_],
+            out["fleet_stale"][idx][:E, :M_])
     return M.SimTrace(
         start=sl("start"), finish=sl("finish"), ready=sl("ready"),
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
-        task_type=wl.task_type, arrival=np.asarray(wl.arrival, np.float64),
+        task_type=wl.task_type, arrival=arrival,
         capacities=np.asarray(capacities, np.int64),
         attempts=np.asarray(out["attempts"][idx][:n], np.int64)
         if with_scenario else None,
         completed=np.asarray(out["done"][idx][:n])
-        if with_scenario else None,
+        if with_scenario or fleet is not None else None,
         att_start=sl("att_start") if with_scenario and "att_start" in out
         else None,
         att_finish=sl("att_finish") if with_scenario and "att_finish" in out
@@ -192,4 +258,5 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
         ctrl_times=ctrl_times,
         ctrl_caps=ctrl_caps,
         waves=int(out["waves"][idx]) if "waves" in out else None,
+        **fl_cols,
     )

@@ -45,6 +45,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import model as M
+from repro.core.metrics import fleet_performance_acc, fleet_staleness
 
 POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF = 0, 1, 2
 POLICY_NAMES = ["fifo", "priority", "sjf"]
@@ -103,7 +104,8 @@ def ctrl_tick_bound(ctrl) -> int:
 
 
 @functools.lru_cache(maxsize=512)
-def _tick_bound_walk(interval: float, t_first: float, t_end: float) -> int:
+def _tick_bound_walk(interval: float, t_first: float, t_end: float,
+                     what: str = "controller evaluation") -> int:
     interval = np.float32(interval)
     t = np.float32(t_first)
     t_end = np.float32(t_end)
@@ -112,15 +114,77 @@ def _tick_bound_walk(interval: float, t_first: float, t_end: float) -> int:
         count += 1
         if count > MAX_CTRL_SLOTS:
             raise ValueError(
-                f"controller evaluation grid exceeds {MAX_CTRL_SLOTS} ticks "
+                f"{what} grid exceeds {MAX_CTRL_SLOTS} ticks "
                 f"(interval_s={float(interval)} over "
-                f"[{float(t_first)}, {float(t_end)}]); the realized-action "
-                "recording buffer cannot be preallocated at this size")
+                f"[{float(t_first)}, {float(t_end)}]); the per-tick "
+                "recording buffers cannot be preallocated at this size")
         nxt = np.float32(t + interval)
         if nxt <= t:          # f32 ulp: the engines exhaust the grid here
             break
         t = nxt
     return count
+
+
+# TriggerParams flat-tensor header (compiled by repro.ops.scenario.
+# compile_fleet; shared by both engines' fleet stages):
+# [interval_s, cooldown_s, t_first, t_end, drift_threshold, arrival_delay_s].
+# interval_s <= 0 disables the stage (same convention as the controller).
+TRIG_FIELDS = 6
+
+# fleet-stage action kinds on the shared SimTrace action timeline
+FLEET_ACT_TRIGGER, FLEET_ACT_REDEPLOY = 0, 1
+
+
+def fleet_tick_grid(interval: float, t_first: float, t_end: float) -> np.ndarray:
+    """The drift-evaluation tick times a trigger grid can ever fire — walked
+    in f32 exactly as both engines advance it (``t += interval`` with the
+    exhaust-on-no-advance guard), so compile-time presampled per-tick tensors
+    (observation noise, sudden-drift increments) line up one-to-one with the
+    engines' evaluation instants. Returns f64 values of the f32 grid."""
+    n = _tick_bound_walk(float(interval), float(t_first), float(t_end),
+                         what="trigger evaluation")
+    interval = np.float32(interval)
+    t = np.float32(t_first)
+    out = np.zeros(n, np.float64)
+    for i in range(n):
+        out[i] = float(t)
+        t = np.float32(t + interval)
+    return out
+
+
+def unpack_fleet_actions(buf, count):
+    """Decode an engine's ``[A, 3]`` fleet-stage action buffer (first
+    ``count`` rows valid: f32 time, action kind, model id) into
+    ``(times [count] f64, kind [count] i64, model [count] i64)`` — the ONE
+    decoder shared by the single-replica and batched trace paths. Kinds:
+    ``FLEET_ACT_TRIGGER`` (a drift trigger fired and activated a retraining
+    pipeline) and ``FLEET_ACT_REDEPLOY`` (a retraining pipeline completed
+    and redeployed its model)."""
+    acts = np.asarray(buf, np.float64)[: int(count)]
+    return (acts[:, 0], np.rint(acts[:, 1]).astype(np.int64),
+            np.rint(acts[:, 2]).astype(np.int64))
+
+
+def fleet_trace_columns(fleet, arrival, pool_arr, fleet_act, fleet_n,
+                        fleet_perf, fleet_stale):
+    """Assemble the SimTrace fleet columns — and the pool-arrival override
+    on ``arrival`` (activation times; NaN = the latent pipeline never
+    triggered) — from an engine's recorded fleet outputs. The ONE assembly
+    shared by the numpy engine, the single-replica JAX path, and the
+    batched ``batch_trace`` slicer (callers pass tensors already sliced to
+    the entry's own model/tick/pool extents). Returns ``(arrival, cols)``
+    with ``cols`` ready to splat into the SimTrace constructor."""
+    pool_arr = np.asarray(pool_arr, np.float64)
+    arrival = np.asarray(arrival, np.float64).copy()
+    arrival[fleet.pool_base:fleet.pool_base + pool_arr.shape[0]] = pool_arr
+    ft, fk, fm = unpack_fleet_actions(fleet_act, fleet_n)
+    cols = dict(
+        fleet_perf=np.asarray(fleet_perf, np.float64),
+        fleet_stale=np.asarray(fleet_stale, np.float64),
+        fleet_ticks=np.asarray(fleet.tick_times, np.float64),
+        fleet_times=ft, fleet_kind=fk, fleet_model=fm,
+        fleet_pool_base=int(fleet.pool_base))
+    return arrival, cols
 
 
 def unpack_ctrl_actions(buf, count):
@@ -142,7 +206,15 @@ def _policy_key(policy: int, wl: M.Workload, svc_val: float,
 
 
 def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
-             policy: int = POLICY_FIFO, scenario=None) -> M.SimTrace:
+             policy: int = POLICY_FIFO, scenario=None,
+             fleet=None) -> M.SimTrace:
+    """``fleet`` is a :class:`repro.ops.scenario.CompiledFleet`: the model
+    lifecycle (run-time view) stage. ``wl`` must then be the *extended*
+    workload — the exogenous pipelines followed by the fleet's preallocated
+    pool of latent retraining pipelines (rows from ``fleet.pool_base``,
+    arrival ``inf`` = not yet activated). The stage mirrors
+    ``vdes._fleet_stage`` in **float32** (like the controller), so drift /
+    trigger / redeploy decisions agree bit-for-bit with the JAX engine."""
     platform = platform or M.PlatformConfig()
     service = wl.service_time(platform.datastore)
     n, T = wl.task_type.shape
@@ -199,6 +271,40 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     # closed-loop control. Mirrors vdes's [E, 1+nres] action buffer.
     ctrl_actions: list = []
 
+    # ---- model-lifecycle (fleet) stage state — float32 like the controller
+    # (vdes._fleet_stage must agree bit-for-bit). The trigger tick grid is
+    # walked exactly as the controller's; the pool of latent retraining
+    # pipelines occupies the trailing rows of the extended workload.
+    fl = fleet
+    if fl is not None and float(np.asarray(fl.trig, f32)[0]) <= 0.0:
+        fl = None
+    if fl is not None:
+        trig = np.asarray(fl.trig, f32)
+        (f_interval, f_cooldown, f_first, f_end, f_thr, f_delay) = (
+            f32(x) for x in trig[:TRIG_FIELDS])
+        fleet_t = np.asarray(fl.fleet, f32)
+        M_ = fleet_t.shape[0]
+        fl_obs = np.asarray(fl.obs_noise, f32)       # [E, M]
+        fl_inc = np.asarray(fl.drift_inc, f32)       # [E, M]
+        pool_gain = np.asarray(fl.pool_gain, f32)    # [P]
+        pool_base = int(fl.pool_base)
+        P = pool_gain.shape[0]
+        E_f = fl_obs.shape[0]
+        fl_perf0 = fleet_t[:, 0].copy()
+        fl_dep = np.zeros(M_, f32)
+        fl_acc = np.zeros(M_, f32)        # accumulated drift loss
+        fl_dep_tick = np.full(M_, -1, np.int64)   # accrue from tick > this
+        fl_fire = np.full(M_, -CTRL_INF, f32)
+        t_fleet = f_first if f_first <= f_end else CTRL_INF
+        fl_tick = 0
+        pool_model = np.full(P, -1, np.int64)
+        pool_next = 0
+        pool_arr = np.full(P, np.nan, np.float64)
+        redeployed = np.zeros(P, bool)
+        fleet_perf = np.full((E_f, M_), np.nan, f32)
+        fleet_stale = np.full((E_f, M_), np.nan, f32)
+    fleet_actions: list = []
+
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
     ready = np.full((n, T), np.nan)
@@ -221,8 +327,11 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     cap_ptr = 1
 
     # event heap: (time, kind, pid); kind 0 = finish, 1 = arrival/re-queue
-    # (finishes processed before arrivals at equal time)
-    ev: list = [(float(wl.arrival[i]), 1, i) for i in range(n)]
+    # (finishes processed before arrivals at equal time). Non-finite
+    # arrivals are latent retraining-pool rows: no event until a trigger
+    # activates them.
+    ev: list = [(float(wl.arrival[i]), 1, i) for i in range(n)
+                if np.isfinite(wl.arrival[i])]
     heapq.heapify(ev)
 
     def enqueue(pid: int, t: float) -> None:
@@ -257,7 +366,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         t_cap = cap_times[cap_ptr] if cap_ptr < K else np.inf
         t_ctrl = float(t_eval) if ctrl is not None and t_eval < CTRL_INF \
             else np.inf
-        t_star = min(t_heap, t_cap, t_ctrl)
+        t_fl = float(t_fleet) if fl is not None and t_fleet < CTRL_INF \
+            else np.inf
+        t_star = min(t_heap, t_cap, t_ctrl, t_fl)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
         wave_ev = []
@@ -307,8 +418,71 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             t_eval = t_nxt if (t_nxt <= c_end and t_nxt > t_eval) \
                 else CTRL_INF
         admit(t_star)
+        # ---- fleet stage: model lifecycle (f32 arithmetic, mirroring
+        # vdes._fleet_stage operation-for-operation). Runs AFTER admission:
+        # (a) retraining pipelines that completed this wave redeploy their
+        # model (drift state resets); (b) if this wave is a drift-evaluation
+        # tick, the [M] drift algebra is evaluated, performance/staleness
+        # timelines recorded, and firing triggers activate latent pool
+        # pipelines (arrival t_star + delay). Both action kinds append to
+        # the shared action timeline.
+        if fl is not None:
+            # (a) redeploys, in pool-slot order (same summation order as
+            # vdes's segment_sum over slots)
+            gain_m = np.zeros(M_, f32)
+            hit = np.zeros(M_, bool)
+            for j in range(pool_next):
+                if redeployed[j] or task_idx[pool_base + j] < \
+                        wl.n_tasks[pool_base + j]:
+                    continue
+                redeployed[j] = True
+                m_id = int(pool_model[j])
+                gain_m[m_id] += pool_gain[j]
+                hit[m_id] = True
+                fleet_actions.append((f32(t_star), FLEET_ACT_REDEPLOY, m_id))
+            if hit.any():
+                fl_perf0 = np.where(
+                    hit, np.clip(fl_perf0 + gain_m, f32(0.4), f32(0.995)),
+                    fl_perf0).astype(f32)
+                fl_dep = np.where(hit, f32(t_star), fl_dep).astype(f32)
+                fl_acc = np.where(hit, f32(0.0), fl_acc).astype(f32)
+                fl_dep_tick = np.where(hit, fl_tick, fl_dep_tick)
+            # (b) drift-evaluation tick: drift accrues per COMPLETED
+            # interval (the partial interval behind a redeploy is dropped —
+            # dep_tick gates the first accrual after a redeploy)
+            if t_fleet < CTRL_INF and float(t_fleet) == t_star:
+                e = min(fl_tick, E_f - 1)
+                t32 = f32(t_star)
+                dt = np.maximum(t32 - fl_dep, f32(0.0)).astype(f32)
+                acc_new = np.where(e > fl_dep_tick,
+                                   (fl_acc + fl_inc[e]).astype(f32), fl_acc)
+                perf = fleet_performance_acc(fl_perf0, acc_new, dt, fleet_t,
+                                             xp=np).astype(f32)
+                fleet_perf[e] = perf
+                fleet_stale[e] = fleet_staleness(fl_perf0, perf,
+                                                 xp=np).astype(f32)
+                obs = (perf + fl_obs[e]).astype(f32)
+                drift = (fl_perf0 - obs).astype(f32)
+                want = (drift > f_thr) & ((t32 - fl_fire) >= f_cooldown)
+                arr_t = f32(t32 + f_delay)
+                for m_id in np.nonzero(want)[0]:
+                    if pool_next >= P:
+                        break           # injection budget exhausted
+                    j = pool_next
+                    pool_next += 1
+                    pool_model[j] = m_id
+                    pool_arr[j] = float(arr_t)
+                    fl_fire[m_id] = t32
+                    fleet_actions.append((t32, FLEET_ACT_TRIGGER, int(m_id)))
+                    heapq.heappush(ev, (float(arr_t), 1, pool_base + j))
+                fl_acc = acc_new
+                t_nxt = f32(t_fleet + f_interval)
+                t_fleet = t_nxt if (t_nxt <= f_end and t_nxt > t_fleet) \
+                    else CTRL_INF
+                fl_tick += 1
         wave += 1
-        if not ev and not any(waiting):
+        if not ev and not any(waiting) and \
+                (fl is None or not (t_fleet < CTRL_INF)):
             break                       # all pipelines done (or never arrive)
 
     ctrl_times = ctrl_caps = None
@@ -317,18 +491,29 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         ctrl_caps = (np.stack([c for _, c in ctrl_actions])
                      if ctrl_actions else np.zeros((0, nres), np.int64))
 
+    arrival_out = np.asarray(wl.arrival, np.float64)
+    fl_cols = {}
+    if fl is not None:
+        act_buf = (np.array([(t, k, m) for t, k, m in fleet_actions],
+                            np.float64).reshape(-1, 3))
+        arrival_out, fl_cols = fleet_trace_columns(
+            fl, arrival_out, pool_arr, act_buf, len(fleet_actions),
+            fleet_perf, fleet_stale)
+
     return M.SimTrace(
         start=start, finish=finish, ready=ready,
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
-        task_type=wl.task_type, arrival=np.asarray(wl.arrival, np.float64),
+        task_type=wl.task_type, arrival=arrival_out,
         capacities=np.asarray(caps, np.int64),
         attempts=attempts_out if scenario is not None else None,
-        completed=(task_idx >= wl.n_tasks) if scenario is not None else None,
+        completed=(task_idx >= wl.n_tasks)
+        if scenario is not None or fl is not None else None,
         att_start=att_start,
         att_finish=att_finish,
         ctrl_times=ctrl_times,
         ctrl_caps=ctrl_caps,
         waves=wave,
+        **fl_cols,
     )
 
 

@@ -77,13 +77,19 @@ def _workload_key(spec):
 
 
 def _spec_workloads(spec, params, cache=None):
-    """The spec's replica workloads + per-replica compiled scenarios.
+    """The spec's replica workloads + per-replica compiled scenarios and
+    compiled fleets.
 
     Seed conventions match the historical ``run_experiment`` exactly (single
-    replica: PRNGKey(seed); ensembles: split(PRNGKey(seed), R); scenario
-    replica r compiles with seed + 1000*r) so batched and serial execution
-    see identical random draws. ``cache`` (dict) shares synthesis across
-    grid points whose workload axes agree.
+    replica: PRNGKey(seed); ensembles: split(PRNGKey(seed), R); scenario /
+    fleet replica r compiles with seed + 1000*r) so batched and serial
+    execution see identical random draws. ``cache`` (dict) shares synthesis
+    across grid points whose workload axes agree.
+
+    With a :class:`~repro.core.runtime.FleetSpec` on the spec, each replica
+    workload is *extended* with the latent retraining pool BEFORE the
+    scenario compiles — failure/retry draws then cover retraining pipelines
+    too, identically in both engines.
     """
     if spec.workload is not None:
         wls = [spec.workload] * spec.n_replicas
@@ -105,13 +111,26 @@ def _spec_workloads(spec, params, cache=None):
                    for k in keys]
             if key is not None:
                 cache[key] = wls
+    fleets = None
+    if getattr(spec, "fleet", None) is not None:
+        from repro.core.runtime import TriggerSpec
+        from repro.ops.scenario import compile_fleet
+        trig = spec.trigger if spec.trigger is not None else TriggerSpec()
+        fleets, ext = [], []
+        for r, w in enumerate(wls):
+            cf, w2 = compile_fleet(spec.fleet, trig, w, spec.platform,
+                                   spec.horizon_s,
+                                   seed=spec.seed + 1000 * r, params=params)
+            fleets.append(cf)
+            ext.append(w2)
+        wls = ext
     compiled = None
     if spec.scenario is not None:
         compiled = [spec.scenario.compile(w, spec.platform, spec.horizon_s,
                                           seed=spec.seed + 1000 * r,
                                           policy=spec.policy)
                     for r, w in enumerate(wls)]
-    return wls, compiled
+    return wls, compiled, fleets
 
 
 def _summarize(spec, rec, compiled, tr=None):
@@ -119,28 +138,38 @@ def _summarize(spec, rec, compiled, tr=None):
     engine-recorded controller action timeline: under closed-loop control
     cost/utilization integrate the *realized* capacity schedule, not the
     planned one (identical — same object — when the controller never
-    acted, so scenario-less and open-loop summaries are unchanged)."""
+    acted, so scenario-less and open-loop summaries are unchanged). It also
+    carries the fleet-stage tensors, which fold in as the ``lifecycle``
+    summary block."""
     realized = None
     if compiled is not None and tr is not None:
         from repro.ops.accounting import realized_schedule
         realized = realized_schedule(tr, compiled)
         if realized is compiled.schedule:
             realized = None            # planned == realized: legacy path
+    lifecycle = None
+    if tr is not None and getattr(tr, "fleet_perf", None) is not None:
+        from repro.ops.accounting import lifecycle_summary
+        lifecycle = lifecycle_summary(tr)
     return trace.summarize(
         rec, spec.platform.capacities, spec.horizon_s,
         schedule=compiled.schedule if compiled is not None else None,
         cost_rates=spec.platform.cost_rates if compiled is not None else None,
         slo=spec.scenario.slo if spec.scenario is not None else None,
-        realized=realized)
+        realized=realized, lifecycle=lifecycle)
 
 
 def _single_result(spec, wl, compiled, tr, wall):
     from repro.core.experiment import ExperimentResult
+    from repro.core.runtime import lifecycle_result
     rec = trace.flatten_trace(tr, wl)
     summary = _summarize(spec, rec, compiled, tr)
     summary["wall_s"] = wall
-    summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
-    return ExperimentResult(spec, summary, rec, wall)
+    # pipelines that actually entered the platform (latent, never-activated
+    # retraining-pool rows are excluded by flatten_trace)
+    summary["pipelines_per_s"] = summary["n_pipelines"] / max(wall, 1e-9)
+    return ExperimentResult(spec, summary, rec, wall,
+                            lifecycle=lifecycle_result(tr))
 
 
 def _aggregate_replicas(spec, rep_sums, recs, wall):
@@ -156,7 +185,8 @@ def _aggregate_replicas(spec, rep_sums, recs, wall):
     }
     for k in ("total_cost", "deadline_miss_rate", "wait_slo_violation_rate",
               "mean_attempts", "planned_total_cost",
-              "realized_vs_planned_cost_delta"):
+              "realized_vs_planned_cost_delta", "mean_staleness",
+              "staleness_integral_s", "n_retrained", "n_triggered"):
         if all(k in s for s in rep_sums):
             summary[k] = float(np.mean([s[k] for s in rep_sums]))
     return ExperimentResult(spec, summary, trace.concat_records(recs), wall,
@@ -174,17 +204,19 @@ class NumpyEngine:
 
     def run(self, spec, params=None, _cache=None):
         t0 = time.perf_counter()
-        wls, compiled = _spec_workloads(spec, params, cache=_cache)
+        wls, compiled, fleets = _spec_workloads(spec, params, cache=_cache)
         if spec.n_replicas == 1:
             comp = compiled[0] if compiled is not None else None
             tr = des.simulate(wls[0], spec.platform, spec.policy,
-                              scenario=comp)
+                              scenario=comp,
+                              fleet=fleets[0] if fleets is not None else None)
             return _single_result(spec, wls[0], comp, tr,
                                   time.perf_counter() - t0)
         recs, sums = [], []
         for r, w in enumerate(wls):
             comp = compiled[r] if compiled is not None else None
-            tr = des.simulate(w, spec.platform, spec.policy, scenario=comp)
+            tr = des.simulate(w, spec.platform, spec.policy, scenario=comp,
+                              fleet=fleets[r] if fleets is not None else None)
             rec = trace.flatten_trace(tr, w)
             recs.append(rec)
             sums.append(_summarize(spec, rec, comp, tr))
@@ -210,10 +242,12 @@ class JaxEngine:
     def run(self, spec, params=None):
         if spec.n_replicas <= 1:
             t0 = time.perf_counter()
-            wls, compiled = _spec_workloads(spec, params)
+            wls, compiled, fleets = _spec_workloads(spec, params)
             comp = compiled[0] if compiled is not None else None
             tr = vdes.simulate_to_trace(wls[0], spec.platform, spec.policy,
-                                        scenario=comp)
+                                        scenario=comp,
+                                        fleet=fleets[0]
+                                        if fleets is not None else None)
             return _single_result(spec, wls[0], comp, tr,
                                   time.perf_counter() - t0)
         return self.run_sweep([spec], params)[0]
@@ -244,17 +278,20 @@ class JaxEngine:
                                                               nres_max))
                 for s in specs]
 
-        entries = []                     # (spec index, workload, compiled)
+        entries = []            # (spec index, workload, compiled, fleet)
         wl_cache = {}   # distinct workloads synthesized once for the grid
         for g, spec in enumerate(exec_specs):
-            wls, compiled = _spec_workloads(spec, params, cache=wl_cache)
+            wls, compiled, fleets = _spec_workloads(spec, params,
+                                                    cache=wl_cache)
             for r, w in enumerate(wls):
                 entries.append(
-                    (g, w, compiled[r] if compiled is not None else None))
+                    (g, w, compiled[r] if compiled is not None else None,
+                     fleets[r] if fleets is not None else None))
 
-        plats = [exec_specs[g].platform for g, _, _ in entries]
+        plats = [exec_specs[g].platform for g, _, _, _ in entries]
         try:
-            cols = batching.pad_workloads([w for _, w, _ in entries], plats)
+            cols = batching.pad_workloads([w for _, w, _, _ in entries],
+                                          plats)
         except ValueError as e:          # genuinely incompatible grid
             warnings.warn(
                 f"sweep grid cannot lower to one rectangular batch ({e}); "
@@ -263,16 +300,16 @@ class JaxEngine:
             return get_engine("numpy").run_sweep(specs, params)
         n_max = cols.pop("n_max")
         caps = np.stack([p.capacities for p in plats]).astype(np.int32)
-        pol = np.array([exec_specs[g].policy for g, _, _ in entries],
+        pol = np.array([exec_specs[g].policy for g, _, _, _ in entries],
                        np.int32)
         uniform_policy = bool((pol == pol[0]).all())
 
         scen_kw = {}
-        if any(c is not None for _, _, c in entries):
+        if any(c is not None for _, _, c, _ in entries):
             from repro.ops.scenario import CompiledScenario
             from repro.ops.capacity import static_schedule
             comps = []
-            for g, w, c in entries:
+            for g, w, c, _ in entries:
                 if c is None:           # inert placeholder row
                     c = CompiledScenario(
                         schedule=static_schedule(
@@ -282,26 +319,33 @@ class JaxEngine:
                 comps.append(c)
             horizon = max(s.horizon_s for s in specs)
             services = [cols["service"][i][: w.n]
-                        for i, (_, w, _) in enumerate(entries)]
+                        for i, (_, w, _, _) in enumerate(entries)]
             scen_kw = batching.stack_scenarios(comps, n_max, horizon,
                                                services=services)
+        # lifecycle (fleet/trigger) tensors batch per entry the same way —
+        # a whole trigger-policy grid rides ONE jit+vmap call
+        fleet_kw = batching.stack_fleets([f for _, _, _, f in entries],
+                                         n_max)
 
         out = vdes.simulate_ensemble(
             *[jax.numpy.asarray(cols[k]) for k in
               ("arrival", "n_tasks", "task_res", "service", "priority")],
             jax.numpy.asarray(caps), int(pol[0]),
-            policies=None if uniform_policy else pol, **scen_kw)
+            policies=None if uniform_policy else pol, **scen_kw, **fleet_kw)
         out = {k: np.asarray(v) for k, v in out.items()}
         wall = time.perf_counter() - t0
 
         results, i = [], 0
         for g, spec in enumerate(specs):
             recs, sums = [], []
+            last_tr = None
             for r in range(spec.n_replicas):
-                _, wl, comp = entries[i + r]
+                _, wl, comp, fl = entries[i + r]
                 tr = batching.batch_trace(out, i + r, wl,
                                           spec.platform.capacities,
-                                          with_scenario=comp is not None)
+                                          with_scenario=comp is not None,
+                                          fleet=fl)
+                last_tr = tr
                 rec = trace.flatten_trace(tr, wl)
                 recs.append(rec)
                 # summarize against the executed (possibly padded) platform
@@ -311,10 +355,14 @@ class JaxEngine:
             i += spec.n_replicas
             if spec.n_replicas == 1:
                 from repro.core.experiment import ExperimentResult
+                from repro.core.runtime import lifecycle_result
                 summary = sums[0]
                 summary["wall_s"] = wall   # the whole grid's wall clock
-                summary["pipelines_per_s"] = wl.n / max(wall, 1e-9)
-                results.append(ExperimentResult(spec, summary, recs[0], wall))
+                summary["pipelines_per_s"] = \
+                    summary["n_pipelines"] / max(wall, 1e-9)
+                results.append(ExperimentResult(
+                    spec, summary, recs[0], wall,
+                    lifecycle=lifecycle_result(last_tr)))
             else:
                 results.append(_aggregate_replicas(spec, sums, recs, wall))
         return results

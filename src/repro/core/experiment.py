@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import des, trace
 from repro.core import model as M
 from repro.core.fitting import SimulationParams
+from repro.core.runtime import FleetSpec, TriggerSpec
 from repro.ops.scenario import Scenario
 
 _UNSET = object()   # sentinel: "controller" axis absent vs explicitly None
@@ -50,6 +51,15 @@ class ExperimentSpec:
     :class:`~repro.core.model.Workload` (then no synthesis happens and
     ``interarrival_factor`` is ignored) — the hook deterministic parity
     tests and trace replays use.
+
+    ``fleet`` + ``trigger`` declare the *run-time view* (Fig 7): a fleet of
+    deployed models under drift and the execution trigger that retrains
+    them. The lifecycle loop runs INSIDE the engines (the fifth kernel
+    stage — see :mod:`repro.core.runtime`): drift evaluated as ``[M]``
+    tensor ops at a compile-time tick grid, triggered retraining pipelines
+    activated from a preallocated pool, redeploys resetting the drift
+    state. ``trigger`` defaults to ``TriggerSpec()`` when a fleet is set;
+    without a ``fleet`` it is ignored.
     """
 
     name: str
@@ -63,15 +73,22 @@ class ExperimentSpec:
     engine: str = "numpy"  # "numpy" | "jax"
     scenario: Optional[Scenario] = None
     workload: Optional[M.Workload] = None
+    fleet: Optional[FleetSpec] = None
+    trigger: Optional[TriggerSpec] = None
 
     def with_(self, **kw) -> "ExperimentSpec":
         """Functional update (``dataclasses.replace`` with axis shorthands):
         plain field names, ``**{"capacity:<resource>": n}`` to resize one
-        pool of the platform, or ``controller=<ReactiveController>`` to set
-        the closed-loop controller on the spec's scenario (creating an
-        otherwise-empty scenario if the spec has none). ``controller`` is
-        applied after every other key, so combining it with a ``scenario``
-        axis composes the same way regardless of kwarg order."""
+        pool of the platform, ``**{"trigger:<field>": v}`` /
+        ``**{"fleet:<field>": v}`` to update one field of the lifecycle
+        specs (creating default ``TriggerSpec()`` / ``FleetSpec()`` if the
+        spec has none — the ``"trigger:drift_threshold"`` /
+        ``"trigger:cooldown_s"`` / ``"fleet:drift_scale"`` Sweep axes), or
+        ``controller=<ReactiveController>`` to set the closed-loop
+        controller on the spec's scenario (creating an otherwise-empty
+        scenario if the spec has none). ``controller`` is applied after
+        every other key, so combining it with a ``scenario`` axis composes
+        the same way regardless of kwarg order."""
         out = self
         ctrl = kw.pop("controller", _UNSET)
         for k, v in kw.items():
@@ -79,6 +96,15 @@ class ExperimentSpec:
                 out = dataclasses.replace(
                     out, platform=out.platform.with_capacity(
                         k.split(":", 1)[1], v))
+            elif k.startswith("trigger:"):
+                trig = out.trigger if out.trigger is not None \
+                    else TriggerSpec()
+                out = dataclasses.replace(out, trigger=dataclasses.replace(
+                    trig, **{k.split(":", 1)[1]: v}))
+            elif k.startswith("fleet:"):
+                fl = out.fleet if out.fleet is not None else FleetSpec()
+                out = dataclasses.replace(out, fleet=dataclasses.replace(
+                    fl, **{k.split(":", 1)[1]: v}))
             else:
                 out = dataclasses.replace(out, **{k: v})
         if ctrl is not _UNSET and not (ctrl is None and out.scenario is None):
@@ -105,6 +131,11 @@ class ExperimentResult:
     records: trace.TaskRecords
     wall_s: float
     replica_summaries: Optional[List[Dict]] = None
+    # model-lifecycle view (perf/staleness timelines at tick resolution,
+    # trigger/redeploy events) — set for single-replica runs of specs with
+    # a FleetSpec; replica ensembles aggregate lifecycle scalars into the
+    # summary instead
+    lifecycle: Optional[object] = None
 
     def save(self, directory: str) -> None:
         os.makedirs(directory, exist_ok=True)

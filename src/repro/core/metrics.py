@@ -59,9 +59,85 @@ def apply_compression(perf: np.ndarray, size: np.ndarray, prune: np.ndarray,
     return np.clip(perf * f_acc * jitter, 0.0, 1.0), size * f_sz
 
 
+# ---------------------------------------------------------------------------
+# Fleet drift algebra (run-time view, Fig 7) as [M]-tensor functions.
+#
+# A *fleet* of M deployed models is one [M, FLEET_FIELDS] tensor (columns
+# below). The drift evaluation — performance at time t given the per-model
+# drift processes, the accumulated sudden-drift losses, and the time since
+# the last (re)deployment — is a handful of elementwise ops shared by THREE
+# consumers: the in-engine fleet stage of the vectorized JAX engine (f32,
+# inside ``lax.while_loop``), the numpy engine's f32 mirror of that stage,
+# and the f64 scalar :class:`DeployedModel` convenience view. ``xp`` selects
+# the array namespace (``numpy`` or ``jax.numpy``); arithmetic stays in the
+# input dtype, and the operation ORDER is part of the contract — both
+# engines must agree bit-for-bit in f32 (with ``seasonal_amp == 0`` the
+# transcendental ``cos`` is multiplied away, so parity is exact).
+# ---------------------------------------------------------------------------
+
+(FLEET_PERF0, FLEET_GRAD_RATE, FLEET_JUMP_RATE, FLEET_JUMP_SCALE,
+ FLEET_SEAS_AMP, FLEET_SEAS_PERIOD) = range(6)
+FLEET_FIELDS = 6
+
+
+def fleet_performance(perf0, jump_acc, dt, fleet, xp=np):
+    """[M] performance at ``dt`` seconds after each model's deployment —
+    the *continuous closed form* (gradual drift ``rate * dt``).
+
+    ``perf0`` is the current post-(re)training performance, ``jump_acc`` the
+    accumulated sudden-drift losses since deployment, ``fleet`` the
+    ``[M, FLEET_FIELDS]`` drift-process tensor. ``dt`` broadcasts ([M] or
+    scalar). This form backs the scalar :class:`DeployedModel` view and the
+    drift-algebra property tests; the ENGINES use
+    :func:`fleet_performance_acc` instead — the ``rate * dt`` product is
+    not bit-stable across backends (XLA contracts ``a - b*c`` into an FMA,
+    numpy rounds after every op), so the in-engine stage works on
+    presampled per-interval increments whose accumulation is plain
+    (contraction-free) f32 addition.
+    """
+    grad = fleet[..., FLEET_GRAD_RATE]
+    amp = fleet[..., FLEET_SEAS_AMP]
+    period = fleet[..., FLEET_SEAS_PERIOD]
+    season = amp * 0.5 * (1.0 - xp.cos(2.0 * np.pi * dt / period))
+    return xp.clip(perf0 - grad * dt - jump_acc - season, 0.0, 1.0)
+
+
+def fleet_performance_acc(perf0, drift_acc, dt, fleet, xp=np):
+    """[M] performance from the *accumulated-loss* formulation both engines
+    execute: ``drift_acc`` is the running sum of presampled per-tick drift
+    increments (gradual ``rate * Δt`` plus compound-Poisson jumps, sampled
+    at compile time) since the model's last (re)deployment. Every runtime
+    op here is add/sub/clip on already-rounded f32 values — no
+    multiply-accumulate pattern a backend could contract — so the numpy
+    and XLA engines agree bit-for-bit. The seasonal term (the one runtime
+    product left) vanishes exactly when ``seasonal_amp == 0``, the
+    parity-tested configuration."""
+    amp = fleet[..., FLEET_SEAS_AMP]
+    period = fleet[..., FLEET_SEAS_PERIOD]
+    season = amp * 0.5 * (1.0 - xp.cos(2.0 * np.pi * dt / period))
+    return xp.clip(perf0 - drift_acc - season, 0.0, 1.0)
+
+
+def fleet_staleness(perf0, perf, xp=np):
+    """[M] staleness in [0, 1]: performance decrease relative to the freshly
+    deployed model (§III-A)."""
+    return xp.clip(perf0 - perf, 0.0, 1.0)
+
+
+def pack_fleet(models) -> np.ndarray:
+    """Pack :class:`DeployedModel` instances into the ``[M, FLEET_FIELDS]``
+    f32 fleet tensor the engines consume."""
+    out = np.zeros((len(models), FLEET_FIELDS), np.float32)
+    for i, m in enumerate(models):
+        out[i] = (m.perf0, m.gradual_rate, m.jump_rate, m.jump_scale,
+                  m.seasonal_amp, m.seasonal_period)
+    return out
+
+
 @dataclasses.dataclass
 class DeployedModel:
-    """Run-time view of one deployed model (Fig 7)."""
+    """Run-time view of one deployed model (Fig 7). Scalar f64 convenience
+    wrapper over the vectorized fleet drift algebra above."""
 
     model_id: int
     perf0: float                 # performance right after (re)training
@@ -73,17 +149,22 @@ class DeployedModel:
     seasonal_period: float = 7 * 24 * 3600.0
     last_jumps: float = 0.0      # accumulated sudden losses
 
+    def _row(self) -> np.ndarray:
+        return np.array([[self.perf0, self.gradual_rate, self.jump_rate,
+                          self.jump_scale, self.seasonal_amp,
+                          self.seasonal_period]], np.float64)
+
     def performance(self, t: float) -> float:
         dt = max(t - self.deployed_at, 0.0)
-        season = self.seasonal_amp * 0.5 * (1 - np.cos(2 * np.pi * dt / self.seasonal_period))
-        return float(np.clip(
-            self.perf0 - self.gradual_rate * dt - self.last_jumps - season,
-            0.0, 1.0))
+        return float(fleet_performance(
+            np.float64(self.perf0), np.float64(self.last_jumps),
+            np.float64(dt), self._row())[0])
 
     def staleness(self, t: float) -> float:
         """Staleness in [0, 1]: decrease in predictive performance over time
         relative to the freshly deployed model (§III-A)."""
-        return float(np.clip(self.perf0 - self.performance(t), 0.0, 1.0))
+        return float(fleet_staleness(np.float64(self.perf0),
+                                     self.performance(t)))
 
     def potential_improvement(self, t: float, new_data_fraction: float) -> float:
         """§III-A: potential ~ f(current performance p(M), newly labeled data

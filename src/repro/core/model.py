@@ -215,10 +215,45 @@ class SimTrace:
     # integrate what the engines actually provisioned
     ctrl_times: Optional[np.ndarray] = None
     ctrl_caps: Optional[np.ndarray] = None
+    # model-lifecycle (fleet) stage outputs. fleet_perf/fleet_stale [E, M]:
+    # true per-model performance / staleness at each drift-evaluation tick
+    # (fleet_ticks [E]); fleet_times/fleet_kind/fleet_model [A]: the
+    # engine-recorded lifecycle action timeline (kind 0 = trigger fired and
+    # activated a retraining pipeline, 1 = retraining completed and
+    # redeployed the model). None when the run had no fleet.
+    # fleet_pool_base is the row index of the first (latent) retraining-pool
+    # pipeline in the extended workload — rows before it are exogenous.
+    fleet_perf: Optional[np.ndarray] = None
+    fleet_stale: Optional[np.ndarray] = None
+    fleet_ticks: Optional[np.ndarray] = None
+    fleet_times: Optional[np.ndarray] = None
+    fleet_kind: Optional[np.ndarray] = None
+    fleet_model: Optional[np.ndarray] = None
+    fleet_pool_base: Optional[int] = None
     # engine wave-loop iteration count (None = engine predates wave
     # reporting); both engines retire events in identical waves, so tests
     # assert *wave-for-wave* parity with this, not just equal timestamps
     waves: Optional[int] = None
+
+    def action_timeline(self):
+        """The SHARED in-engine action timeline: every discrete action an
+        in-engine actor took, time-sorted. Controller capacity moves appear
+        as ``("scale", t, target_vector)``; model-lifecycle actions as
+        ``("trigger", t, model_id)`` / ``("redeploy", t, model_id)``. Ties
+        keep controller actions first (the control stage runs before the
+        fleet stage within a wave)."""
+        rows = []
+        if self.ctrl_times is not None:
+            for t, caps in zip(self.ctrl_times, self.ctrl_caps):
+                rows.append((float(t), 0, ("scale", float(t), caps)))
+        if self.fleet_times is not None:
+            names = {0: "trigger", 1: "redeploy"}
+            for t, k, m in zip(self.fleet_times, self.fleet_kind,
+                               self.fleet_model):
+                rows.append((float(t), 1,
+                             (names[int(k)], float(t), int(m))))
+        rows.sort(key=lambda r: (r[0], r[1]))
+        return [r[2] for r in rows]
 
     @property
     def wait(self) -> np.ndarray:

@@ -77,6 +77,10 @@ def flatten_trace(trace: M.SimTrace, wl: M.Workload) -> TaskRecords:
     n, T = trace.start.shape
     idx = np.arange(T)[None, :]
     live = idx < trace.n_tasks[:, None]
+    # rows with a non-finite arrival are *latent* pipelines (preallocated
+    # retraining-pool slots whose trigger never fired): they never entered
+    # the platform and must not appear in records/summaries
+    live &= np.isfinite(np.asarray(trace.arrival, np.float64))[:, None]
     pid, pos = np.nonzero(live)
     return TaskRecords(
         pipeline=pid, task_pos=pos,
@@ -218,7 +222,7 @@ def network_traffic(rec: TaskRecords, bin_s: float = 3600.0,
 def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
               schedule=None, cost_rates: Optional[np.ndarray] = None,
               slo=None, deadlines: Optional[np.ndarray] = None,
-              realized=None) -> Dict:
+              realized=None, lifecycle=None) -> Dict:
     """Dashboard summary. The optional operational-scenario kwargs fold in
     cost/SLO accounting: ``schedule`` (a :class:`repro.ops.capacity.
     CapacitySchedule`) adds a ``utilization_vs_provisioned`` block computed
@@ -233,7 +237,14 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
     engine-recorded capacity timeline under closed-loop control: when given,
     cost/utilization integrate *it* instead of the planned ``schedule``, and
     the planned figures come back alongside as ``planned_node_seconds`` /
-    ``planned_total_cost`` / ``realized_vs_planned_cost_delta``."""
+    ``planned_total_cost`` / ``realized_vs_planned_cost_delta``.
+
+    ``lifecycle`` (a dict from :func:`repro.ops.accounting.
+    lifecycle_summary`, built from the engine-recorded fleet tensors) folds
+    the model-lifecycle block in: trigger/retrain counts, staleness
+    integrals, final fleet performance — with ``mean_staleness`` /
+    ``n_retrained`` / ``n_triggered`` mirrored at the top level so replica
+    aggregation and sweep frontiers (cost vs staleness) can read scalars."""
     util = mean_utilization(rec, capacities, horizon_s)
     out = {
         "n_tasks": int(rec.start.shape[0]),
@@ -258,4 +269,9 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
             rec, realized if realized is not None else sched, horizon_s,
             cost_rates=cost_rates, slo=slo, deadlines=deadlines,
             planned=sched if realized is not None else None))
+    if lifecycle is not None:
+        out["lifecycle"] = dict(lifecycle)
+        for k in ("mean_staleness", "n_retrained", "n_triggered",
+                  "staleness_integral_s"):
+            out[k] = lifecycle[k]
     return out

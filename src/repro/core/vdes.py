@@ -2,7 +2,7 @@
 
 State is a struct-of-arrays over pipelines; a ``lax.while_loop`` advances the
 global clock to the next event time and retires *all* events at that instant.
-Each loop iteration (a **wave**) is composed of four named kernel stages:
+Each loop iteration (a **wave**) is composed of five named kernel stages:
 
   1. **event selection** (``_select_events``): the global next-event time
      ``t_star`` is the minimum over pending task events, the next scheduled
@@ -23,7 +23,17 @@ Each loop iteration (a **wave**) is composed of four named kernel stages:
      resource via a single fused lexicographic ``lax.sort`` over
      ``(resource, policy key, enqueue wave)`` keys (``num_keys=3``) —
      replacing three chained stable argsorts (kept as the ``"chained"``
-     reference path for equivalence tests and benchmarks).
+     reference path for equivalence tests and benchmarks);
+  5. **fleet** (``_fleet_stage``, optional): the *model lifecycle* (run-time
+     view, Fig 7). Retraining pipelines that completed this wave redeploy
+     their model (drift state resets); at compile-time drift-evaluation
+     ticks (the same f32 tick-grid machinery as the controller) the ``[M]``
+     drift algebra from :mod:`repro.core.metrics` runs, drift triggers
+     crossing their threshold activate latent pipelines from a preallocated
+     retraining pool (compile-time injection budget), and trigger/redeploy
+     actions append to the shared action timeline. All randomness
+     (observation noise, sudden-drift increments, redeploy gains, retrain
+     durations) is presampled outside the jitted loop.
 
 Semantics match ``repro.core.des`` exactly — same wave ordering, same
 FIFO/PRIORITY/SJF keys — verified wave-for-wave by tests on integer-time
@@ -73,8 +83,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
-from repro.core.des import (CTRL_FIELDS, CTRL_HEADER, CTRL_INF, POLICY_FIFO,
-                            POLICY_PRIORITY, POLICY_SJF, unpack_controller)
+from repro.core.des import (CTRL_FIELDS, CTRL_HEADER, CTRL_INF,
+                            FLEET_ACT_REDEPLOY, FLEET_ACT_TRIGGER,
+                            POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF,
+                            TRIG_FIELDS, unpack_controller)
+from repro.core.metrics import fleet_performance_acc, fleet_staleness
 
 INF = jnp.float32(CTRL_INF)   # the ONE shared f32 "never" sentinel
 
@@ -162,7 +175,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              controller: Optional[jnp.ndarray] = None,
              fail_holds_frac=None,
              admission_sort: str = "fused",
-             n_ctrl_slots: Optional[int] = None):
+             n_ctrl_slots: Optional[int] = None,
+             fleet=None, trig=None, obs_noise=None, drift_inc=None,
+             pool_gain=None, pool_base=None, n_pool_eff=None):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
@@ -197,6 +212,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     ``ctrl_n`` — the engine-recorded ground truth that
     ``ops.accounting.realized_schedule`` splices onto the planned schedule
     for exact provisioned cost/utilization under closed-loop scaling.
+
+    The **fleet stage** (model lifecycle, Fig 7) activates with the
+    ``fleet``-group kwargs: ``fleet [M, FLEET_FIELDS]`` drift-process rows,
+    ``trig [TRIG_FIELDS]`` header (interval, cooldown, t_first, t_end,
+    drift threshold, arrival delay; ``interval <= 0`` disables the stage —
+    the batched padding row), presampled ``obs_noise``/``drift_inc [E, M]``
+    per-tick tensors, ``pool_gain [P]`` per-slot redeploy performance gains,
+    and ``pool_base``/``n_pool_eff`` locating the latent retraining-pool
+    rows inside the (extended) workload. Every random draw is presampled
+    outside the jitted function, exactly like the failure-attempt tensors.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
@@ -216,6 +241,24 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     att_req = (jnp.ones((n, T), jnp.int32) if vwl.attempts is None
                else jnp.maximum(jnp.asarray(vwl.attempts, jnp.int32), 1))
     ids = jnp.arange(n, dtype=jnp.int32)
+
+    has_fleet = trig is not None
+    if has_fleet:
+        trig_t = jnp.asarray(trig, jnp.float32)
+        f_interval, f_cooldown, f_first, f_end, f_thr, f_delay = (
+            trig_t[i] for i in range(TRIG_FIELDS))
+        f_enabled = f_interval > 0.0
+        fleet_t = jnp.asarray(fleet, jnp.float32)
+        M_ = fleet_t.shape[0]
+        obs_t = jnp.asarray(obs_noise, jnp.float32)      # [E, M]
+        inc_t = jnp.asarray(drift_inc, jnp.float32)      # [E, M]
+        gain_t = jnp.asarray(pool_gain, jnp.float32)     # [P]
+        P = gain_t.shape[0]
+        E_f = obs_t.shape[0]
+        A_f = max(2 * P, 1)       # triggers + redeploys both bounded by P
+        pbase = jnp.asarray(pool_base, jnp.int32)
+        peff = jnp.asarray(P if n_pool_eff is None else n_pool_eff,
+                           jnp.int32)
 
     has_ctrl = controller is not None
     if has_ctrl:
@@ -257,6 +300,24 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         state["ctrl_act"] = jnp.full((n_ctrl_slots, 1 + nres), jnp.nan,
                                      jnp.float32)
         state["ctrl_n"] = jnp.int32(0)
+    if has_fleet:
+        state["fl_perf0"] = fleet_t[:, 0]            # current post-deploy perf
+        state["fl_dep"] = jnp.zeros((M_,), jnp.float32)   # deployed_at
+        state["fl_acc"] = jnp.zeros((M_,), jnp.float32)   # drift-loss acc
+        state["fl_dep_tick"] = jnp.full((M_,), -1, jnp.int32)
+        state["fl_fire"] = jnp.full((M_,), -INF, jnp.float32)
+        state["t_fleet"] = jnp.where(f_enabled & (f_first <= f_end),
+                                     f_first, INF)
+        state["f_tick"] = jnp.int32(0)
+        state["pool_model"] = jnp.full((P,), -1, jnp.int32)
+        state["pool_next"] = jnp.int32(0)
+        state["pool_arr"] = jnp.full((P,), jnp.nan, jnp.float32)
+        state["redeployed"] = jnp.zeros((P,), bool)
+        state["fleet_perf"] = jnp.full((E_f, M_), jnp.nan, jnp.float32)
+        state["fleet_stale"] = jnp.full((E_f, M_), jnp.nan, jnp.float32)
+        # lifecycle action buffer: [A, 3] rows of (f32 time, kind, model id)
+        state["fleet_act"] = jnp.full((A_f, 3), jnp.nan, jnp.float32)
+        state["fleet_n"] = jnp.int32(0)
 
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
@@ -272,6 +333,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         t_star = jnp.minimum(jnp.min(s["t_next"]), t_cap)
         if has_ctrl:
             t_star = jnp.minimum(t_star, s["t_eval"])
+        if has_fleet:
+            t_star = jnp.minimum(t_star, s["t_fleet"])
         return t_star, t_cap
 
     def _completion_stage(s, t_star):
@@ -435,20 +498,114 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                 jnp.where(admitted, t_fin, s["att_finish"][ids, tcl, ka]))
         return s
 
+    def _fleet_stage(s, t_star):
+        """Stage 5: model lifecycle (run-time view, Fig 7). Retraining-pool
+        pipelines that completed this wave redeploy their model (drift
+        state resets, presampled per-slot performance gain applies); at
+        every drift-evaluation tick the [M] drift algebra runs, the
+        performance/staleness timelines record, and triggers whose observed
+        drift crosses the threshold (outside their cooldown) activate
+        latent pool pipelines. Trigger and redeploy actions append to the
+        shared lifecycle action buffer. Arithmetic is float32 — the numpy
+        engine mirrors this stage operation-for-operation."""
+        s = dict(s)
+        slots = jnp.arange(P, dtype=jnp.int32)
+        valid = slots < peff
+        rows = jnp.clip(pbase + slots, 0, n - 1)
+        # ---- redeploy-on-deploy-completion (any wave, not just ticks)
+        p_done = ((s["phase"][rows] == _DONE) & (s["pool_model"] >= 0)
+                  & ~s["redeployed"] & valid)
+        mdl = jnp.clip(s["pool_model"], 0, max(M_ - 1, 0))
+        gain_m = jax.ops.segment_sum(jnp.where(p_done, gain_t, 0.0), mdl,
+                                     num_segments=M_)
+        hit = jax.ops.segment_sum(p_done.astype(jnp.int32), mdl,
+                                  num_segments=M_) > 0
+        s["fl_perf0"] = jnp.where(
+            hit, jnp.clip(s["fl_perf0"] + gain_m, 0.4, 0.995), s["fl_perf0"])
+        s["fl_dep"] = jnp.where(hit, t_star, s["fl_dep"])
+        s["fl_acc"] = jnp.where(hit, 0.0, s["fl_acc"])
+        s["fl_dep_tick"] = jnp.where(hit, s["f_tick"], s["fl_dep_tick"])
+        s["redeployed"] = s["redeployed"] | p_done
+        rk = jnp.cumsum(p_done.astype(jnp.int32)) - 1
+        idx = jnp.where(p_done, s["fleet_n"] + rk, A_f)
+        vals = jnp.stack(
+            [jnp.full((P,), t_star),
+             jnp.full((P,), jnp.float32(FLEET_ACT_REDEPLOY)),
+             s["pool_model"].astype(jnp.float32)], 1)
+        s["fleet_act"] = s["fleet_act"].at[idx].set(vals, mode="drop")
+        s["fleet_n"] = s["fleet_n"] + jnp.sum(p_done.astype(jnp.int32))
+        # ---- drift-evaluation tick
+        firing = f_enabled & (s["t_fleet"] == t_star)
+        e = jnp.clip(s["f_tick"], 0, E_f - 1)
+        dt = jnp.maximum(t_star - s["fl_dep"], 0.0)
+        # drift accrues per COMPLETED interval: dep_tick gates the first
+        # accrual after a redeploy (its partial interval is dropped)
+        acc_new = jnp.where(e > s["fl_dep_tick"], s["fl_acc"] + inc_t[e],
+                            s["fl_acc"])
+        perf = fleet_performance_acc(s["fl_perf0"], acc_new, dt, fleet_t,
+                                     xp=jnp)
+        stale = fleet_staleness(s["fl_perf0"], perf, xp=jnp)
+        s["fleet_perf"] = s["fleet_perf"].at[e].set(
+            jnp.where(firing, perf, s["fleet_perf"][e]))
+        s["fleet_stale"] = s["fleet_stale"].at[e].set(
+            jnp.where(firing, stale, s["fleet_stale"][e]))
+        obs = perf + obs_t[e]
+        drift = s["fl_perf0"] - obs
+        want = firing & (drift > f_thr) & ((t_star - s["fl_fire"])
+                                           >= f_cooldown)
+        rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+        slot = s["pool_next"] + rank
+        fire = want & (slot < peff)        # injection budget exhausts
+        s["fl_fire"] = jnp.where(fire, t_star, s["fl_fire"])
+        arr_t = t_star + f_delay
+        slot_idx = jnp.where(fire, slot, P)
+        mids = jnp.arange(M_, dtype=jnp.int32)
+        s["pool_model"] = s["pool_model"].at[slot_idx].set(mids, mode="drop")
+        s["pool_arr"] = s["pool_arr"].at[slot_idx].set(
+            jnp.full((M_,), arr_t), mode="drop")
+        # activate the latent workload rows: they arrive at t_star + delay
+        row_idx = jnp.where(fire, pbase + slot, n)
+        s["t_next"] = s["t_next"].at[row_idx].set(
+            jnp.full((M_,), arr_t), mode="drop")
+        aidx = jnp.where(fire, s["fleet_n"] + rank, A_f)
+        avals = jnp.stack(
+            [jnp.full((M_,), t_star),
+             jnp.full((M_,), jnp.float32(FLEET_ACT_TRIGGER)),
+             mids.astype(jnp.float32)], 1)
+        s["fleet_act"] = s["fleet_act"].at[aidx].set(avals, mode="drop")
+        s["fleet_n"] = s["fleet_n"] + jnp.sum(fire.astype(jnp.int32))
+        s["pool_next"] = s["pool_next"] + jnp.sum(fire.astype(jnp.int32))
+        s["fl_acc"] = jnp.where(firing, acc_new, s["fl_acc"])
+        # advance the tick grid exactly as the controller's (f32 ulp guard)
+        t_nxt = s["t_fleet"] + f_interval
+        s["t_fleet"] = jnp.where(
+            firing,
+            jnp.where((t_nxt > f_end) | (t_nxt <= s["t_fleet"]), INF, t_nxt),
+            s["t_fleet"])
+        s["f_tick"] = s["f_tick"] + firing.astype(jnp.int32)
+        return s
+
     # -------------------------------------------------------- wave loop
 
     def cond(s):
         t_star, _ = _select_events(s)
         # exit when everything is done OR nothing can ever happen again
         # (e.g. capacity held at zero past the end of the schedule and the
-        # controller's evaluation grid is exhausted)
-        return jnp.any(s["phase"] != _DONE) & (t_star < INF)
+        # controller's evaluation grid is exhausted). Remaining fleet ticks
+        # keep the loop alive: models drift (and triggers may fire) even
+        # after every pipeline drained.
+        alive = jnp.any(s["phase"] != _DONE)
+        if has_fleet:
+            alive = alive | (s["t_fleet"] < INF)
+        return alive & (t_star < INF)
 
     def body(s):
         t_star, t_cap = _select_events(s)
         s = _completion_stage(s, t_star)
         s = _control_stage(s, t_star, t_cap)
         s = _admission_stage(s, t_star)
+        if has_fleet:
+            s = _fleet_stage(s, t_star)
         s["wave"] = s["wave"] + 1
         return s
 
@@ -462,16 +619,35 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     if rec_ctrl:
         res["ctrl_act"] = out["ctrl_act"]
         res["ctrl_n"] = out["ctrl_n"]
+    if has_fleet:
+        for k in ("fleet_perf", "fleet_stale", "fleet_act", "fleet_n",
+                  "pool_arr", "pool_model", "pool_next"):
+            res[k] = out[k]
     return res
 
 
 def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
-                      policy: int = POLICY_FIFO, scenario=None) -> M.SimTrace:
+                      policy: int = POLICY_FIFO, scenario=None,
+                      fleet=None) -> M.SimTrace:
     """Convenience: numpy Workload in, SimTrace out (single replica).
-    ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`."""
+    ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`;
+    ``fleet`` a :class:`repro.ops.scenario.CompiledFleet` (``wl`` must then
+    be the extended workload carrying the latent retraining-pool rows)."""
     platform = platform or M.PlatformConfig()
     att_start = att_finish = None
     ctrl_times = ctrl_caps = None
+    fl = fleet
+    if fl is not None and float(np.asarray(fl.trig)[0]) <= 0.0:
+        fl = None
+    fleet_kw = {}
+    if fl is not None:
+        fleet_kw = dict(
+            fleet=jnp.asarray(fl.fleet, jnp.float32),
+            trig=jnp.asarray(fl.trig, jnp.float32),
+            obs_noise=jnp.asarray(fl.obs_noise, jnp.float32),
+            drift_inc=jnp.asarray(fl.drift_inc, jnp.float32),
+            pool_gain=jnp.asarray(fl.pool_gain, jnp.float32),
+            pool_base=jnp.int32(fl.pool_base))
     if scenario is not None:
         from repro.core.des import ctrl_tick_bound, unpack_ctrl_actions
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
@@ -493,7 +669,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
                        controller=None if ctrl is None
                        else jnp.asarray(ctrl, jnp.float32),
                        fail_holds_frac=None if frac >= 1.0 else frac,
-                       n_ctrl_slots=n_ctrl if n_ctrl > 0 else None)
+                       n_ctrl_slots=n_ctrl if n_ctrl > 0 else None,
+                       **fleet_kw)
         caps0 = np.asarray(scenario.cap_vals[0], np.int64)
         attempts = np.asarray(res["attempts"], np.int64)
         completed = np.asarray(res["done"])
@@ -512,17 +689,25 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
                 ctrl_caps = np.zeros((0, nres), np.int64)
     else:
         vwl = VWorkload.from_workload(wl, platform)
-        res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32), policy)
+        res = simulate(vwl, jnp.asarray(platform.capacities, jnp.int32),
+                       policy, **fleet_kw)
         caps0 = platform.capacities
         attempts = None
-        completed = None
+        completed = np.asarray(res["done"]) if fl is not None else None
+    arrival_out = np.asarray(wl.arrival, np.float64)
+    fl_cols = {}
+    if fl is not None:
+        from repro.core.des import fleet_trace_columns
+        arrival_out, fl_cols = fleet_trace_columns(
+            fl, arrival_out, res["pool_arr"], res["fleet_act"],
+            res["fleet_n"], res["fleet_perf"], res["fleet_stale"])
     return M.SimTrace(
         start=np.asarray(res["start"], np.float64),
         finish=np.asarray(res["finish"], np.float64),
         ready=np.asarray(res["ready"], np.float64),
         n_tasks=wl.n_tasks.astype(np.int64),
         task_res=wl.task_res, task_type=wl.task_type,
-        arrival=np.asarray(wl.arrival, np.float64),
+        arrival=arrival_out,
         capacities=caps0,
         attempts=attempts,
         completed=completed,
@@ -531,6 +716,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         ctrl_times=ctrl_times,
         ctrl_caps=ctrl_caps,
         waves=int(res["waves"]),
+        **fl_cols,
     )
 
 
@@ -548,7 +734,9 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       n_attempt_slots: Optional[int] = None,
                       controllers=None, fail_holds_frac=None,
                       admission_sort: str = "fused",
-                      n_ctrl_slots: Optional[int] = None):
+                      n_ctrl_slots: Optional[int] = None,
+                      fleets=None, trig=None, obs_noise=None, drift_inc=None,
+                      pool_gain=None, pool_base=None, n_pool_eff=None):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
@@ -568,6 +756,14 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
     over the batch) turns on realized-capacity-timeline recording — the
     per-replica action buffers come back stacked ``ctrl_act [R, E, 1+nres]``
     with counts ``ctrl_n [R]``.
+
+    The model-lifecycle stage batches the same way: ``fleets [R, M, 6]``,
+    ``trig [R, TRIG_FIELDS]`` (an interval <= 0 row disables the stage for
+    that replica), ``obs_noise``/``drift_inc [R, E, M]``, ``pool_gain
+    [R, P]``, ``pool_base [R]`` and ``n_pool_eff [R]`` (entries padded to a
+    common M/E/P; inert rows beyond each entry's own sizes). New
+    ``"trigger:*"`` / ``"fleet:*"`` Sweep axes ride these tensors, so a
+    whole lifecycle-policy grid lowers to this one jit+vmap call.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -596,6 +792,14 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         mapped["controllers"] = jnp.asarray(controllers, jnp.float32)
     if fail_holds_frac is not None:
         mapped["fail_holds_frac"] = jnp.asarray(fail_holds_frac, jnp.float32)
+    if trig is not None:
+        mapped["fleets"] = jnp.asarray(fleets, jnp.float32)
+        mapped["trig"] = jnp.asarray(trig, jnp.float32)
+        mapped["obs_noise"] = jnp.asarray(obs_noise, jnp.float32)
+        mapped["drift_inc"] = jnp.asarray(drift_inc, jnp.float32)
+        mapped["pool_gain"] = jnp.asarray(pool_gain, jnp.float32)
+        mapped["pool_base"] = jnp.asarray(pool_base, jnp.int32)
+        mapped["n_pool_eff"] = jnp.asarray(n_pool_eff, jnp.int32)
 
     def one(m):
         vwl = VWorkload(m["arrival"], m["n_tasks"], m["task_res"],
@@ -609,6 +813,12 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         controller=m.get("controllers"),
                         fail_holds_frac=m.get("fail_holds_frac"),
                         admission_sort=admission_sort,
-                        n_ctrl_slots=n_ctrl_slots)
+                        n_ctrl_slots=n_ctrl_slots,
+                        fleet=m.get("fleets"), trig=m.get("trig"),
+                        obs_noise=m.get("obs_noise"),
+                        drift_inc=m.get("drift_inc"),
+                        pool_gain=m.get("pool_gain"),
+                        pool_base=m.get("pool_base"),
+                        n_pool_eff=m.get("n_pool_eff"))
 
     return jax.vmap(one)(mapped)

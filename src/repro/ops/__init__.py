@@ -1,15 +1,18 @@
-"""Operational scenarios: dynamic capacity, failure/retry injection, and
-cost/SLO accounting for both DES engines (see DESIGN in each submodule)."""
+"""Operational scenarios: dynamic capacity, failure/retry injection,
+model-lifecycle compilation, and cost/SLO accounting for both DES engines
+(see DESIGN in each submodule)."""
 from repro.ops.accounting import (SLOConfig, busy_node_seconds, capacity_cost,
-                                  pipeline_spans, realized_schedule,
-                                  scenario_summary, slo_metrics)
+                                  lifecycle_summary, pipeline_spans,
+                                  realized_schedule, scenario_summary,
+                                  slo_metrics)
 from repro.ops.capacity import (CapacitySchedule, MaintenanceWindows,
                                 ReactiveAutoscaler, ReactiveController,
                                 ScheduledAutoscaler, StaticCapacity,
                                 apply_capacity_deltas, disabled_controller,
                                 normalize, static_schedule)
 from repro.ops.failures import FailureModel, OutageModel, RetryPolicy
-from repro.ops.scenario import (CompiledScenario, Scenario, compile_static,
+from repro.ops.scenario import (CompiledFleet, CompiledScenario, Scenario,
+                                compile_fleet, compile_static,
                                 stack_compiled_scenarios)
 
 __all__ = [
@@ -20,6 +23,8 @@ __all__ = [
     "FailureModel", "OutageModel", "RetryPolicy",
     "SLOConfig", "busy_node_seconds", "capacity_cost", "pipeline_spans",
     "realized_schedule", "scenario_summary", "slo_metrics",
+    "lifecycle_summary",
     "Scenario", "CompiledScenario", "compile_static",
+    "CompiledFleet", "compile_fleet",
     "stack_compiled_scenarios",
 ]

@@ -123,6 +123,45 @@ def realized_schedule(tr, compiled) -> CapacitySchedule:
     return normalize(cuts, np.clip(planned + tgt - base[None, :], 0, None))
 
 
+def lifecycle_summary(tr) -> Dict:
+    """The model-lifecycle block :func:`repro.core.trace.summarize` folds in
+    (via its ``lifecycle`` kwarg). All the shared aggregates (staleness
+    integral, trigger/redeploy counts, timelines) come from the ONE decoder
+    — :func:`repro.core.runtime.lifecycle_result` — so the summary block
+    and ``ExperimentResult.lifecycle`` can never disagree; this adds only
+    the scalar accounting view. ``staleness_integral_s`` is the mean over
+    models of ``∫ staleness dt`` over the drift-evaluation tick grid (the
+    grid's last tick is within one interval of the horizon by
+    construction); ``retrain_node_seconds`` is the busy time of the
+    activated retraining pipelines — what the trigger policy *spent*. With
+    ``total_cost`` these span the cost-vs-staleness frontier a
+    trigger-policy sweep traces out."""
+    from repro.core.runtime import lifecycle_result
+    lc = lifecycle_result(tr)
+    if lc is None:
+        raise ValueError(
+            "trace carries no fleet columns (the run had no FleetSpec); "
+            "lifecycle_summary needs a trace from a model-lifecycle run")
+    perf = lc.perf_timeline                       # [M, E]
+    recorded = ~np.isnan(perf).all(0)
+    last = int(np.nonzero(recorded)[0][-1]) if recorded.any() else -1
+    return {
+        "n_models": int(perf.shape[0]),
+        "n_triggered": lc.n_triggered,
+        "n_retrained": lc.n_retrained,
+        "mean_staleness": lc.mean_staleness,
+        "staleness_integral_s": lc.staleness_integral_s,
+        "final_mean_performance": float(np.nanmean(perf[:, last]))
+        if last >= 0 else float("nan"),
+        "n_exogenous": lc.n_exogenous,
+        "retrain_pool_size": int(tr.start.shape[0] - tr.fleet_pool_base),
+        "retrain_node_seconds": float(np.clip(
+            np.nan_to_num(tr.finish[tr.fleet_pool_base:], nan=0.0)
+            - np.nan_to_num(tr.start[tr.fleet_pool_base:], nan=0.0),
+            0.0, None).sum()),
+    }
+
+
 def pipeline_spans(rec) -> Dict[str, np.ndarray]:
     """Per-pipeline (arrival, completion, makespan) from flat task records.
     Uses the records' arrival column — NOT ready, which retry re-queues

@@ -132,6 +132,134 @@ def compile_static(workload: M.Workload,
                                              np.int64))
 
 
+# ---------------------------------------------------------------------------
+# Model lifecycle (run-time view): FleetSpec/TriggerSpec -> flat tensors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompiledFleet:
+    """Fleet + trigger materialized for one workload: what the engines'
+    fifth kernel stage executes. All randomness is presampled here (exactly
+    like the failure-attempt tensors), so the jitted loop stays pure:
+
+    - ``fleet [M, FLEET_FIELDS]``: per-model drift-process parameters;
+    - ``trig [TRIG_FIELDS]``: the trigger header (interval, cooldown,
+      t_first, t_end, drift threshold, arrival delay) — the drift-evaluation
+      tick grid uses the same f32 walk as the controller's;
+    - ``obs_noise [E, M]``: per-tick observation noise;
+    - ``drift_inc [E, M]``: presampled per-tick drift-loss increments —
+      gradual drift ``rate * Δt`` PLUS the sudden-drift compound-Poisson
+      draws for the interval. The engines *accumulate* these with plain f32
+      adds (no runtime ``rate * dt`` product, which XLA would contract into
+      an FMA and break bit-parity with numpy); drift therefore accrues per
+      completed evaluation interval, and the partial interval behind a
+      redeploy is dropped — a freshly redeployed model stays at its new
+      ``perf0`` until its first full interval elapses;
+    - ``pool_gain [P]``: per-pool-slot redeploy performance gains;
+    - ``pool_base``: the extended workload's first latent retraining-pool
+      row (``compile_fleet`` appends P train->evaluate->deploy pipelines
+      with ``inf`` arrivals — the compile-time injection budget).
+    """
+
+    fleet: np.ndarray
+    trig: np.ndarray
+    obs_noise: np.ndarray
+    drift_inc: np.ndarray
+    pool_gain: np.ndarray
+    pool_base: int
+    tick_times: np.ndarray     # [E] f64 (values of the f32 tick grid)
+
+    @property
+    def n_models(self) -> int:
+        return int(self.fleet.shape[0])
+
+    @property
+    def n_pool(self) -> int:
+        return int(self.pool_gain.shape[0])
+
+    @property
+    def n_ticks(self) -> int:
+        return int(self.tick_times.shape[0])
+
+
+def compile_fleet(fleet_spec, trigger, workload: M.Workload,
+                  platform: M.PlatformConfig, horizon_s: float,
+                  seed: int = 0, params=None):
+    """Materialize a :class:`~repro.core.runtime.FleetSpec` +
+    :class:`~repro.core.runtime.TriggerSpec` against ``workload``: returns
+    ``(CompiledFleet, extended_workload)`` where the extended workload is
+    the exogenous pipelines followed by the latent retraining pool.
+
+    Retrain durations come from ``trigger.retrain_durations`` when pinned
+    (deterministic template — what integer-time parity tests use), else
+    they are drawn per task type from the fitted ``params`` distributions.
+    """
+    import jax as _jax
+
+    from repro.core import runtime as RT
+    from repro.core.des import TRIG_FIELDS, fleet_tick_grid
+
+    if trigger.interval_s <= 0:
+        raise ValueError("TriggerSpec.interval_s must be > 0")
+    fleet = RT.fleet_tensor(fleet_spec, seed)
+    M_ = fleet.shape[0]
+    t_first = float(np.float32(trigger.interval_s))
+    ticks = fleet_tick_grid(trigger.interval_s, t_first, horizon_s)
+    E = ticks.shape[0]
+    if E == 0:
+        raise ValueError(
+            f"TriggerSpec.interval_s={trigger.interval_s} exceeds the "
+            f"horizon {horizon_s}; no drift-evaluation tick would ever fire")
+    trig = np.zeros(TRIG_FIELDS, np.float32)
+    trig[:] = (trigger.interval_s, trigger.cooldown_s, t_first, horizon_s,
+               trigger.drift_threshold, trigger.arrival_delay_s)
+
+    rng = np.random.default_rng(np.random.SeedSequence([max(seed, 0), 0xF1]))
+    obs = (rng.normal(0.0, trigger.obs_noise, (E, M_))
+           if trigger.obs_noise > 0 else np.zeros((E, M_)))
+    # drift-loss increment per tick: gradual rate * Δt plus the sudden-drift
+    # compound Poisson — N ~ Poisson(rate * dt) jumps, each Exp(scale), so
+    # the per-tick jump sum is Gamma(N, scale)
+    widths = np.diff(np.concatenate([[0.0], ticks]))
+    lam = fleet[None, :, 2].astype(np.float64) * widths[:, None]
+    n_jumps = rng.poisson(lam)
+    drift_inc = (fleet[None, :, 1].astype(np.float64) * widths[:, None]
+                 + rng.gamma(n_jumps, fleet[None, :, 3].astype(np.float64)))
+
+    # injection budget: at most one fire per model per cooldown window (and
+    # never more than one per tick)
+    if trigger.max_retrains is not None:
+        P = int(trigger.max_retrains)
+    else:
+        eff_cd = max(trigger.cooldown_s, trigger.interval_s)
+        per_model = int(np.floor(max(horizon_s - t_first, 0.0) / eff_cd)) + 1
+        P = M_ * min(per_model, E)
+    gains = rng.normal(trigger.perf_gain_mu, trigger.perf_gain_sigma, P)
+
+    if trigger.retrain_durations is not None:
+        exec3 = np.tile(np.asarray(trigger.retrain_durations,
+                                   np.float64)[None, :], (P, 1))
+        pool = RT._pool_workload(P, workload.max_tasks, platform, exec3)
+    elif params is not None:
+        pool = RT.synthesize_retrain_workload(
+            params,
+            _jax.random.PRNGKey((seed * 2654435761 + 0x5EED) % (1 << 31)),
+            P, platform, workload.max_tasks)
+    else:
+        raise ValueError(
+            "compile_fleet needs fitted params to draw retrain durations "
+            "(or pin TriggerSpec.retrain_durations)")
+    ext = RT._concat_workloads(workload, pool)
+    compiled = CompiledFleet(
+        fleet=fleet, trig=trig,
+        obs_noise=obs.astype(np.float32),
+        drift_inc=drift_inc.astype(np.float32),
+        pool_gain=gains.astype(np.float32),
+        pool_base=int(workload.n),
+        tick_times=ticks)
+    return compiled, ext
+
+
 def stack_compiled_scenarios(compiled, n_max: int, horizon_s: float,
                              services=None) -> dict:
     """Pad/stack per-replica CompiledScenarios into the ``[R, ...]`` tensors
