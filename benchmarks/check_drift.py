@@ -1,11 +1,14 @@
-"""CI gate: fail when any benchmark artifact reports numpy-vs-jax drift.
+"""CI gate: fail on numpy-vs-jax drift OR a missing benchmark artifact.
 
 Scans every ``artifacts/BENCH_*.json`` for keys containing ``drift`` (e.g.
-``numpy_vs_jax_drift``, ``realized_timeline_drift``,
+``numpy_vs_jax_drift``, ``realized_timeline_drift``, ``probe_parity_drift``,
 ``max_rel_drift_vs_serial``) and exits nonzero if any value is not exactly
 0.0 — so an engine-parity regression cannot land silently just because the
-benchmark that measured it "succeeded". Run by ``make ci`` after the smoke
-benchmarks refresh the artifacts.
+benchmark that measured it "succeeded". It also requires every smoke-suite
+artifact in ``EXPECTED`` to exist: a bench that errors out used to leave a
+stale (or no) artifact undetected — now a missing file fails the build the
+same way drift does. Run by ``make ci`` after the smoke benchmarks refresh
+the artifacts.
 
   PYTHONPATH=src python -m benchmarks.check_drift
 """
@@ -18,6 +21,22 @@ import sys
 
 ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                    "artifacts"))
+
+# every artifact the `make ci` smoke suites must produce (keep in sync with
+# benchmarks/run.py SMOKE_SUITES and each suite's OUT_PATH)
+EXPECTED = (
+    "BENCH_scenarios.json",
+    "BENCH_sweep.json",
+    "BENCH_controller.json",
+    "BENCH_feedback.json",
+    "BENCH_obs.json",
+)
+
+
+def missing(art_dir: str = ART) -> list:
+    """Expected artifacts absent from ``art_dir``."""
+    return [name for name in EXPECTED
+            if not os.path.exists(os.path.join(art_dir, name))]
 
 
 def check(art_dir: str = ART) -> list:
@@ -35,13 +54,18 @@ def check(art_dir: str = ART) -> list:
 
 
 def main() -> None:
+    gone = missing()
     offenders = check()
-    if offenders:
-        for fname, key, val in offenders:
-            print(f"DRIFT {fname}: {key} = {val!r} (expected 0.0)",
-                  file=sys.stderr)
+    for name in gone:
+        print(f"MISSING artifacts/{name}: its benchmark did not run or "
+              f"errored out", file=sys.stderr)
+    for fname, key, val in offenders:
+        print(f"DRIFT {fname}: {key} = {val!r} (expected 0.0)",
+              file=sys.stderr)
+    if gone or offenders:
         sys.exit(1)
-    print("drift check: all BENCH_*.json artifacts report 0.0 drift")
+    print(f"drift check: all {len(EXPECTED)} expected BENCH_*.json present, "
+          "all drift keys 0.0")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,13 @@ Two measurements, one report (``artifacts/BENCH_controller.json``):
   2. **Fused vs chained admission sort**: the same ensemble executed with
      the single fused ``lax.sort(num_keys=3)`` admission round vs the
      historical 3-chained-argsort wave loop — wave throughput and speedup.
+  3. **Waves/s + the batched-vs-serial-numpy crossover** (ROADMAP open
+     item 2): wave throughput of both engines on the closed-loop program,
+     measured batched walls at widths 1/2/4/8, a linear fit
+     ``wall(B) = a + b*B``, and the grid size at which ONE batched jit+vmap
+     call overtakes running the exact numpy engine once per point
+     (``batched_vs_numpy_crossover_points``; null if the batched per-row
+     cost never drops below a serial numpy run).
 
 ``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon/replicas for CI
 (`make ci` runs this suite via ``benchmarks.run --smoke``).
@@ -139,6 +146,50 @@ def rows():
         timeline_drift = float(abs(t_np.ctrl_times.shape[0]
                                    - t_jx.ctrl_times.shape[0]))
 
+    # --- waves/s + the batched-vs-serial-numpy crossover (ROADMAP open
+    # item 2): how many grid points must a sweep have before ONE batched
+    # jit+vmap call beats running the exact numpy engine per point? Serial
+    # numpy scales linearly at wall_np per point; the batched engine pays a
+    # near-constant dispatch plus a per-row cost (all rows advance every
+    # wave), so the crossover is where B*wall_np >= a + b*B from a linear
+    # fit of the measured batched walls.
+    from repro.core import batching
+
+    t0 = time.perf_counter()
+    t_np2 = des.simulate(wl, base.platform, scenario=comp)
+    wall_np_point = time.perf_counter() - t0
+    numpy_waves_per_s = t_np2.waves / max(wall_np_point, 1e-12)
+
+    widths = [1, 2, 4] if smoke else [1, 2, 4, 8]
+    cols_b = batching.pad_workloads([wl] * max(widths), base.platform)
+    n_max_b = cols_b.pop("n_max")
+    batched_walls = {}
+    jax_waves_per_s = 0.0
+    for B in widths:
+        scen_kw = batching.stack_scenarios([comp] * B, n_max_b, horizon)
+        args = [jax.numpy.asarray(np.asarray(cols_b[k])[:B]) for k in
+                ("arrival", "n_tasks", "task_res", "service", "priority")]
+        caps_b = jax.numpy.asarray(np.tile(
+            base.platform.capacities[None], (B, 1)).astype(np.int32))
+        out_b = vdes.simulate_ensemble(*args, caps_b, **scen_kw)  # compile
+        jax.block_until_ready(out_b["start"])
+        t0 = time.perf_counter()
+        out_b = vdes.simulate_ensemble(*args, caps_b, **scen_kw)
+        jax.block_until_ready(out_b["start"])
+        batched_walls[B] = time.perf_counter() - t0
+        if B == 1:
+            jax_waves_per_s = int(out_b["waves"][0]) \
+                / max(batched_walls[B], 1e-12)
+    bs = np.array(widths, np.float64)
+    ws = np.array([batched_walls[B] for B in widths])
+    slope_b, inter_a = np.polyfit(bs, ws, 1)
+    # serial numpy beats the batch until B*wall_np exceeds a + b*B
+    if wall_np_point > slope_b:
+        crossover = int(np.ceil(inter_a / (wall_np_point - slope_b)))
+        crossover = max(crossover, 1)
+    else:                   # batched per-row cost >= a serial numpy run
+        crossover = None
+
     # --- fused vs chained admission round (same program, same waves)
     plat = base.platform
     R = 2 if smoke else 4
@@ -178,6 +229,14 @@ def rows():
         "numpy_vs_jax_drift": drift,
         "realized_timeline_drift": timeline_drift,
         "waves_agree": waves_agree,
+        "numpy_wall_per_point_s": wall_np_point,
+        "numpy_waves_per_s": numpy_waves_per_s,
+        "jax_waves_per_s": jax_waves_per_s,
+        "batched_wall_by_width_s": {str(k): v
+                                    for k, v in batched_walls.items()},
+        "batched_dispatch_s": float(inter_a),
+        "batched_per_point_s": float(slope_b),
+        "batched_vs_numpy_crossover_points": crossover,
         "fused_wall_s": wall_fused,
         "chained_wall_s": wall_chained,
         "fused_speedup_x": wall_chained / max(wall_fused, 1e-12),
@@ -203,6 +262,10 @@ def rows():
          f"{report['fused_waves_per_s']:.0f}waves/s"),
         ("admission_sort_chained", wall_chained * 1e6,
          f"{report['fused_speedup_x']:.2f}x_fused_speedup"),
+        ("controller_numpy_waves", wall_np_point * 1e6,
+         f"{numpy_waves_per_s:.0f}waves/s"),
+        ("controller_batched_crossover", batched_walls[widths[0]] * 1e6,
+         f"crossover_B={crossover}"),
     ]
 
 

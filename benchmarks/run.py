@@ -25,10 +25,11 @@ SUITES = [
     ("sweep", "benchmarks.sweep_bench"),
     ("controller", "benchmarks.controller_bench"),
     ("feedback", "benchmarks.feedback_bench"),
+    ("obs", "benchmarks.obs_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
-SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback")
+SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback", "obs")
 
 
 def main() -> None:

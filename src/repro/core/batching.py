@@ -215,16 +215,47 @@ def stack_fleets(fleets, n_max: int) -> dict:
                 n_pool_eff=np.asarray(pe, np.int32))
 
 
+def stack_probes(probes, fleets=None) -> dict:
+    """Pad/stack per-entry :class:`~repro.obs.probes.CompiledProbe`\\ s
+    (None entries allowed) into the probe kwargs of
+    ``vdes.simulate_ensemble``: ``probes [B, PROBE_FIELDS]`` headers plus
+    the static ``n_probe_slots`` (the batch's largest tick grid — each
+    entry's own ``t_end`` exhausts its grid first, so extra rows stay NaN).
+    Entries WITHOUT a probe get the all-zero disabled header (interval <= 0
+    turns the stage off, exactly the no-probe semantics). ``fleets`` (the
+    entries' CompiledFleets, None allowed) fills each header's ``n_models``
+    so the fleet min/max reductions mask to the entry's own unpadded model
+    rows."""
+    from repro.core.des import PROBE_FIELDS
+    live = [p for p in probes if p is not None]
+    if not live:
+        return {}
+    fleets = fleets if fleets is not None else [None] * len(probes)
+    rows = []
+    for p, f in zip(probes, fleets):
+        if p is None:
+            rows.append(np.zeros(PROBE_FIELDS, np.float32))
+            continue
+        hdr = np.asarray(p.header, np.float32).copy()
+        hdr[3] = np.float32(f.n_models if f is not None else 0)
+        rows.append(hdr)
+    return dict(probes=np.stack(rows),
+                n_probe_slots=max(p.n_ticks for p in live))
+
+
 def batch_trace(out: dict, idx: int, wl: M.Workload,
                 capacities: np.ndarray,
-                with_scenario: bool = True, fleet=None) -> M.SimTrace:
+                with_scenario: bool = True, fleet=None,
+                probe=None) -> M.SimTrace:
     """Slice entry ``idx`` of a ``simulate_ensemble`` result back into a
     numpy :class:`SimTrace` for ``wl`` (dropping padded pipelines). With
     ``with_scenario=False`` the attempt/completion columns are omitted so
     the trace is indistinguishable from a plain single-replica run.
     ``fleet`` (the entry's :class:`~repro.ops.scenario.CompiledFleet`)
     slices the entry's own model/tick/pool extents back out of the padded
-    lifecycle tensors."""
+    lifecycle tensors; ``probe`` (the entry's
+    :class:`~repro.obs.probes.CompiledProbe`) likewise slices the probe
+    buffer to the entry's own tick grid."""
     n = wl.n
     sl = lambda k: np.asarray(out[k][idx][:n], np.float64)
     ctrl_times = ctrl_caps = None
@@ -242,6 +273,11 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
             out["fleet_act"][idx], out["fleet_n"][idx],
             out["fleet_perf"][idx][:E, :M_],
             out["fleet_stale"][idx][:E, :M_])
+    if probe is not None and "probe_vals" in out:
+        fl_cols.update(
+            probe_times=np.asarray(probe.times, np.float64),
+            probe_vals=np.asarray(
+                out["probe_vals"][idx][:probe.n_ticks], np.float64))
     return M.SimTrace(
         start=sl("start"), finish=sl("finish"), ready=sl("ready"),
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,

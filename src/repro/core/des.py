@@ -131,6 +131,23 @@ def _tick_bound_walk(interval: float, t_first: float, t_end: float,
 # interval_s <= 0 disables the stage (same convention as the controller).
 TRIG_FIELDS = 6
 
+# ProbeParams flat-tensor header (compiled by repro.obs.probes.compile_probe;
+# shared by both engines' probe stages):
+# [interval_s, t_first, t_end, n_models]. interval_s <= 0 disables the stage
+# (the batched padding row, same convention as controller/trigger); n_models
+# masks the fleet reductions to the entry's own (unpadded) model rows.
+PROBE_FIELDS = 4
+
+
+def probe_channel_count(nres: int) -> int:
+    """Probe-buffer channel layout, shared by both engines and the
+    :mod:`repro.obs.probes` naming helpers: per resource — queue depth,
+    busy slots, effective capacity, controller delta — then the fleet's
+    minimum performance and maximum staleness (min/max on purpose: they are
+    order-independent reductions, so the f32 buffers stay bit-identical
+    across the numpy and vmapped-JAX reduction orders)."""
+    return 4 * nres + 2
+
 # fleet-stage action kinds on the shared SimTrace action timeline
 FLEET_ACT_TRIGGER, FLEET_ACT_REDEPLOY = 0, 1
 
@@ -207,14 +224,24 @@ def _policy_key(policy: int, wl: M.Workload, svc_val: float,
 
 def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
              policy: int = POLICY_FIFO, scenario=None,
-             fleet=None) -> M.SimTrace:
+             fleet=None, probe=None) -> M.SimTrace:
     """``fleet`` is a :class:`repro.ops.scenario.CompiledFleet`: the model
     lifecycle (run-time view) stage. ``wl`` must then be the *extended*
     workload — the exogenous pipelines followed by the fleet's preallocated
     pool of latent retraining pipelines (rows from ``fleet.pool_base``,
     arrival ``inf`` = not yet activated). The stage mirrors
     ``vdes._fleet_stage`` in **float32** (like the controller), so drift /
-    trigger / redeploy decisions agree bit-for-bit with the JAX engine."""
+    trigger / redeploy decisions agree bit-for-bit with the JAX engine.
+
+    ``probe`` is a :class:`repro.obs.probes.CompiledProbe`: the in-loop
+    telemetry stage. At every probe tick (the same f32 tick-grid machinery
+    as controller/trigger; ticks join the next-event minimum and keep the
+    loop alive until the grid exhausts) the live engine state — per-resource
+    queue depth, busy slots, effective capacity, controller delta, fleet
+    min-performance / max-staleness — is sampled in f32 into a preallocated
+    ``[E, K]`` buffer, mirroring ``vdes._probe_stage`` op-for-op. The stage
+    is physics-invisible: task timestamps are identical with and without a
+    probe."""
     platform = platform or M.PlatformConfig()
     service = wl.service_time(platform.datastore)
     n, T = wl.task_type.shape
@@ -305,6 +332,19 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         fleet_stale = np.full((E_f, M_), np.nan, f32)
     fleet_actions: list = []
 
+    # ---- probe (telemetry) stage state — float32 like the controller
+    pr = probe
+    if pr is not None and float(np.asarray(pr.header, f32)[0]) <= 0.0:
+        pr = None
+    if pr is not None:
+        p_interval, p_first, p_end = (
+            f32(x) for x in np.asarray(pr.header, f32)[:3])
+        E_p = int(np.asarray(pr.times).shape[0])
+        K_p = probe_channel_count(nres)
+        t_probe = p_first if p_first <= p_end else CTRL_INF
+        p_tick = 0
+        probe_vals = np.full((E_p, K_p), np.nan, f32)
+
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
     ready = np.full((n, T), np.nan)
@@ -368,7 +408,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             else np.inf
         t_fl = float(t_fleet) if fl is not None and t_fleet < CTRL_INF \
             else np.inf
-        t_star = min(t_heap, t_cap, t_ctrl, t_fl)
+        t_pr = float(t_probe) if pr is not None and t_probe < CTRL_INF \
+            else np.inf
+        t_star = min(t_heap, t_cap, t_ctrl, t_fl, t_pr)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
         wave_ev = []
@@ -480,9 +522,39 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 t_fleet = t_nxt if (t_nxt <= f_end and t_nxt > t_fleet) \
                     else CTRL_INF
                 fl_tick += 1
+        # ---- probe stage: in-loop telemetry sampling (f32, mirroring
+        # vdes._probe_stage operation-for-operation). Runs LAST in the wave
+        # so it sees the settled post-admission/post-fleet state at t_star.
+        # Physics-invisible: reads state, writes only the probe buffer.
+        if pr is not None and t_probe < CTRL_INF and float(t_probe) == t_star:
+            e = min(p_tick, E_p - 1)
+            sched_now = cap_vals[cap_ptr - 1]
+            delta = (ctrl_tgt - base_i) if ctrl is not None \
+                else np.zeros(nres, np.int64)
+            cap_eff = sched_now + delta
+            row = np.empty(K_p, f32)
+            row[0:nres] = [len(waiting[r]) for r in range(nres)]
+            row[nres:2 * nres] = cap_eff - free      # busy = running jobs
+            row[2 * nres:3 * nres] = cap_eff
+            row[3 * nres:4 * nres] = delta
+            if fl is not None:
+                dtp = np.maximum(f32(t_star) - fl_dep, f32(0.0)).astype(f32)
+                perf_p = fleet_performance_acc(fl_perf0, fl_acc, dtp,
+                                               fleet_t, xp=np).astype(f32)
+                row[4 * nres] = perf_p.min()
+                row[4 * nres + 1] = fleet_staleness(fl_perf0, perf_p,
+                                                    xp=np).astype(f32).max()
+            else:
+                row[4 * nres] = row[4 * nres + 1] = np.nan
+            probe_vals[e] = row
+            t_nxt = f32(t_probe + p_interval)
+            t_probe = t_nxt if (t_nxt <= p_end and t_nxt > t_probe) \
+                else CTRL_INF
+            p_tick += 1
         wave += 1
         if not ev and not any(waiting) and \
-                (fl is None or not (t_fleet < CTRL_INF)):
+                (fl is None or not (t_fleet < CTRL_INF)) and \
+                (pr is None or not (t_probe < CTRL_INF)):
             break                       # all pipelines done (or never arrive)
 
     ctrl_times = ctrl_caps = None
@@ -512,6 +584,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         att_finish=att_finish,
         ctrl_times=ctrl_times,
         ctrl_caps=ctrl_caps,
+        probe_times=np.asarray(pr.times, np.float64)
+        if pr is not None else None,
+        probe_vals=probe_vals.astype(np.float64) if pr is not None else None,
         waves=wave,
         **fl_cols,
     )

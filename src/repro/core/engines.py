@@ -78,7 +78,9 @@ def _workload_key(spec):
 
 def _spec_workloads(spec, params, cache=None):
     """The spec's replica workloads + per-replica compiled scenarios and
-    compiled fleets.
+    compiled fleets + the spec's compiled telemetry probe (None without a
+    :class:`~repro.obs.probes.ProbeSpec`; probes are deterministic, so one
+    compile covers every replica).
 
     Seed conventions match the historical ``run_experiment`` exactly (single
     replica: PRNGKey(seed); ensembles: split(PRNGKey(seed), R); scenario /
@@ -130,7 +132,13 @@ def _spec_workloads(spec, params, cache=None):
                                           seed=spec.seed + 1000 * r,
                                           policy=spec.policy)
                     for r, w in enumerate(wls)]
-    return wls, compiled, fleets
+    probe = None
+    if getattr(spec, "probe", None) is not None:
+        from repro.obs.probes import compile_probe
+        probe = compile_probe(
+            spec.probe, spec.horizon_s,
+            n_models=fleets[0].n_models if fleets is not None else 0)
+    return wls, compiled, fleets, probe
 
 
 def _summarize(spec, rec, compiled, tr=None):
@@ -169,7 +177,16 @@ def _single_result(spec, wl, compiled, tr, wall):
     # retraining-pool rows are excluded by flatten_trace)
     summary["pipelines_per_s"] = summary["n_pipelines"] / max(wall, 1e-9)
     return ExperimentResult(spec, summary, rec, wall,
-                            lifecycle=lifecycle_result(tr))
+                            lifecycle=lifecycle_result(tr),
+                            timeline=_probe_timeline(spec, tr))
+
+
+def _probe_timeline(spec, tr):
+    """The result's telemetry view (None for unprobed runs)."""
+    if getattr(tr, "probe_vals", None) is None:
+        return None
+    from repro.obs.probes import ProbeTimeline
+    return ProbeTimeline.from_trace(tr, spec.platform)
 
 
 def _aggregate_replicas(spec, rep_sums, recs, wall):
@@ -204,19 +221,22 @@ class NumpyEngine:
 
     def run(self, spec, params=None, _cache=None):
         t0 = time.perf_counter()
-        wls, compiled, fleets = _spec_workloads(spec, params, cache=_cache)
+        wls, compiled, fleets, probe = _spec_workloads(spec, params,
+                                                       cache=_cache)
         if spec.n_replicas == 1:
             comp = compiled[0] if compiled is not None else None
             tr = des.simulate(wls[0], spec.platform, spec.policy,
                               scenario=comp,
-                              fleet=fleets[0] if fleets is not None else None)
+                              fleet=fleets[0] if fleets is not None else None,
+                              probe=probe)
             return _single_result(spec, wls[0], comp, tr,
                                   time.perf_counter() - t0)
         recs, sums = [], []
         for r, w in enumerate(wls):
             comp = compiled[r] if compiled is not None else None
             tr = des.simulate(w, spec.platform, spec.policy, scenario=comp,
-                              fleet=fleets[r] if fleets is not None else None)
+                              fleet=fleets[r] if fleets is not None else None,
+                              probe=probe)
             rec = trace.flatten_trace(tr, w)
             recs.append(rec)
             sums.append(_summarize(spec, rec, comp, tr))
@@ -242,12 +262,13 @@ class JaxEngine:
     def run(self, spec, params=None):
         if spec.n_replicas <= 1:
             t0 = time.perf_counter()
-            wls, compiled, fleets = _spec_workloads(spec, params)
+            wls, compiled, fleets, probe = _spec_workloads(spec, params)
             comp = compiled[0] if compiled is not None else None
             tr = vdes.simulate_to_trace(wls[0], spec.platform, spec.policy,
                                         scenario=comp,
                                         fleet=fleets[0]
-                                        if fleets is not None else None)
+                                        if fleets is not None else None,
+                                        probe=probe)
             return _single_result(spec, wls[0], comp, tr,
                                   time.perf_counter() - t0)
         return self.run_sweep([spec], params)[0]
@@ -278,19 +299,19 @@ class JaxEngine:
                                                               nres_max))
                 for s in specs]
 
-        entries = []            # (spec index, workload, compiled, fleet)
+        entries = []    # (spec index, workload, compiled, fleet, probe)
         wl_cache = {}   # distinct workloads synthesized once for the grid
         for g, spec in enumerate(exec_specs):
-            wls, compiled, fleets = _spec_workloads(spec, params,
-                                                    cache=wl_cache)
+            wls, compiled, fleets, probe = _spec_workloads(spec, params,
+                                                           cache=wl_cache)
             for r, w in enumerate(wls):
                 entries.append(
                     (g, w, compiled[r] if compiled is not None else None,
-                     fleets[r] if fleets is not None else None))
+                     fleets[r] if fleets is not None else None, probe))
 
-        plats = [exec_specs[g].platform for g, _, _, _ in entries]
+        plats = [exec_specs[g].platform for g, _, _, _, _ in entries]
         try:
-            cols = batching.pad_workloads([w for _, w, _, _ in entries],
+            cols = batching.pad_workloads([w for _, w, _, _, _ in entries],
                                           plats)
         except ValueError as e:          # genuinely incompatible grid
             warnings.warn(
@@ -300,16 +321,16 @@ class JaxEngine:
             return get_engine("numpy").run_sweep(specs, params)
         n_max = cols.pop("n_max")
         caps = np.stack([p.capacities for p in plats]).astype(np.int32)
-        pol = np.array([exec_specs[g].policy for g, _, _, _ in entries],
+        pol = np.array([exec_specs[g].policy for g, _, _, _, _ in entries],
                        np.int32)
         uniform_policy = bool((pol == pol[0]).all())
 
         scen_kw = {}
-        if any(c is not None for _, _, c, _ in entries):
+        if any(c is not None for _, _, c, _, _ in entries):
             from repro.ops.scenario import CompiledScenario
             from repro.ops.capacity import static_schedule
             comps = []
-            for g, w, c, _ in entries:
+            for g, w, c, _, _ in entries:
                 if c is None:           # inert placeholder row
                     c = CompiledScenario(
                         schedule=static_schedule(
@@ -319,19 +340,23 @@ class JaxEngine:
                 comps.append(c)
             horizon = max(s.horizon_s for s in specs)
             services = [cols["service"][i][: w.n]
-                        for i, (_, w, _, _) in enumerate(entries)]
+                        for i, (_, w, _, _, _) in enumerate(entries)]
             scen_kw = batching.stack_scenarios(comps, n_max, horizon,
                                                services=services)
         # lifecycle (fleet/trigger) tensors batch per entry the same way —
         # a whole trigger-policy grid rides ONE jit+vmap call
-        fleet_kw = batching.stack_fleets([f for _, _, _, f in entries],
+        fleet_kw = batching.stack_fleets([f for _, _, _, f, _ in entries],
                                          n_max)
+        # telemetry probes too: probed and unprobed points share one batch
+        probe_kw = batching.stack_probes([p for _, _, _, _, p in entries],
+                                         [f for _, _, _, f, _ in entries])
 
         out = vdes.simulate_ensemble(
             *[jax.numpy.asarray(cols[k]) for k in
               ("arrival", "n_tasks", "task_res", "service", "priority")],
             jax.numpy.asarray(caps), int(pol[0]),
-            policies=None if uniform_policy else pol, **scen_kw, **fleet_kw)
+            policies=None if uniform_policy else pol, **scen_kw, **fleet_kw,
+            **probe_kw)
         out = {k: np.asarray(v) for k, v in out.items()}
         wall = time.perf_counter() - t0
 
@@ -340,11 +365,11 @@ class JaxEngine:
             recs, sums = [], []
             last_tr = None
             for r in range(spec.n_replicas):
-                _, wl, comp, fl = entries[i + r]
+                _, wl, comp, fl, pr = entries[i + r]
                 tr = batching.batch_trace(out, i + r, wl,
                                           spec.platform.capacities,
                                           with_scenario=comp is not None,
-                                          fleet=fl)
+                                          fleet=fl, probe=pr)
                 last_tr = tr
                 rec = trace.flatten_trace(tr, wl)
                 recs.append(rec)
@@ -362,7 +387,8 @@ class JaxEngine:
                     summary["n_pipelines"] / max(wall, 1e-9)
                 results.append(ExperimentResult(
                     spec, summary, recs[0], wall,
-                    lifecycle=lifecycle_result(last_tr)))
+                    lifecycle=lifecycle_result(last_tr),
+                    timeline=_probe_timeline(spec, last_tr)))
             else:
                 results.append(_aggregate_replicas(spec, sums, recs, wall))
         return results

@@ -60,6 +60,11 @@ class ExperimentSpec:
     activated from a preallocated pool, redeploys resetting the drift
     state. ``trigger`` defaults to ``TriggerSpec()`` when a fleet is set;
     without a ``fleet`` it is ignored.
+
+    ``probe`` (a :class:`~repro.obs.probes.ProbeSpec`) turns on in-loop
+    telemetry: both engines sample live state (queue depth, busy slots,
+    effective capacity, controller delta, fleet perf/staleness) at the
+    probe's tick grid, surfaced as ``ExperimentResult.timeline``.
     """
 
     name: str
@@ -75,15 +80,17 @@ class ExperimentSpec:
     workload: Optional[M.Workload] = None
     fleet: Optional[FleetSpec] = None
     trigger: Optional[TriggerSpec] = None
+    probe: Optional[object] = None   # repro.obs.probes.ProbeSpec
 
     def with_(self, **kw) -> "ExperimentSpec":
         """Functional update (``dataclasses.replace`` with axis shorthands):
         plain field names, ``**{"capacity:<resource>": n}`` to resize one
         pool of the platform, ``**{"trigger:<field>": v}`` /
-        ``**{"fleet:<field>": v}`` to update one field of the lifecycle
-        specs (creating default ``TriggerSpec()`` / ``FleetSpec()`` if the
+        ``**{"fleet:<field>": v}`` / ``**{"probe:<field>": v}`` to update
+        one field of the lifecycle/telemetry specs (creating default
+        ``TriggerSpec()`` / ``FleetSpec()`` / ``ProbeSpec()`` if the
         spec has none — the ``"trigger:drift_threshold"`` /
-        ``"trigger:cooldown_s"`` / ``"fleet:drift_scale"`` Sweep axes), or
+        ``"trigger:cooldown_s"`` / ``"probe:interval_s"`` Sweep axes), or
         ``controller=<ReactiveController>`` to set the closed-loop
         controller on the spec's scenario (creating an otherwise-empty
         scenario if the spec has none). ``controller`` is applied after
@@ -105,6 +112,11 @@ class ExperimentSpec:
                 fl = out.fleet if out.fleet is not None else FleetSpec()
                 out = dataclasses.replace(out, fleet=dataclasses.replace(
                     fl, **{k.split(":", 1)[1]: v}))
+            elif k.startswith("probe:"):
+                from repro.obs.probes import ProbeSpec
+                pr = out.probe if out.probe is not None else ProbeSpec()
+                out = dataclasses.replace(out, probe=dataclasses.replace(
+                    pr, **{k.split(":", 1)[1]: v}))
             else:
                 out = dataclasses.replace(out, **{k: v})
         if ctrl is not _UNSET and not (ctrl is None and out.scenario is None):
@@ -136,6 +148,10 @@ class ExperimentResult:
     # a FleetSpec; replica ensembles aggregate lifecycle scalars into the
     # summary instead
     lifecycle: Optional[object] = None
+    # in-loop telemetry view (a repro.obs.probes.ProbeTimeline: named
+    # channel timelines at the probe's tick grid) — set for single-replica
+    # runs of specs with a ProbeSpec
+    timeline: Optional[object] = None
 
     def save(self, directory: str) -> None:
         os.makedirs(directory, exist_ok=True)

@@ -230,6 +230,14 @@ class SimTrace:
     fleet_kind: Optional[np.ndarray] = None
     fleet_model: Optional[np.ndarray] = None
     fleet_pool_base: Optional[int] = None
+    # in-loop telemetry probe outputs: probe_times [E] f64 the compile-time
+    # probe tick grid, probe_vals [E, K] f64 the engine-sampled channels
+    # (K = repro.core.des.probe_channel_count(nres); see repro.obs.probes
+    # for the channel layout and named-timeline view). Sampled in f32
+    # identically by both engines (parity-gated); NaN rows are ticks the run
+    # never reached. None when the run had no probe.
+    probe_times: Optional[np.ndarray] = None
+    probe_vals: Optional[np.ndarray] = None
     # engine wave-loop iteration count (None = engine predates wave
     # reporting); both engines retire events in identical waves, so tests
     # assert *wave-for-wave* parity with this, not just equal timestamps

@@ -138,38 +138,78 @@ def concat_records(recs) -> TaskRecords:
 # analytics
 # ---------------------------------------------------------------------------
 
+def _provisioned_bins(schedule, capacities: np.ndarray,
+                      edges: np.ndarray) -> np.ndarray:
+    """[nres, nbins] provisioned node-seconds per bin: the integral of the
+    (possibly time-varying) capacity schedule over each bin, or
+    ``capacities * bin`` when no schedule is given. The static case produces
+    bit-identical denominators to the historical ``capacity * bin_s``."""
+    if schedule is None:
+        widths = np.diff(edges)
+        return np.asarray(capacities, np.float64)[:, None] * widths[None, :]
+    cum = np.stack([schedule.provisioned_node_seconds(float(t))
+                    for t in edges])                       # [nbins+1, nres]
+    return np.diff(cum, axis=0).T
+
+
 def utilization_timeline(rec: TaskRecords, capacities: np.ndarray,
                          bin_s: float = 3600.0,
-                         horizon_s: Optional[float] = None) -> Dict[str, np.ndarray]:
-    """Busy-server integral per resource per time bin / (capacity * bin)."""
+                         horizon_s: Optional[float] = None,
+                         schedule=None) -> Dict[str, np.ndarray]:
+    """Busy-server integral per resource per time bin / provisioned
+    node-seconds in the bin.
+
+    ``schedule`` (a :class:`~repro.ops.capacity.CapacitySchedule` — under
+    closed-loop control the *realized* one from
+    :func:`repro.ops.accounting.realized_schedule`) supplies a time-varying
+    denominator, so the timeline agrees with the realized-cost summaries: a
+    bin where the controller scaled 2x shows the true (halved) utilization
+    instead of charging the static planned capacity. Without it the
+    denominator is the historical ``capacities * bin_s``. Bins with zero
+    provisioned capacity report 0."""
     horizon = horizon_s or float(np.nanmax(rec.finish)) + 1.0
     nbins = int(np.ceil(horizon / bin_s))
     nres = capacities.shape[0]
     util = np.zeros((nres, nbins))
     edges = np.arange(nbins + 1) * bin_s
+    if schedule is None:   # historical denominator, bit-for-bit
+        prov = np.broadcast_to(
+            np.asarray(capacities, np.float64)[:, None] * bin_s,
+            (nres, nbins))
+    else:
+        prov = _provisioned_bins(schedule, capacities, edges)
     ran = ~np.isnan(rec.start)    # stranded tasks (scenario starvation) idle
     for r in range(nres):
         m = (rec.resource == r) & ran
         s, f = rec.start[m], rec.finish[m]
         for b in range(nbins):
+            if prov[r, b] <= 0.0:
+                continue
             lo, hi = edges[b], edges[b + 1]
             overlap = np.clip(np.minimum(f, hi) - np.maximum(s, lo), 0.0, None)
-            util[r, b] = overlap.sum() / (capacities[r] * bin_s)
+            util[r, b] = overlap.sum() / prov[r, b]
     return {"edges": edges, "util": util}
 
 
 def mean_utilization(rec: TaskRecords, capacities: np.ndarray,
-                     horizon_s: float) -> np.ndarray:
+                     horizon_s: float, schedule=None) -> np.ndarray:
+    """Busy node-seconds / provisioned node-seconds per resource.
+    ``schedule`` as in :func:`utilization_timeline`: pass the realized
+    capacity timeline so closed-loop utilization charges what the engines
+    actually provisioned (static schedules reproduce the historical
+    ``capacity * horizon`` denominator bit-for-bit)."""
     nres = capacities.shape[0]
     out = np.zeros(nres)
+    prov = _provisioned_bins(schedule, capacities,
+                             np.array([0.0, horizon_s]))[:, 0]
     ran = ~np.isnan(rec.start)    # stranded tasks (scenario starvation) idle
     for r in range(nres):
-        if capacities[r] <= 0:    # inert pool (e.g. ragged-grid padding)
+        if prov[r] <= 0:          # inert pool (e.g. ragged-grid padding)
             continue
         m = (rec.resource == r) & ran
         busy = np.clip(np.minimum(rec.finish[m], horizon_s) - rec.start[m],
                        0.0, None).sum()
-        out[r] = busy / (capacities[r] * horizon_s)
+        out[r] = busy / prov[r]
     return out
 
 
@@ -235,9 +275,11 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
     ``realized`` (a second :class:`~repro.ops.capacity.CapacitySchedule`,
     normally from :func:`repro.ops.accounting.realized_schedule`) is the
     engine-recorded capacity timeline under closed-loop control: when given,
-    cost/utilization integrate *it* instead of the planned ``schedule``, and
-    the planned figures come back alongside as ``planned_node_seconds`` /
-    ``planned_total_cost`` / ``realized_vs_planned_cost_delta``.
+    cost/utilization integrate *it* instead of the planned ``schedule`` —
+    including the top-level ``utilization`` key, which divides by realized
+    provisioned node-seconds so it agrees with the realized-cost block —
+    and the planned figures come back alongside as ``planned_node_seconds``
+    / ``planned_total_cost`` / ``realized_vs_planned_cost_delta``.
 
     ``lifecycle`` (a dict from :func:`repro.ops.accounting.
     lifecycle_summary`, built from the engine-recorded fleet tensors) folds
@@ -245,7 +287,7 @@ def summarize(rec: TaskRecords, capacities: np.ndarray, horizon_s: float,
     integrals, final fleet performance — with ``mean_staleness`` /
     ``n_retrained`` / ``n_triggered`` mirrored at the top level so replica
     aggregation and sweep frontiers (cost vs staleness) can read scalars."""
-    util = mean_utilization(rec, capacities, horizon_s)
+    util = mean_utilization(rec, capacities, horizon_s, schedule=realized)
     out = {
         "n_tasks": int(rec.start.shape[0]),
         "n_pipelines": int(np.unique(rec.pipeline).shape[0]),

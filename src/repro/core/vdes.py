@@ -2,7 +2,7 @@
 
 State is a struct-of-arrays over pipelines; a ``lax.while_loop`` advances the
 global clock to the next event time and retires *all* events at that instant.
-Each loop iteration (a **wave**) is composed of five named kernel stages:
+Each loop iteration (a **wave**) is composed of up to six named kernel stages:
 
   1. **event selection** (``_select_events``): the global next-event time
      ``t_star`` is the minimum over pending task events, the next scheduled
@@ -33,7 +33,14 @@ Each loop iteration (a **wave**) is composed of five named kernel stages:
      retraining pool (compile-time injection budget), and trigger/redeploy
      actions append to the shared action timeline. All randomness
      (observation noise, sudden-drift increments, redeploy gains, retrain
-     durations) is presampled outside the jitted loop.
+     durations) is presampled outside the jitted loop;
+  6. **probe** (``_probe_stage``, optional): *in-loop telemetry*. At
+     compile-time probe ticks (the same f32 tick-grid machinery again) the
+     settled post-wave state — per-resource queue depth, busy slots,
+     effective capacity, controller delta, fleet min-perf/max-staleness —
+     is sampled in f32 into a preallocated ``[E, K]`` buffer carried
+     through the loop (see :mod:`repro.obs.probes`). Physics-invisible and
+     parity-gated: the numpy engine mirrors the sampling op-for-op.
 
 Semantics match ``repro.core.des`` exactly — same wave ordering, same
 FIFO/PRIORITY/SJF keys — verified wave-for-wave by tests on integer-time
@@ -86,7 +93,8 @@ from repro.core import model as M
 from repro.core.des import (CTRL_FIELDS, CTRL_HEADER, CTRL_INF,
                             FLEET_ACT_REDEPLOY, FLEET_ACT_TRIGGER,
                             POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF,
-                            TRIG_FIELDS, unpack_controller)
+                            TRIG_FIELDS, probe_channel_count,
+                            unpack_controller)
 from repro.core.metrics import fleet_performance_acc, fleet_staleness
 
 INF = jnp.float32(CTRL_INF)   # the ONE shared f32 "never" sentinel
@@ -164,7 +172,7 @@ def admission_order_chained(res_q: jnp.ndarray, pkey: jnp.ndarray,
 
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots"))
+                          "n_ctrl_slots", "n_probe_slots"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
@@ -177,7 +185,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              admission_sort: str = "fused",
              n_ctrl_slots: Optional[int] = None,
              fleet=None, trig=None, obs_noise=None, drift_inc=None,
-             pool_gain=None, pool_base=None, n_pool_eff=None):
+             pool_gain=None, pool_base=None, n_pool_eff=None,
+             probe=None, n_probe_slots: Optional[int] = None):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
@@ -222,6 +231,20 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     and ``pool_base``/``n_pool_eff`` locating the latent retraining-pool
     rows inside the (extended) workload. Every random draw is presampled
     outside the jitted function, exactly like the failure-attempt tensors.
+
+    The **probe stage** (in-loop telemetry) activates with ``probe`` — a
+    ``[PROBE_FIELDS]`` f32 header ``[interval, t_first, t_end, n_models]``
+    (``interval <= 0`` disables, the batched padding row) — plus the static
+    ``n_probe_slots = E`` (the compile-time tick bound, same grid machinery
+    as controller/trigger). At every probe tick (ticks join the next-event
+    minimum and keep the loop alive until the grid exhausts) the settled
+    post-wave state — per-resource queue depth, busy slots, effective
+    capacity, controller delta, fleet min-perf / max-staleness (masked to
+    the entry's own ``n_models`` rows; min/max so the reductions stay
+    order-independent) — is written into a preallocated ``[E, K]`` f32
+    buffer, returned as ``probe_vals`` with the tick count ``probe_n``. The
+    numpy engine mirrors the sampling f32-op-for-op, so probe buffers are
+    parity-gated like task timestamps. The stage is physics-invisible.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
@@ -259,6 +282,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         pbase = jnp.asarray(pool_base, jnp.int32)
         peff = jnp.asarray(P if n_pool_eff is None else n_pool_eff,
                            jnp.int32)
+
+    has_probe = probe is not None and n_probe_slots is not None \
+        and n_probe_slots > 0
+    if has_probe:
+        probe_t = jnp.asarray(probe, jnp.float32)
+        p_interval, p_first, p_end = (probe_t[i] for i in range(3))
+        p_models = jnp.round(probe_t[3]).astype(jnp.int32)
+        p_enabled = p_interval > 0.0
+        E_p = n_probe_slots
+        K_p = probe_channel_count(nres)
 
     has_ctrl = controller is not None
     if has_ctrl:
@@ -318,6 +351,11 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         # lifecycle action buffer: [A, 3] rows of (f32 time, kind, model id)
         state["fleet_act"] = jnp.full((A_f, 3), jnp.nan, jnp.float32)
         state["fleet_n"] = jnp.int32(0)
+    if has_probe:
+        state["t_probe"] = jnp.where(p_enabled & (p_first <= p_end),
+                                     p_first, INF)
+        state["p_tick"] = jnp.int32(0)
+        state["probe_vals"] = jnp.full((E_p, K_p), jnp.nan, jnp.float32)
 
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
@@ -335,6 +373,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             t_star = jnp.minimum(t_star, s["t_eval"])
         if has_fleet:
             t_star = jnp.minimum(t_star, s["t_fleet"])
+        if has_probe:
+            t_star = jnp.minimum(t_star, s["t_probe"])
         return t_star, t_cap
 
     def _completion_stage(s, t_star):
@@ -585,6 +625,63 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         s["f_tick"] = s["f_tick"] + firing.astype(jnp.int32)
         return s
 
+    def _probe_stage(s, t_star):
+        """Stage 6 (optional): in-loop telemetry. Runs LAST in the wave so
+        it samples the settled post-admission/post-fleet state at t_star —
+        a probe tick that coincides with nothing else is a no-op wave for
+        every other stage (the admission invariant guarantees no queued job
+        has a free slot after any wave), so probes never perturb the
+        physics. Arithmetic is float32 — the numpy engine mirrors this
+        sampling operation-for-operation."""
+        s = dict(s)
+        firing = p_enabled & (s["t_probe"] == t_star)
+        e = jnp.clip(s["p_tick"], 0, E_p - 1)
+        queued = s["phase"] == _QUEUED
+        tcl = jnp.clip(s["task_idx"], 0, T - 1)
+        res_p = jnp.where(queued, vwl.task_res[ids, tcl], nres)
+        qlen = jax.ops.segment_sum(queued.astype(jnp.int32), res_p,
+                                   num_segments=nres + 1)[:nres]
+        sched_now = cap_vals[jnp.clip(s["cap_idx"] - 1, 0, K - 1)]
+        if has_ctrl:
+            delta = s["ctrl_tgt"] - base_i
+        else:
+            delta = jnp.zeros((nres,), jnp.int32)
+        cap_eff = sched_now + delta
+        busy = cap_eff - s["free"]                       # running jobs
+        if has_fleet:
+            # fleet channels reduce with min/max (order-independent, so the
+            # batched vmap and the numpy mirror agree bit-for-bit), masked
+            # to the entry's own n_models rows (padded rows would corrupt
+            # the min with their zero perf0)
+            valid_m = jnp.arange(M_, dtype=jnp.int32) < p_models
+            dtp = jnp.maximum(t_star - s["fl_dep"], 0.0)
+            perf = fleet_performance_acc(s["fl_perf0"], s["fl_acc"], dtp,
+                                         fleet_t, xp=jnp)
+            stale = fleet_staleness(s["fl_perf0"], perf, xp=jnp)
+            any_m = jnp.any(valid_m)
+            f_perf = jnp.where(any_m,
+                               jnp.min(jnp.where(valid_m, perf, INF)),
+                               jnp.nan)[None]
+            f_stale = jnp.where(any_m,
+                                jnp.max(jnp.where(valid_m, stale, -INF)),
+                                jnp.nan)[None]
+        else:
+            f_perf = f_stale = jnp.full((1,), jnp.nan, jnp.float32)
+        row = jnp.concatenate(
+            [qlen.astype(jnp.float32), busy.astype(jnp.float32),
+             cap_eff.astype(jnp.float32), delta.astype(jnp.float32),
+             f_perf.astype(jnp.float32), f_stale.astype(jnp.float32)])
+        s["probe_vals"] = s["probe_vals"].at[e].set(
+            jnp.where(firing, row, s["probe_vals"][e]))
+        # advance the tick grid exactly as the controller's (f32 ulp guard)
+        t_nxt = s["t_probe"] + p_interval
+        s["t_probe"] = jnp.where(
+            firing,
+            jnp.where((t_nxt > p_end) | (t_nxt <= s["t_probe"]), INF, t_nxt),
+            s["t_probe"])
+        s["p_tick"] = s["p_tick"] + firing.astype(jnp.int32)
+        return s
+
     # -------------------------------------------------------- wave loop
 
     def cond(s):
@@ -597,6 +694,10 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         alive = jnp.any(s["phase"] != _DONE)
         if has_fleet:
             alive = alive | (s["t_fleet"] < INF)
+        if has_probe:
+            # remaining probe ticks keep the loop alive too: timelines must
+            # cover the full grid even after every pipeline drained
+            alive = alive | (s["t_probe"] < INF)
         return alive & (t_star < INF)
 
     def body(s):
@@ -606,6 +707,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         s = _admission_stage(s, t_star)
         if has_fleet:
             s = _fleet_stage(s, t_star)
+        if has_probe:
+            s = _probe_stage(s, t_star)
         s["wave"] = s["wave"] + 1
         return s
 
@@ -623,16 +726,21 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         for k in ("fleet_perf", "fleet_stale", "fleet_act", "fleet_n",
                   "pool_arr", "pool_model", "pool_next"):
             res[k] = out[k]
+    if has_probe:
+        res["probe_vals"] = out["probe_vals"]
+        res["probe_n"] = out["p_tick"]
     return res
 
 
 def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                       policy: int = POLICY_FIFO, scenario=None,
-                      fleet=None) -> M.SimTrace:
+                      fleet=None, probe=None) -> M.SimTrace:
     """Convenience: numpy Workload in, SimTrace out (single replica).
     ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`;
     ``fleet`` a :class:`repro.ops.scenario.CompiledFleet` (``wl`` must then
-    be the extended workload carrying the latent retraining-pool rows)."""
+    be the extended workload carrying the latent retraining-pool rows);
+    ``probe`` a :class:`repro.obs.probes.CompiledProbe` (in-loop telemetry
+    sampling onto the trace's ``probe_times``/``probe_vals``)."""
     platform = platform or M.PlatformConfig()
     att_start = att_finish = None
     ctrl_times = ctrl_caps = None
@@ -648,6 +756,14 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
             drift_inc=jnp.asarray(fl.drift_inc, jnp.float32),
             pool_gain=jnp.asarray(fl.pool_gain, jnp.float32),
             pool_base=jnp.int32(fl.pool_base))
+    pr = probe
+    if pr is not None and float(np.asarray(pr.header)[0]) <= 0.0:
+        pr = None
+    if pr is not None:
+        hdr = np.asarray(pr.header, np.float32).copy()
+        hdr[3] = np.float32(fl.n_models if fl is not None else 0)
+        fleet_kw.update(probe=jnp.asarray(hdr),
+                        n_probe_slots=int(pr.n_ticks))
     if scenario is not None:
         from repro.core.des import ctrl_tick_bound, unpack_ctrl_actions
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
@@ -701,6 +817,10 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         arrival_out, fl_cols = fleet_trace_columns(
             fl, arrival_out, res["pool_arr"], res["fleet_act"],
             res["fleet_n"], res["fleet_perf"], res["fleet_stale"])
+    if pr is not None:
+        fl_cols.update(
+            probe_times=np.asarray(pr.times, np.float64),
+            probe_vals=np.asarray(res["probe_vals"], np.float64))
     return M.SimTrace(
         start=np.asarray(res["start"], np.float64),
         finish=np.asarray(res["finish"], np.float64),
@@ -726,7 +846,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots"))
+                          "n_ctrl_slots", "n_probe_slots"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
@@ -736,7 +856,8 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       admission_sort: str = "fused",
                       n_ctrl_slots: Optional[int] = None,
                       fleets=None, trig=None, obs_noise=None, drift_inc=None,
-                      pool_gain=None, pool_base=None, n_pool_eff=None):
+                      pool_gain=None, pool_base=None, n_pool_eff=None,
+                      probes=None, n_probe_slots: Optional[int] = None):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
@@ -764,6 +885,12 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
     common M/E/P; inert rows beyond each entry's own sizes). New
     ``"trigger:*"`` / ``"fleet:*"`` Sweep axes ride these tensors, so a
     whole lifecycle-policy grid lowers to this one jit+vmap call.
+
+    The probe (telemetry) stage batches identically: ``probes
+    [R, PROBE_FIELDS]`` headers (an interval <= 0 row disables the stage
+    for that replica) plus the static ``n_probe_slots`` (the max tick bound
+    over the batch) bring back stacked ``probe_vals [R, E, K]`` telemetry
+    buffers, which ``batching.batch_trace`` slices per entry.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -800,6 +927,8 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         mapped["pool_gain"] = jnp.asarray(pool_gain, jnp.float32)
         mapped["pool_base"] = jnp.asarray(pool_base, jnp.int32)
         mapped["n_pool_eff"] = jnp.asarray(n_pool_eff, jnp.int32)
+    if probes is not None:
+        mapped["probes"] = jnp.asarray(probes, jnp.float32)
 
     def one(m):
         vwl = VWorkload(m["arrival"], m["n_tasks"], m["task_res"],
@@ -819,6 +948,8 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         drift_inc=m.get("drift_inc"),
                         pool_gain=m.get("pool_gain"),
                         pool_base=m.get("pool_base"),
-                        n_pool_eff=m.get("n_pool_eff"))
+                        n_pool_eff=m.get("n_pool_eff"),
+                        probe=m.get("probes"),
+                        n_probe_slots=n_probe_slots)
 
     return jax.vmap(one)(mapped)

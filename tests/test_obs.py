@@ -1,0 +1,399 @@
+"""Telemetry plane (PR 6): parity-gated in-loop probes, OTel-style span
+export, and the realized-utilization fix.
+
+  - probe-buffer numpy-vs-JAX parity (bit-exact, waves included) on
+    integer-time workloads: plain, full-stack (controller + fleet +
+    failure/retry), batched through a probed Sweep grid, and via seeded
+    hypothesis twins;
+  - probes are physics-invisible: a probed run's schedule, fleet timelines
+    and controller actions are bit-identical to the unprobed run's;
+  - span export: JSONL round-trip reconstructs every attempt interval
+    bit-exactly vs TaskRecords, the Chrome-trace export is valid
+    trace_event JSON carrying the same exact intervals, and latent
+    retraining-pool rows are invisible in both;
+  - `utilization_timeline` / `mean_utilization` accept the realized
+    capacity timeline so closed-loop utilization charges what the engines
+    actually provisioned (regression: a controller that scales mid-run no
+    longer yields utilization > 1 against the static planned capacity).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import des, trace, vdes
+from repro.core import model as M
+from repro.core.des import probe_channel_count
+from repro.core.experiment import ExperimentSpec, Sweep, run_experiment
+from repro.core.metrics import FLEET_FIELDS
+from repro.core.runtime import FleetSpec, TriggerSpec
+from repro.obs import (ProbeSpec, ProbeTimeline,
+                       attempt_intervals, attempt_intervals_from_records,
+                       build_spans, compile_probe, probe_channel_names,
+                       read_chrome_attempt_intervals, read_spans_jsonl,
+                       write_chrome_trace, write_spans_jsonl)
+from repro.ops import (FailureModel, ReactiveController, RetryPolicy,
+                       Scenario)
+from repro.ops.accounting import realized_schedule
+from repro.ops.capacity import static_schedule
+from repro.ops.scenario import compile_fleet
+from test_des_engines import make_workload, platform
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator (suite order independence)."""
+    return np.random.default_rng(20260807)
+
+
+def int_workload(rng, n=60, horizon=300.0, **kw):
+    return make_workload(rng, n, integer_time=True, horizon=horizon, **kw)
+
+
+def fleet_tensor():
+    fl = np.zeros((3, FLEET_FIELDS), np.float32)
+    fl[:, 0] = [0.9, 0.8, 0.95]
+    fl[:, 1] = [2e-3, 1e-3, 5e-4]
+    fl[:, 5] = 7 * 24 * 3600.0
+    return fl
+
+
+TRIG = TriggerSpec(drift_threshold=0.05, cooldown_s=60.0, obs_noise=0.01,
+                   interval_s=20.0, retrain_durations=(40.0, 5.0, 15.0))
+CTRL = ReactiveController(high_watermark=0.3, step=0.5, max_scale=4.0,
+                          interval_s=10.0)
+
+
+def assert_probes_match(t_np, t_jx):
+    assert t_np.waves == t_jx.waves, "wave-for-wave parity"
+    assert np.array_equal(t_np.probe_times, t_jx.probe_times)
+    # the probe stage is f32 in both engines: buffers must be BIT-equal
+    assert np.array_equal(t_np.probe_vals, t_jx.probe_vals, equal_nan=True)
+
+
+# ------------------------------------------------------- probe parity
+
+def test_probe_parity_plain(rng):
+    wl = int_workload(rng, n=100, horizon=500.0)
+    pr = compile_probe(ProbeSpec(interval_s=60.0), 500.0)
+    t_np = des.simulate(wl, platform(), probe=pr)
+    t_jx = vdes.simulate_to_trace(wl, platform(), probe=pr)
+    assert_probes_match(t_np, t_jx)
+    assert t_np.probe_vals.shape == (pr.n_ticks,
+                                     probe_channel_count(2))
+
+
+def test_probe_parity_full_stack(rng):
+    """Controller + fleet + failure/retry + probe in ONE wave loop: the
+    probe samples every other stage's live state and both engines must
+    still agree bit-for-bit."""
+    wl = int_workload(rng, n=50)
+    plat = platform(2, 2)
+    sc = Scenario(name="full", controller=CTRL, failures=FailureModel(
+        p_fail_by_type=(0.2,) * M.N_TASK_TYPES,
+        retry=RetryPolicy(max_retries=2, base_s=4.0, mult=2.0, cap_s=16.0)))
+    cf, ext = compile_fleet(FleetSpec(params=fleet_tensor()), TRIG, wl,
+                            plat, 300.0, seed=5)
+    comp = sc.compile(ext, plat, 300.0, seed=5)
+    pr = compile_probe(ProbeSpec(interval_s=30.0), 300.0,
+                       n_models=cf.n_models)
+    t_np = des.simulate(ext, plat, scenario=comp, fleet=cf, probe=pr)
+    t_jx = vdes.simulate_to_trace(ext, plat, scenario=comp, fleet=cf,
+                                  probe=pr)
+    assert_probes_match(t_np, t_jx)
+    # the fleet channels actually sampled something
+    tl = ProbeTimeline.from_trace(t_np, plat)
+    assert np.isfinite(tl.channel("fleet_min_perf")[tl.sampled]).all()
+    assert (tl.channel("fleet_max_staleness")[tl.sampled] >= 0.0).all()
+
+
+def test_probe_physics_invisible(rng):
+    """Sampling must not perturb the simulation: schedules, fleet
+    timelines, and controller actions are bit-identical with and without
+    the probe (only the wave count differs — probe-only waves are no-ops
+    for every other stage)."""
+    wl = int_workload(rng, n=50)
+    plat = platform(2, 2)
+    sc = Scenario(name="ctrl", controller=CTRL)
+    cf, ext = compile_fleet(FleetSpec(params=fleet_tensor()), TRIG, wl,
+                            plat, 300.0, seed=7)
+    comp = sc.compile(ext, plat, 300.0, seed=7)
+    pr = compile_probe(ProbeSpec(interval_s=7.0), 300.0,
+                       n_models=cf.n_models)
+    probed = des.simulate(ext, plat, scenario=comp, fleet=cf, probe=pr)
+    bare = des.simulate(ext, plat, scenario=comp, fleet=cf)
+    assert np.array_equal(bare.start, probed.start, equal_nan=True)
+    assert np.array_equal(bare.finish, probed.finish, equal_nan=True)
+    assert np.array_equal(bare.fleet_perf, probed.fleet_perf,
+                          equal_nan=True)
+    assert np.array_equal(bare.ctrl_times, probed.ctrl_times)
+    assert np.array_equal(bare.ctrl_caps, probed.ctrl_caps)
+
+
+def test_probe_channel_semantics(rng):
+    """Open-loop, fleet-less run: capacity channel == static capacities,
+    controller delta == 0, busy <= capacity, fleet channels NaN."""
+    wl = int_workload(rng, n=80, horizon=400.0)
+    plat = platform(3, 2)
+    pr = compile_probe(ProbeSpec(interval_s=50.0), 400.0)
+    tr = des.simulate(wl, plat, probe=pr)
+    tl = ProbeTimeline.from_trace(tr, plat)
+    s = tl.sampled
+    assert s.any()
+    for r, cap in zip(("a", "b"), (3, 2)):
+        assert (tl.channel(f"cap:{r}")[s] == cap).all()
+        assert (tl.channel(f"ctrl_delta:{r}")[s] == 0.0).all()
+        assert (tl.channel(f"busy:{r}")[s] <= cap).all()
+        assert (tl.channel(f"qlen:{r}")[s] >= 0.0).all()
+    assert np.isnan(tl.channel("fleet_min_perf")[s]).all()
+    assert np.isnan(tl.channel("fleet_max_staleness")[s]).all()
+
+
+def test_probed_sweep_batched_vs_serial(rng):
+    """A probed grid lowers through the batched [R, E, K] path and every
+    point matches its own serial numpy run bit-for-bit — including a
+    mixed grid where one point has no probe at all."""
+    wl = int_workload(rng, n=40)
+    base = ExperimentSpec(name="obs", platform=platform(), horizon_s=300.0,
+                          workload=wl, engine="jax",
+                          probe=ProbeSpec(interval_s=40.0),
+                          fleet=FleetSpec(params=fleet_tensor()),
+                          trigger=TRIG).with_(controller=CTRL)
+    axes = {"probe": [ProbeSpec(interval_s=40.0),
+                      ProbeSpec(interval_s=75.0), None],
+            "policy": [des.POLICY_FIFO, des.POLICY_SJF]}
+    res_jx = Sweep(base, axes).run()
+    res_np = Sweep(base.with_(engine="numpy"), axes).run()
+    assert len(res_jx) == 6
+    for a, b in zip(res_jx, res_np):
+        if a.experiment.probe is None:
+            assert a.timeline is None and b.timeline is None
+            continue
+        assert np.array_equal(a.timeline.times, b.timeline.times)
+        assert np.array_equal(a.timeline.values, b.timeline.values,
+                              equal_nan=True), a.experiment.name
+
+
+def test_experiment_timeline_and_accessors(rng):
+    wl = int_workload(rng, n=40)
+    spec = ExperimentSpec(name="tl", platform=platform(), horizon_s=300.0,
+                          workload=wl, engine="numpy",
+                          probe=ProbeSpec(interval_s=60.0))
+    res = run_experiment(spec)
+    tl = res.timeline
+    assert isinstance(tl, ProbeTimeline)
+    assert tl.channels == tuple(probe_channel_names(["a", "b"]))
+    d = tl.as_dict()
+    assert set(d) == {"t"} | set(tl.channels)
+    assert np.array_equal(d["qlen:a"], tl.channel("qlen:a"),
+                          equal_nan=True)
+    with pytest.raises(KeyError):
+        tl.channel("nope")
+    # unprobed specs keep timeline None
+    assert run_experiment(spec.with_(probe=None)).timeline is None
+
+
+def test_compile_probe_validation():
+    with pytest.raises(ValueError):
+        compile_probe(ProbeSpec(interval_s=0.0), 100.0)
+    with pytest.raises(ValueError):
+        compile_probe(ProbeSpec(interval_s=10.0, t_first=500.0), 100.0)
+    pr = compile_probe(ProbeSpec(interval_s=25.0), 100.0)
+    assert pr.times[0] == 25.0          # t_first defaults to one interval
+    assert pr.times[-1] <= 100.0
+    assert float(pr.header[3]) == 0.0
+
+
+# ---------------------------------------- hypothesis twins (parity)
+
+def check_probe_parity(seed: int, interval: float):
+    r = np.random.default_rng(seed)
+    wl = make_workload(r, 25, max_tasks=3, integer_time=True,
+                      horizon=200.0)
+    pr = compile_probe(ProbeSpec(interval_s=interval), 200.0)
+    t_np = des.simulate(wl, platform(), probe=pr)
+    t_jx = vdes.simulate_to_trace(wl, platform(), probe=pr)
+    assert_probes_match(t_np, t_jx)
+
+
+def test_probe_parity_seeded_twins():
+    """Deterministic twins of the hypothesis property — always run."""
+    for seed in (0, 7, 1234, 99991):
+        check_probe_parity(seed, 20.0)
+        check_probe_parity(seed, 50.0)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       interval=st.sampled_from([20.0, 50.0]))
+def test_probe_parity_property(seed, interval):
+    check_probe_parity(seed, interval)
+
+
+# -------------------------------------------------------- span export
+
+def _failure_run(rng, with_fleet=True):
+    wl = int_workload(rng, n=40)
+    plat = platform()
+    sc = Scenario(name="fail", failures=FailureModel(
+        p_fail_by_type=(0.3,) * M.N_TASK_TYPES,
+        retry=RetryPolicy(max_retries=2, base_s=4.0, mult=2.0, cap_s=16.0)))
+    if with_fleet:
+        cf, ext = compile_fleet(FleetSpec(params=fleet_tensor()), TRIG, wl,
+                                plat, 300.0, seed=5)
+    else:
+        cf, ext = None, wl
+    comp = sc.compile(ext, plat, 300.0, seed=5)
+    tr = des.simulate(ext, plat, scenario=comp, fleet=cf)
+    return tr, trace.flatten_trace(tr, ext)
+
+
+def test_span_jsonl_roundtrip_bit_exact(rng, tmp_path):
+    tr, rec = _failure_run(rng)
+    spans = build_spans(rec, tr, name="t")
+    path = str(tmp_path / "spans.jsonl")
+    write_spans_jsonl(spans, path)
+    back = read_spans_jsonl(path)
+    assert back == spans                       # full-fidelity round trip
+    got = attempt_intervals(back)
+    want = attempt_intervals_from_records(rec)
+    assert got == want                         # f64 `==`, not allclose
+
+
+def test_chrome_trace_valid_and_exact(rng, tmp_path):
+    tr, rec = _failure_run(rng)
+    spans = build_spans(rec, tr, name="t")
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(spans, path)
+    with open(path) as f:
+        doc = json.load(f)                     # valid JSON
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    for te in doc["traceEvents"]:
+        assert te["ph"] in ("X", "i")
+        assert isinstance(te["ts"], int)       # µs per the format
+        if te["ph"] == "X":
+            assert te["dur"] >= 0
+    # exact attempt intervals survive via args.t0_s/t1_s
+    assert read_chrome_attempt_intervals(path) == \
+        attempt_intervals_from_records(rec)
+    # in-engine actions exported as instants
+    names = {te["name"] for te in doc["traceEvents"] if te["ph"] == "i"}
+    assert "trigger" in names
+
+
+def test_latent_pool_rows_invisible_in_spans(rng):
+    """Retraining-pool rows whose trigger never fired have non-finite
+    arrivals: they must not produce spans (same exclusion as
+    flatten_trace)."""
+    tr, rec = _failure_run(rng)
+    latent = set(np.nonzero(
+        ~np.isfinite(np.asarray(tr.arrival, np.float64)))[0].tolist())
+    assert latent, "fixture should leave at least one latent pool row"
+    spans = build_spans(rec, tr)
+    exported = {s["attributes"]["pipeline"] for s in spans
+                if s["kind"] != "run"}
+    assert not (latent & exported)
+    assert exported == set(np.unique(rec.pipeline).tolist())
+
+
+def test_span_tree_structure(rng):
+    tr, rec = _failure_run(rng)
+    spans = build_spans(rec, tr, name="t")
+    by_id = {s["span_id"]: s for s in spans}
+    assert len(by_id) == len(spans)            # ids unique
+    kind_of_parent = {"pipeline": "run", "task": "pipeline",
+                      "attempt": "task"}
+    for s in spans:
+        if s["kind"] == "run":
+            assert s["parent_span_id"] is None
+            continue
+        parent = by_id[s["parent_span_id"]]    # every link resolves
+        assert parent["kind"] == kind_of_parent[s["kind"]]
+    # deterministic: same run exports byte-identically
+    assert build_spans(rec, tr, name="t") == spans
+
+
+def test_spans_without_attempt_records(rng):
+    """Plain runs (no failure scenario, no per-attempt columns): task spans
+    stand in as attempt 0 and the export still matches the records."""
+    wl = int_workload(rng, n=30)
+    tr = des.simulate(wl, platform())
+    rec = trace.flatten_trace(tr, wl)
+    spans = build_spans(rec, tr)
+    assert not any(s["kind"] == "attempt" for s in spans)
+    assert attempt_intervals(spans) == attempt_intervals_from_records(rec)
+
+
+# -------------------------------------- realized-utilization bugfix
+
+def test_utilization_charges_realized_timeline(rng):
+    """Regression: a controller that scales capacity mid-run used to leave
+    utilization computed against the STATIC planned capacities — busy time
+    on 4x-scaled pools divided by the unscaled denominator reported
+    utilization > 1. With the realized schedule the figures are physical
+    again, and summarize()'s top-level key agrees."""
+    wl = int_workload(rng, n=120, horizon=300.0)
+    plat = platform(2, 2)
+    comp = Scenario(name="ctrl", controller=CTRL).compile(wl, plat, 300.0,
+                                                          seed=7)
+    tr = des.simulate(wl, plat, scenario=comp)
+    rec = trace.flatten_trace(tr, wl)
+    rs = realized_schedule(tr, comp)
+    assert rs is not comp.schedule, "controller must act in this fixture"
+
+    u_static = trace.mean_utilization(rec, plat.capacities, 300.0)
+    u_real = trace.mean_utilization(rec, plat.capacities, 300.0,
+                                    schedule=rs)
+    assert u_static.max() > 1.0 + 1e-9          # the bug, visible
+    assert (u_real <= 1.0 + 1e-9).all()         # the fix
+
+    tl_real = trace.utilization_timeline(rec, plat.capacities, 60.0, 300.0,
+                                         schedule=rs)
+    assert (tl_real["util"] <= 1.0 + 0.25).all()  # bin-edge overlap slack
+
+    summary = trace.summarize(rec, plat.capacities, 300.0,
+                              schedule=comp.schedule, realized=rs)
+    assert summary["utilization"]["compute_cluster"] == \
+        pytest.approx(u_real[0])
+
+
+def test_utilization_static_schedule_is_bit_identical(rng):
+    """The static-schedule path must reproduce the historical denominator
+    bit-for-bit — no existing summary may move."""
+    wl = int_workload(rng, n=60)
+    plat = platform()
+    tr = des.simulate(wl, plat)
+    rec = trace.flatten_trace(tr, wl)
+    legacy = trace.mean_utilization(rec, plat.capacities, 300.0)
+    static = trace.mean_utilization(rec, plat.capacities, 300.0,
+                                    schedule=static_schedule(
+                                        plat.capacities))
+    assert np.array_equal(legacy, static)
+    t0 = trace.utilization_timeline(rec, plat.capacities, 60.0, 300.0)
+    t1 = trace.utilization_timeline(rec, plat.capacities, 60.0, 300.0,
+                                    schedule=static_schedule(
+                                        plat.capacities))
+    assert np.array_equal(t0["util"], t1["util"])
+
+
+# ------------------------------------------------------- CI plumbing
+
+def test_check_drift_missing_artifact_gate(tmp_path):
+    """check_drift now fails when an expected BENCH artifact is absent —
+    a silently-erroring bench can no longer hide behind a stale file."""
+    from benchmarks import check_drift
+    art = tmp_path / "artifacts"
+    art.mkdir()
+    gone = check_drift.missing(str(art))
+    assert set(gone) == set(check_drift.EXPECTED)
+    for name in check_drift.EXPECTED:
+        (art / name).write_text(json.dumps({"some_drift": 0.0}))
+    assert check_drift.missing(str(art)) == []
+    # and the drift scan still works on the same directory
+    assert check_drift.check(str(art)) == []
+    (art / check_drift.EXPECTED[0]).write_text(
+        json.dumps({"probe_parity_drift": 0.25}))
+    assert check_drift.check(str(art)) == [
+        (check_drift.EXPECTED[0], "probe_parity_drift", 0.25)]
