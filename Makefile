@@ -1,11 +1,18 @@
 # Repo CI entry points. `make ci` is what a CI job should run.
 PYTHONPATH := src
 
-.PHONY: test smoke-bench bench check-drift ci
+.PHONY: test lint smoke-bench bench check-drift ci
 
 # tier-1 verification (ROADMAP.md)
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# parity auditor: jaxpr + AST static analysis (src/repro/analysis).
+# Fails on any finding not suppressed by a `# parity: allow(<rule>)`
+# pragma or accepted in analysis_baseline.json; writes
+# artifacts/ANALYSIS.json (which check-drift requires).
+lint:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.analysis
 
 # fast benchmark path; writes artifacts/BENCH_scenarios.json
 smoke-bench:
@@ -19,4 +26,4 @@ bench:
 check-drift:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check_drift
 
-ci: test smoke-bench check-drift
+ci: test lint smoke-bench check-drift

@@ -1,4 +1,5 @@
-"""CI gate: fail on numpy-vs-jax drift OR a missing benchmark artifact.
+"""CI gate: fail on numpy-vs-jax drift, a missing benchmark artifact, OR
+an unbaselined static-analysis finding.
 
 Scans every ``artifacts/BENCH_*.json`` for keys containing ``drift`` (e.g.
 ``numpy_vs_jax_drift``, ``realized_timeline_drift``, ``probe_parity_drift``,
@@ -7,8 +8,11 @@ Scans every ``artifacts/BENCH_*.json`` for keys containing ``drift`` (e.g.
 benchmark that measured it "succeeded". It also requires every smoke-suite
 artifact in ``EXPECTED`` to exist: a bench that errors out used to leave a
 stale (or no) artifact undetected — now a missing file fails the build the
-same way drift does. Run by ``make ci`` after the smoke benchmarks refresh
-the artifacts.
+same way drift does. ``artifacts/ANALYSIS.json`` (written by ``make lint``,
+the parity auditor) is an expected artifact too, and a nonzero
+``n_unbaselined`` in it fails the build — the static gate and the runtime
+parity gate land in the same place. Run by ``make ci`` after ``make lint``
+and the smoke benchmarks refresh the artifacts.
 
   PYTHONPATH=src python -m benchmarks.check_drift
 """
@@ -30,6 +34,8 @@ EXPECTED = (
     "BENCH_controller.json",
     "BENCH_feedback.json",
     "BENCH_obs.json",
+    # written by `make lint` (python -m repro.analysis), not by a bench
+    "ANALYSIS.json",
 )
 
 
@@ -53,19 +59,36 @@ def check(art_dir: str = ART) -> list:
     return bad
 
 
+def check_analysis(art_dir: str = ART) -> list:
+    """``(file, key, value)`` offenders from the static-analysis report."""
+    path = os.path.join(art_dir, "ANALYSIS.json")
+    if not os.path.exists(path):
+        return []                      # absence is reported by missing()
+    with open(path) as f:
+        report = json.load(f)
+    n = report.get("n_unbaselined")
+    if n == 0:
+        return []
+    return [("ANALYSIS.json", "n_unbaselined", n)]
+
+
 def main() -> None:
     gone = missing()
     offenders = check()
+    analysis_bad = check_analysis()
     for name in gone:
         print(f"MISSING artifacts/{name}: its benchmark did not run or "
               f"errored out", file=sys.stderr)
     for fname, key, val in offenders:
         print(f"DRIFT {fname}: {key} = {val!r} (expected 0.0)",
               file=sys.stderr)
-    if gone or offenders:
+    for fname, key, val in analysis_bad:
+        print(f"ANALYSIS {fname}: {key} = {val!r} (expected 0) — run "
+              "`make lint` for the findings", file=sys.stderr)
+    if gone or offenders or analysis_bad:
         sys.exit(1)
-    print(f"drift check: all {len(EXPECTED)} expected BENCH_*.json present, "
-          "all drift keys 0.0")
+    print(f"drift check: all {len(EXPECTED)} expected artifacts present, "
+          "all drift keys 0.0, 0 unbaselined analysis findings")
 
 
 if __name__ == "__main__":

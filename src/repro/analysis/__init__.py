@@ -1,0 +1,30 @@
+"""Parity auditor: static analysis that proves engine-mirror bit-parity
+and compile-cache hygiene *before the code ever runs*.
+
+Three passes over the dual-engine simulator (see the README's "Static
+analysis" section for the workflow and hazard catalogue):
+
+- :mod:`repro.analysis.jaxpr_audit` — traces the production
+  ``vdes.simulate`` / ``simulate_ensemble`` calls and walks the jaxpr for
+  FMA-contractable multiply-add chains, f64/weak-typed values in the
+  while carry, order-sensitive loop reductions, and unguarded div/log;
+- :mod:`repro.analysis.recompile_audit` — lowers a representative mixed
+  Sweep grid and proves every axis value shares ONE compile-cache key;
+- :mod:`repro.analysis.ast_audit` — pure-AST structure checks: every vdes
+  kernel stage has a marked numpy mirror in des.py, layout tensors are
+  indexed through named constants, plus repo-specific lint rules.
+
+Findings are gated by inline ``# parity: allow(<rule>)`` pragmas and the
+checked-in ``analysis_baseline.json``; the CLI (``python -m
+repro.analysis``) writes ``artifacts/ANALYSIS.json`` and exits nonzero on
+any unbaselined finding — ``make ci`` runs it via ``make lint``.
+"""
+from repro.analysis.findings import (BASELINE_VERSION, Finding, RULES,
+                                     build_report, load_baseline, reconcile,
+                                     split_suppressed, write_baseline,
+                                     write_report)
+
+__all__ = [
+    "BASELINE_VERSION", "Finding", "RULES", "build_report", "load_baseline",
+    "reconcile", "split_suppressed", "write_baseline", "write_report",
+]

@@ -1,0 +1,377 @@
+"""AST pass: engine-mirror structure and repo-specific parity lint rules.
+
+Pure-``ast`` analysis over the engine/ops/obs sources (no imports, no
+execution — this pass runs even when the engine under audit is broken):
+
+- **mirror-missing / mirror-stale** — every kernel stage defined inside
+  ``vdes.simulate`` (``_select_events`` and the ``_*_stage`` functions)
+  must have a ``# mirror: vdes.<stage>`` marker in ``des.py`` labelling its
+  numpy mirror block, and every marker must point at a live stage;
+- **layout-redef** — the layout constants (``CTRL_*``, ``TRIG_*``,
+  ``PROBE_*``, ``FLEET_*``) are owned by ``core/des.py`` /
+  ``core/metrics.py``; a redefinition anywhere else means the engines can
+  silently disagree on a tensor layout;
+- **layout-index** — no hard-coded integer field index into a layout
+  tensor (names rooted in trig/probe/ctrl/hdr/header/fleet): subscripts
+  must go through the named header constants. Also catches
+  ``name[i] for i in range(<literal>)`` unpacks;
+- **engine-fma** — no bare ``a ± b*c`` in engine files (XLA contracts it
+  into an FMA; use :mod:`repro.core.numerics`). Subscript indices are
+  exempt (integer channel arithmetic);
+- **hot-f64** — no Python ``float()`` / ``np.float64`` in the vdes hot
+  path (``simulate_to_trace`` is host-side conversion and exempt);
+- **mutable-default** — no mutable default arguments anywhere in the
+  package;
+- **probe-reduce** — no sum/mean-class reductions in probe-channel code
+  (``_probe_stage`` / ``obs/probes.py``): the batched and numpy reduction
+  orders differ, so probe channels must reduce with min/max. (The
+  dtype-aware jaxpr pass owns ``segment_sum``: integer count sums are
+  order-exact and allowed.)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, bad_pragma_findings
+
+# engine stage files: the f32 parity-mirrored arithmetic lives here
+ENGINE_FILES = (
+    "src/repro/core/des.py",
+    "src/repro/core/vdes.py",
+    "src/repro/core/metrics.py",
+    "src/repro/obs/probes.py",
+)
+# files that consume/compile the flat layout tensors
+LAYOUT_FILES = ENGINE_FILES + (
+    "src/repro/core/batching.py",
+    "src/repro/ops/scenario.py",
+    "src/repro/ops/capacity.py",
+)
+# single source of truth for layout constants
+LAYOUT_OWNERS = ("src/repro/core/des.py", "src/repro/core/metrics.py")
+
+DES_FILE = "src/repro/core/des.py"
+VDES_FILE = "src/repro/core/vdes.py"
+
+_LAYOUT_NAME_RE = re.compile(r"^(CTRL|TRIG|PROBE|FLEET)_[A-Z]")
+_HEADER_TOKEN_RE = re.compile(r"^(trig|probe|ctrl|hdr|header|fleet)")
+_STAGE_NAME_RE = re.compile(r"^_select_events$|^_\w+_stage$")
+_MIRROR_MARKER_RE = re.compile(r"#\s*mirror:\s*vdes\.(\w+)")
+
+_SUM_CLASS = {"sum", "nansum", "mean", "nanmean", "average", "prod",
+              "cumsum", "dot"}
+_HOT_F64_EXEMPT = {"simulate_to_trace"}
+
+
+def _snippet(lines: Sequence[str], lineno: int) -> str:
+    if 1 <= lineno <= len(lines):
+        return lines[lineno - 1].strip()
+    return ""
+
+
+def _walk_files(root: str) -> List[str]:
+    """Every .py under src/repro (repo-relative posix paths), sorted."""
+    base = os.path.join(root, "src", "repro")
+    out = []
+    for dirpath, _, names in os.walk(base):
+        for name in names:
+            if name.endswith(".py"):
+                full = os.path.join(dirpath, name)
+                out.append(os.path.relpath(full, root).replace(os.sep, "/"))
+    return sorted(out)
+
+
+def _parse(root: str, rel: str) -> Optional[Tuple[ast.AST, List[str]]]:
+    full = os.path.join(root, rel)
+    if not os.path.exists(full):
+        return None
+    with open(full) as fh:
+        src = fh.read()
+    return ast.parse(src, filename=rel), src.splitlines()
+
+
+# ----------------------------------------------------------- mirror rules
+
+def vdes_stage_defs(tree: ast.AST) -> Dict[str, int]:
+    """``{stage name: lineno}`` of the kernel stages nested in
+    ``vdes.simulate``."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "simulate":
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.FunctionDef) and \
+                        _STAGE_NAME_RE.match(sub.name):
+                    out[sub.name] = sub.lineno
+    return out
+
+
+def mirror_markers(lines: Sequence[str]) -> Dict[str, int]:
+    """``{stage name: lineno}`` of ``# mirror: vdes.<stage>`` markers."""
+    out: Dict[str, int] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _MIRROR_MARKER_RE.search(text)
+        if m:
+            out.setdefault(m.group(1), i)
+    return out
+
+
+def check_mirrors(vdes_tree: ast.AST, vdes_lines: Sequence[str],
+                  des_lines: Sequence[str]) -> List[Finding]:
+    stages = vdes_stage_defs(vdes_tree)
+    markers = mirror_markers(des_lines)
+    out = []
+    for name, lineno in sorted(stages.items(), key=lambda kv: kv[1]):
+        if name not in markers:
+            out.append(Finding(
+                rule="mirror-missing", file=VDES_FILE, line=lineno,
+                message=(f"kernel stage {name} has no "
+                         f"'# mirror: vdes.{name}' marker in des.py — the "
+                         "numpy mirror is missing or unlabelled"),
+                snippet=_snippet(vdes_lines, lineno)))
+    for name, lineno in sorted(markers.items(), key=lambda kv: kv[1]):
+        if name not in stages:
+            out.append(Finding(
+                rule="mirror-stale", file=DES_FILE, line=lineno,
+                message=(f"mirror marker points at vdes.{name}, which is "
+                         "not a kernel stage any more"),
+                snippet=_snippet(des_lines, lineno)))
+    return out
+
+
+# ------------------------------------------------------------ lint rules
+
+def _subscript_index_nodes(tree: ast.AST) -> set:
+    """id()s of every node inside a Subscript index — integer channel/slice
+    arithmetic there is exempt from the FMA rule."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript):
+            for sub in ast.walk(node.slice):
+                out.add(id(sub))
+    return out
+
+
+def engine_fma(rel: str, tree: ast.AST, lines: Sequence[str]) -> List[Finding]:
+    in_index = _subscript_index_nodes(tree)
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, (ast.Add, ast.Sub))):
+            continue
+        if id(node) in in_index:
+            continue
+        if any(isinstance(side, ast.BinOp) and isinstance(side.op, ast.Mult)
+               for side in (node.left, node.right)):
+            op = "+" if isinstance(node.op, ast.Add) else "-"
+            out.append(Finding(
+                rule="engine-fma", file=rel, line=node.lineno,
+                message=(f"bare `a {op} b*c` in an engine file: XLA may "
+                         "contract it into an FMA (numpy rounds the product "
+                         "first) — use repro.core.numerics."
+                         "fma_free_madd/msub"),
+                snippet=_snippet(lines, node.lineno)))
+    return out
+
+
+def _header_tokens(node: ast.AST) -> List[str]:
+    toks = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            toks.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            toks.append(sub.attr)
+    return toks
+
+
+def _is_int_const(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and type(node.value) is int)
+
+
+def _index_has_literal(idx: ast.AST) -> bool:
+    if _is_int_const(idx):
+        return True
+    if isinstance(idx, ast.Slice):
+        return any(part is not None and _is_int_const(part)
+                   for part in (idx.lower, idx.upper, idx.step))
+    if isinstance(idx, ast.Tuple):
+        return any(_index_has_literal(el) for el in idx.elts)
+    return False
+
+
+def layout_index(rel: str, tree: ast.AST,
+                 lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript):
+            # shape tuples are positional by nature, not layout fields
+            if isinstance(node.value, ast.Attribute) and \
+                    node.value.attr == "shape":
+                continue
+            if not any(_HEADER_TOKEN_RE.match(t)
+                       for t in _header_tokens(node.value)):
+                continue
+            if _index_has_literal(node.slice):
+                out.append(Finding(
+                    rule="layout-index", file=rel, line=node.lineno,
+                    message=("hard-coded field index into a layout tensor — "
+                             "use the named header constants from "
+                             "repro.core.des / repro.core.metrics"),
+                    snippet=_snippet(lines, node.lineno)))
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            # `name[i] for i in range(<literal>)`: a positional unpack whose
+            # width is a magic number
+            subscripts_header = any(
+                isinstance(sub, ast.Subscript)
+                and any(_HEADER_TOKEN_RE.match(t)
+                        for t in _header_tokens(sub.value))
+                for sub in ast.walk(node.elt))
+            literal_range = any(
+                isinstance(gen.iter, ast.Call)
+                and isinstance(gen.iter.func, ast.Name)
+                and gen.iter.func.id == "range"
+                and any(_is_int_const(a) for a in gen.iter.args)
+                for gen in node.generators)
+            if subscripts_header and literal_range:
+                out.append(Finding(
+                    rule="layout-index", file=rel, line=node.lineno,
+                    message=("layout-tensor unpack over a literal range() — "
+                             "use the named field count/constants"),
+                    snippet=_snippet(lines, node.lineno)))
+    return out
+
+
+def layout_redef(rel: str, tree: ast.AST,
+                 lines: Sequence[str]) -> List[Finding]:
+    if rel in LAYOUT_OWNERS:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for tgt in targets:
+            elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+            for el in elts:
+                if isinstance(el, ast.Name) and \
+                        _LAYOUT_NAME_RE.match(el.id):
+                    out.append(Finding(
+                        rule="layout-redef", file=rel, line=node.lineno,
+                        message=(f"layout constant {el.id} redefined — "
+                                 "import it from repro.core.des / "
+                                 "repro.core.metrics instead"),
+                        snippet=_snippet(lines, node.lineno)))
+    return out
+
+
+def hot_f64(rel: str, tree: ast.AST, lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef) or \
+                fn.name in _HOT_F64_EXEMPT:
+            continue
+        for node in ast.walk(fn):
+            bad = None
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == "float":
+                bad = "float()"
+            elif isinstance(node, ast.Attribute) and \
+                    node.attr in ("float64", "float_", "double"):
+                bad = node.attr
+            if bad:
+                out.append(Finding(
+                    rule="hot-f64", file=rel, line=node.lineno,
+                    message=(f"{bad} in the vdes hot path promotes f32 "
+                             "parity state to f64"),
+                    snippet=_snippet(lines, node.lineno)))
+    return out
+
+
+def mutable_default(rel: str, tree: ast.AST,
+                    lines: Sequence[str]) -> List[Finding]:
+    out = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for default in list(fn.args.defaults) + \
+                [d for d in fn.args.kw_defaults if d is not None]:
+            mutable = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(default, ast.Call)
+                and isinstance(default.func, ast.Name)
+                and default.func.id in ("list", "dict", "set"))
+            if mutable:
+                out.append(Finding(
+                    rule="mutable-default", file=rel, line=fn.lineno,
+                    message=(f"mutable default argument on {fn.name}() — "
+                             "shared across calls; default to None"),
+                    snippet=_snippet(lines, fn.lineno)))
+    return out
+
+
+def probe_reduce(rel: str, tree: ast.AST, lines: Sequence[str],
+                 scope: Optional[ast.AST] = None) -> List[Finding]:
+    out = []
+    for node in ast.walk(scope if scope is not None else tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _SUM_CLASS:
+            out.append(Finding(
+                rule="probe-reduce", file=rel, line=node.lineno,
+                message=(f"order-dependent {node.func.attr}() in a probe "
+                         "channel — the batched and numpy reduction orders "
+                         "differ; probe channels must use min/max"),
+                snippet=_snippet(lines, node.lineno)))
+    return out
+
+
+def _probe_stage_scope(vdes_tree: ast.AST) -> Optional[ast.AST]:
+    for node in ast.walk(vdes_tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_probe_stage":
+            return node
+    return None
+
+
+# ----------------------------------------------------------------- entry
+
+def audit_tree(root: str) -> List[Finding]:
+    """Run every AST rule over the repo at ``root``. Findings come back
+    un-suppressed — pragma/baseline filtering happens in the driver."""
+    parsed: Dict[str, Tuple[ast.AST, List[str]]] = {}
+    for rel in set(_walk_files(root)) | set(LAYOUT_FILES):
+        got = _parse(root, rel)
+        if got is not None:
+            parsed[rel] = got
+
+    findings: List[Finding] = []
+
+    if VDES_FILE in parsed and DES_FILE in parsed:
+        vdes_tree, vdes_lines = parsed[VDES_FILE]
+        _, des_lines = parsed[DES_FILE]
+        findings += check_mirrors(vdes_tree, vdes_lines, des_lines)
+
+    for rel in ENGINE_FILES:
+        if rel in parsed:
+            findings += engine_fma(rel, *parsed[rel])
+    for rel in LAYOUT_FILES:
+        if rel in parsed:
+            findings += layout_index(rel, *parsed[rel])
+            findings += layout_redef(rel, *parsed[rel])
+    if VDES_FILE in parsed:
+        tree, lines = parsed[VDES_FILE]
+        findings += hot_f64(VDES_FILE, tree, lines)
+        scope = _probe_stage_scope(tree)
+        if scope is not None:
+            findings += probe_reduce(VDES_FILE, tree, lines, scope=scope)
+    probes_rel = "src/repro/obs/probes.py"
+    if probes_rel in parsed:
+        findings += probe_reduce(probes_rel, *parsed[probes_rel])
+    for rel, (tree, lines) in sorted(parsed.items()):
+        findings += mutable_default(rel, tree, lines)
+        findings += bad_pragma_findings(rel, lines)
+    return findings

@@ -1,0 +1,151 @@
+"""Recompile pass: prove a mixed Sweep grid stays on ONE compile-cache key.
+
+The PR 2 bug class: an axis value that reaches ``vdes.simulate_ensemble``
+as a *static* argument (or as a shape) splits the grid across compile-cache
+keys, and a 16-point sweep silently pays 16 XLA compiles. The audit lowers
+a representative mixed grid (capacity x controller x trigger x probe — see
+:func:`repro.analysis.harness.smoke_sweep`) through the production
+``Sweep.run`` path with the capture shim on, then asserts:
+
+1. the grid produced exactly ONE ``simulate_ensemble`` call;
+2. every captured call maps to the same compile-cache key (static argnames
+   + abstract value signature of the array arguments);
+3. slicing each batch row out of the captured call and re-tracing it under
+   ``jax.make_jaxpr`` hashes to the identical jaxpr — every axis value
+   lives in the batch *tensors*, none in the traced program text;
+4. the jit cache grew by at most one entry across the run.
+
+Violations come back as ``recompile`` findings (no source site — they are
+properties of the lowering, not of a line), which the baseline/CI gate
+treats like any other finding.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.harness import CapturedCall, capture_calls, smoke_sweep
+
+
+def _aval_sig(value) -> Tuple:
+    shape = getattr(value, "shape", None)
+    dtype = getattr(value, "dtype", None)
+    if shape is None or dtype is None:
+        return ("static", repr(value))
+    return (tuple(shape), str(dtype))
+
+
+def cache_key(call: CapturedCall) -> Tuple:
+    """The compile-cache key this call selects: static argnames + the
+    abstract (shape, dtype) signature of every array argument."""
+    arrays, static = call.split()
+    arr_sig = tuple(sorted((k, _aval_sig(v)) for k, v in arrays.items()
+                           if v is not None))
+    pos_sig = tuple(_aval_sig(a) for a in call.args)
+    return (tuple(sorted(static.items())), pos_sig, arr_sig)
+
+
+def _batch_rows(call: CapturedCall) -> int:
+    return int(call.args[0].shape[0]) if call.args else 0
+
+
+def _slice_row(call: CapturedCall, b: int) -> CapturedCall:
+    """Row ``b`` of a batched call, batch dim kept (R=1)."""
+    rows = _batch_rows(call)
+
+    def cut(v):
+        if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1 \
+                and v.shape[0] == rows:
+            return v[b:b + 1]
+        return v
+    return CapturedCall(tuple(cut(a) for a in call.args),
+                        {k: cut(v) for k, v in call.kwargs.items()})
+
+
+def jaxpr_hash(call: CapturedCall) -> str:
+    """Hash of the traced program text for one call."""
+    from repro.analysis.jaxpr_audit import trace_call
+    closed = trace_call(call, "simulate_ensemble")
+    return hashlib.sha1(str(closed.jaxpr).encode()).hexdigest()[:16]
+
+
+def run_recompile_audit(root: str, sweep=None,
+                        runner: Optional[Callable] = None,
+                        hash_rows: bool = True) -> List[Finding]:
+    """Audit one Sweep grid (default: the representative mixed smoke grid).
+    ``runner(sweep)`` executes it — tests inject doctored runners to seed
+    per-point-recompile hazards."""
+    from repro.core import vdes
+
+    sweep = sweep if sweep is not None else smoke_sweep()
+    runner = runner if runner is not None else (lambda sw: sw.run())
+    n_points = len(sweep.points())
+
+    size_before = _cache_size(vdes.simulate_ensemble)
+    with capture_calls("simulate_ensemble") as calls:
+        runner(sweep)
+    size_after = _cache_size(vdes.simulate_ensemble)
+
+    findings: List[Finding] = []
+    if not calls:
+        findings.append(Finding(
+            rule="recompile", file="", line=0,
+            message=(f"the {n_points}-point audit grid never reached "
+                     "simulate_ensemble — the batched sweep path is dead "
+                     "(fell back to the serial engine?)")))
+        return findings
+
+    if len(calls) != 1:
+        findings.append(Finding(
+            rule="recompile", file="", line=0,
+            message=(f"the {n_points}-point audit grid lowered to "
+                     f"{len(calls)} simulate_ensemble calls instead of 1 — "
+                     "per-point dispatch is back")))
+
+    keys = {}
+    for i, call in enumerate(calls):
+        keys.setdefault(cache_key(call), []).append(i)
+    if len(keys) > 1:
+        statics = sorted({repr(dict(k[0])) for k in keys})
+        findings.append(Finding(
+            rule="recompile", file="", line=0,
+            message=(f"{len(keys)} distinct compile-cache keys across the "
+                     f"audit grid's calls — an axis value became part of "
+                     f"the key (static argnames seen: {', '.join(statics)})")))
+
+    if hash_rows and len(calls) == 1:
+        rows = _batch_rows(calls[0])
+        hashes = {jaxpr_hash(_slice_row(calls[0], b)) for b in range(rows)}
+        if len(hashes) > 1:
+            findings.append(Finding(
+                rule="recompile", file="", line=0,
+                message=(f"re-tracing the {rows} batch rows yields "
+                         f"{len(hashes)} distinct jaxprs — an axis value "
+                         "is baked into the traced program instead of "
+                         "riding the batch tensors")))
+    elif len(calls) > 1:
+        hashes = {}
+        for i, call in enumerate(calls):
+            hashes.setdefault(jaxpr_hash(call), []).append(i)
+        if len(hashes) > 1:
+            findings.append(Finding(
+                rule="recompile", file="", line=0,
+                message=(f"the grid's {len(calls)} calls trace to "
+                         f"{len(hashes)} distinct jaxprs — each is a "
+                         "separate XLA compilation")))
+
+    if size_before is not None and size_after is not None and \
+            size_after - size_before > 1:
+        findings.append(Finding(
+            rule="recompile", file="", line=0,
+            message=(f"the jit cache grew by {size_after - size_before} "
+                     "entries over one audit grid (expected at most 1)")))
+    return findings
+
+
+def _cache_size(jitted) -> Optional[int]:
+    try:
+        return int(jitted._cache_size())
+    except Exception:
+        return None

@@ -226,7 +226,7 @@ def stack_probes(probes, fleets=None) -> dict:
     entries' CompiledFleets, None allowed) fills each header's ``n_models``
     so the fleet min/max reductions mask to the entry's own unpadded model
     rows."""
-    from repro.core.des import PROBE_FIELDS
+    from repro.core.des import PROBE_FIELDS, PROBE_N_MODELS
     live = [p for p in probes if p is not None]
     if not live:
         return {}
@@ -237,7 +237,7 @@ def stack_probes(probes, fleets=None) -> dict:
             rows.append(np.zeros(PROBE_FIELDS, np.float32))
             continue
         hdr = np.asarray(p.header, np.float32).copy()
-        hdr[3] = np.float32(f.n_models if f is not None else 0)
+        hdr[PROBE_N_MODELS] = np.float32(f.n_models if f is not None else 0)
         rows.append(hdr)
     return dict(probes=np.stack(rows),
                 n_probe_slots=max(p.n_ticks for p in live))

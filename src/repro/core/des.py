@@ -45,7 +45,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core import model as M
-from repro.core.metrics import fleet_performance_acc, fleet_staleness
+from repro.core.metrics import (FLEET_PERF0, fleet_performance_acc,
+                                fleet_staleness)
 
 POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF = 0, 1, 2
 POLICY_NAMES = ["fifo", "priority", "sjf"]
@@ -56,6 +57,10 @@ POLICY_NAMES = ["fifo", "priority", "sjf"]
 # [high watermark, low watermark, step, min_cap, max_cap, base].
 CTRL_HEADER = 4
 CTRL_FIELDS = 6
+# named header-field indices — every consumer (both engines, the compilers,
+# the batch stackers) must subscript through these, never a bare literal:
+# the analyzer's `layout-index` rule enforces it
+CTRL_INTERVAL, CTRL_COOLDOWN, CTRL_T_FIRST, CTRL_T_END = range(CTRL_HEADER)
 
 # THE f32 "never" sentinel, shared by every layer that must agree on it
 # bit-for-bit: vdes.INF derives from this, the numpy mirror uses it for the
@@ -71,7 +76,8 @@ def unpack_controller(ctrl):
     max_cap, base)`` — the last six are per-resource columns. Plain strided
     slicing, so numpy and JAX arrays both work: the ONE layout decoder for
     the parity-mirrored engines."""
-    return (ctrl[0], ctrl[1], ctrl[2], ctrl[3],
+    return (ctrl[CTRL_INTERVAL], ctrl[CTRL_COOLDOWN],
+            ctrl[CTRL_T_FIRST], ctrl[CTRL_T_END],
             ctrl[CTRL_HEADER + 0::CTRL_FIELDS],
             ctrl[CTRL_HEADER + 1::CTRL_FIELDS],
             ctrl[CTRL_HEADER + 2::CTRL_FIELDS],
@@ -98,9 +104,11 @@ def ctrl_tick_bound(ctrl) -> int:
     (``t_first > t_end``). The walk is memoized on the grid header (one
     controller tensor is typically reused across many replicas/runs)."""
     ctrl = np.asarray(ctrl, np.float32)
-    if float(ctrl[0]) <= 0.0:
+    if float(ctrl[CTRL_INTERVAL]) <= 0.0:
         return 0
-    return _tick_bound_walk(float(ctrl[0]), float(ctrl[2]), float(ctrl[3]))
+    return _tick_bound_walk(float(ctrl[CTRL_INTERVAL]),
+                            float(ctrl[CTRL_T_FIRST]),
+                            float(ctrl[CTRL_T_END]))
 
 
 @functools.lru_cache(maxsize=512)
@@ -130,6 +138,8 @@ def _tick_bound_walk(interval: float, t_first: float, t_end: float,
 # [interval_s, cooldown_s, t_first, t_end, drift_threshold, arrival_delay_s].
 # interval_s <= 0 disables the stage (same convention as the controller).
 TRIG_FIELDS = 6
+(TRIG_INTERVAL, TRIG_COOLDOWN, TRIG_T_FIRST, TRIG_T_END, TRIG_THRESHOLD,
+ TRIG_DELAY) = range(TRIG_FIELDS)
 
 # ProbeParams flat-tensor header (compiled by repro.obs.probes.compile_probe;
 # shared by both engines' probe stages):
@@ -137,6 +147,8 @@ TRIG_FIELDS = 6
 # (the batched padding row, same convention as controller/trigger); n_models
 # masks the fleet reductions to the entry's own (unpadded) model rows.
 PROBE_FIELDS = 4
+PROBE_INTERVAL, PROBE_T_FIRST, PROBE_T_END, PROBE_N_MODELS = \
+    range(PROBE_FIELDS)
 
 
 def probe_channel_count(nres: int) -> int:
@@ -146,6 +158,7 @@ def probe_channel_count(nres: int) -> int:
     minimum performance and maximum staleness (min/max on purpose: they are
     order-independent reductions, so the f32 buffers stay bit-identical
     across the numpy and vmapped-JAX reduction orders)."""
+    # integer channel-count arithmetic, no floats.  # parity: allow(engine-fma)
     return 4 * nres + 2
 
 # fleet-stage action kinds on the shared SimTrace action timeline
@@ -282,7 +295,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     f32 = np.float32
     if ctrl is not None:
         ctrl = np.asarray(ctrl, f32)
-        if float(ctrl[0]) <= 0.0:
+        if float(ctrl[CTRL_INTERVAL]) <= 0.0:
             ctrl = None
     if ctrl is not None:
         (c_interval, c_cooldown, c_first, c_end, c_high, c_low, c_step,
@@ -303,7 +316,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     # walked exactly as the controller's; the pool of latent retraining
     # pipelines occupies the trailing rows of the extended workload.
     fl = fleet
-    if fl is not None and float(np.asarray(fl.trig, f32)[0]) <= 0.0:
+    if fl is not None and \
+            float(np.asarray(fl.trig, f32)[TRIG_INTERVAL]) <= 0.0:
         fl = None
     if fl is not None:
         trig = np.asarray(fl.trig, f32)
@@ -317,7 +331,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         pool_base = int(fl.pool_base)
         P = pool_gain.shape[0]
         E_f = fl_obs.shape[0]
-        fl_perf0 = fleet_t[:, 0].copy()
+        fl_perf0 = fleet_t[:, FLEET_PERF0].copy()
         fl_dep = np.zeros(M_, f32)
         fl_acc = np.zeros(M_, f32)        # accumulated drift loss
         fl_dep_tick = np.full(M_, -1, np.int64)   # accrue from tick > this
@@ -334,11 +348,14 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
 
     # ---- probe (telemetry) stage state — float32 like the controller
     pr = probe
-    if pr is not None and float(np.asarray(pr.header, f32)[0]) <= 0.0:
+    if pr is not None and \
+            float(np.asarray(pr.header, f32)[PROBE_INTERVAL]) <= 0.0:
         pr = None
     if pr is not None:
-        p_interval, p_first, p_end = (
-            f32(x) for x in np.asarray(pr.header, f32)[:3])
+        hdr = np.asarray(pr.header, f32)
+        p_interval, p_first, p_end = (f32(hdr[PROBE_INTERVAL]),
+                                      f32(hdr[PROBE_T_FIRST]),
+                                      f32(hdr[PROBE_T_END]))
         E_p = int(np.asarray(pr.times).shape[0])
         K_p = probe_channel_count(nres)
         t_probe = p_first if p_first <= p_end else CTRL_INF
@@ -381,6 +398,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         k = _policy_key(policy, wl, svc_of(pid, tidx, int(att[pid])), pid)
         heapq.heappush(waiting[r], (k, wave, pid, tidx))
 
+    # mirror: vdes._admission_stage — one ranked admission round per
+    # resource; heap order matches the fused lexicographic sort keys
     def admit(t: float) -> None:
         for r in range(nres):
             while free[r] > 0 and waiting[r]:
@@ -410,9 +429,13 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             else np.inf
         t_pr = float(t_probe) if pr is not None and t_probe < CTRL_INF \
             else np.inf
+        # mirror: vdes._select_events — the global next-event minimum over
+        # task events, capacity changes, and the controller/fleet/probe grids
         t_star = min(t_heap, t_cap, t_ctrl, t_fl, t_pr)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
+        # mirror: vdes._completion_stage — finishes release slots, failed
+        # attempts re-queue after backoff, arrivals/successors enqueue
         wave_ev = []
         while ev and ev[0][0] == t_star:
             wave_ev.append(heapq.heappop(ev))
@@ -435,8 +458,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if cap_ptr < K and cap_times[cap_ptr] == t_star:
             free += cap_vals[cap_ptr] - cap_vals[cap_ptr - 1]
             cap_ptr += 1
-        # ---- control stage: closed-loop evaluation tick (f32 arithmetic,
-        # mirroring vdes._control_stage operation-for-operation)
+        # mirror: vdes._control_stage — closed-loop evaluation tick (f32
+        # arithmetic, operation-for-operation)
         if ctrl is not None and float(t_eval) == t_star:
             qlen = np.array([len(waiting[r]) for r in range(nres)], np.int64)
             cap_eff = cap_vals[cap_ptr - 1] + ctrl_tgt - base_i
@@ -460,8 +483,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             t_eval = t_nxt if (t_nxt <= c_end and t_nxt > t_eval) \
                 else CTRL_INF
         admit(t_star)
-        # ---- fleet stage: model lifecycle (f32 arithmetic, mirroring
-        # vdes._fleet_stage operation-for-operation). Runs AFTER admission:
+        # mirror: vdes._fleet_stage — model lifecycle (f32 arithmetic,
+        # operation-for-operation). Runs AFTER admission:
         # (a) retraining pipelines that completed this wave redeploy their
         # model (drift state resets); (b) if this wave is a drift-evaluation
         # tick, the [M] drift algebra is evaluated, performance/staleness
@@ -522,8 +545,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 t_fleet = t_nxt if (t_nxt <= f_end and t_nxt > t_fleet) \
                     else CTRL_INF
                 fl_tick += 1
-        # ---- probe stage: in-loop telemetry sampling (f32, mirroring
-        # vdes._probe_stage operation-for-operation). Runs LAST in the wave
+        # mirror: vdes._probe_stage — in-loop telemetry sampling (f32,
+        # operation-for-operation). Runs LAST in the wave
         # so it sees the settled post-admission/post-fleet state at t_star.
         # Physics-invisible: reads state, writes only the probe buffer.
         if pr is not None and t_probe < CTRL_INF and float(t_probe) == t_star:

@@ -15,6 +15,8 @@ from typing import Literal
 
 import numpy as np
 
+from repro.core.numerics import fma_free_msub, guarded_denominator
+
 # Table I (prune %, accuracy %, size MB, inference ms)
 PRUNE_LEVELS = np.array([0.0, 0.2, 0.4, 0.6, 0.8])
 TABLE1 = {
@@ -99,6 +101,8 @@ def fleet_performance(perf0, jump_acc, dt, fleet, xp=np):
     amp = fleet[..., FLEET_SEAS_AMP]
     period = fleet[..., FLEET_SEAS_PERIOD]
     season = amp * 0.5 * (1.0 - xp.cos(2.0 * np.pi * dt / period))
+    # f64 closed form, never engine-executed (see docstring): the bare
+    # multiply-add chain is fine here.  # parity: allow(engine-fma)
     return xp.clip(perf0 - grad * dt - jump_acc - season, 0.0, 1.0)
 
 
@@ -110,12 +114,20 @@ def fleet_performance_acc(perf0, drift_acc, dt, fleet, xp=np):
     op here is add/sub/clip on already-rounded f32 values — no
     multiply-accumulate pattern a backend could contract — so the numpy
     and XLA engines agree bit-for-bit. The seasonal term (the one runtime
-    product left) vanishes exactly when ``seasonal_amp == 0``, the
-    parity-tested configuration."""
+    product left) goes through :func:`fma_free_msub`, which rounds the
+    product before the subtraction on both backends (XLA would otherwise
+    contract ``a - b*c`` into an FMA); it vanishes exactly when
+    ``seasonal_amp == 0``, the parity-tested configuration (``cos`` itself
+    is still libm-vs-XLA territory). The seasonal period runs through
+    :func:`guarded_denominator`: batched all-zero padding rows would
+    otherwise divide by zero and mint NaNs the unbatched numpy mirror never
+    computes (their junk quotient is multiplied away by ``amp == 0``)."""
     amp = fleet[..., FLEET_SEAS_AMP]
-    period = fleet[..., FLEET_SEAS_PERIOD]
-    season = amp * 0.5 * (1.0 - xp.cos(2.0 * np.pi * dt / period))
-    return xp.clip(perf0 - drift_acc - season, 0.0, 1.0)
+    period = guarded_denominator(fleet[..., FLEET_SEAS_PERIOD], xp=xp)
+    season_arg = 1.0 - xp.cos(2.0 * np.pi * dt / period)
+    return xp.clip(
+        fma_free_msub(perf0 - drift_acc, amp * 0.5, season_arg, xp=xp),
+        0.0, 1.0)
 
 
 def fleet_staleness(perf0, perf, xp=np):
@@ -156,6 +168,8 @@ class DeployedModel:
 
     def performance(self, t: float) -> float:
         dt = max(t - self.deployed_at, 0.0)
+        # [0] picks the single result row, not a layout
+        # field.  # parity: allow(layout-index)
         return float(fleet_performance(
             np.float64(self.perf0), np.float64(self.last_jumps),
             np.float64(dt), self._row())[0])
@@ -170,5 +184,7 @@ class DeployedModel:
         """§III-A: potential ~ f(current performance p(M), newly labeled data
         since last retraining)."""
         p = self.performance(t)
+        # f64 scalar convenience score, never engine-executed — the bare
+        # multiply-add chain is fine here.  # parity: allow(engine-fma)
         return float(np.clip((1.0 - p) * 0.6 + self.staleness(t) * 0.3
                              + new_data_fraction * 0.1, 0.0, 1.0))

@@ -91,11 +91,14 @@ import numpy as np
 
 from repro.core import model as M
 from repro.core.des import (CTRL_FIELDS, CTRL_HEADER, CTRL_INF,
-                            FLEET_ACT_REDEPLOY, FLEET_ACT_TRIGGER,
-                            POLICY_FIFO, POLICY_PRIORITY, POLICY_SJF,
-                            TRIG_FIELDS, probe_channel_count,
+                            CTRL_INTERVAL, FLEET_ACT_REDEPLOY,
+                            FLEET_ACT_TRIGGER, POLICY_FIFO, POLICY_PRIORITY,
+                            POLICY_SJF, PROBE_INTERVAL, PROBE_N_MODELS,
+                            PROBE_T_END, PROBE_T_FIRST, TRIG_FIELDS,
+                            TRIG_INTERVAL, probe_channel_count,
                             unpack_controller)
-from repro.core.metrics import fleet_performance_acc, fleet_staleness
+from repro.core.metrics import (FLEET_PERF0, fleet_performance_acc,
+                                fleet_staleness)
 
 INF = jnp.float32(CTRL_INF)   # the ONE shared f32 "never" sentinel
 
@@ -287,8 +290,10 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         and n_probe_slots > 0
     if has_probe:
         probe_t = jnp.asarray(probe, jnp.float32)
-        p_interval, p_first, p_end = (probe_t[i] for i in range(3))
-        p_models = jnp.round(probe_t[3]).astype(jnp.int32)
+        p_interval = probe_t[PROBE_INTERVAL]
+        p_first = probe_t[PROBE_T_FIRST]
+        p_end = probe_t[PROBE_T_END]
+        p_models = jnp.round(probe_t[PROBE_N_MODELS]).astype(jnp.int32)
         p_enabled = p_interval > 0.0
         E_p = n_probe_slots
         K_p = probe_channel_count(nres)
@@ -334,7 +339,7 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                      jnp.float32)
         state["ctrl_n"] = jnp.int32(0)
     if has_fleet:
-        state["fl_perf0"] = fleet_t[:, 0]            # current post-deploy perf
+        state["fl_perf0"] = fleet_t[:, FLEET_PERF0]  # current post-deploy perf
         state["fl_dep"] = jnp.zeros((M_,), jnp.float32)   # deployed_at
         state["fl_acc"] = jnp.zeros((M_,), jnp.float32)   # drift-loss acc
         state["fl_dep_tick"] = jnp.full((M_,), -1, jnp.int32)
@@ -556,6 +561,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         p_done = ((s["phase"][rows] == _DONE) & (s["pool_model"] >= 0)
                   & ~s["redeployed"] & valid)
         mdl = jnp.clip(s["pool_model"], 0, max(M_ - 1, 0))
+        # f32 sum over pool slots: the numpy mirror accumulates redeploy
+        # gains in the identical slot order (parity-tested), so this
+        # order-sensitive reduction is safe.  # parity: allow(loop-reduce)
         gain_m = jax.ops.segment_sum(jnp.where(p_done, gain_t, 0.0), mdl,
                                      num_segments=M_)
         hit = jax.ops.segment_sum(p_done.astype(jnp.int32), mdl,
@@ -573,7 +581,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              jnp.full((P,), jnp.float32(FLEET_ACT_REDEPLOY)),
              s["pool_model"].astype(jnp.float32)], 1)
         s["fleet_act"] = s["fleet_act"].at[idx].set(vals, mode="drop")
-        s["fleet_n"] = s["fleet_n"] + jnp.sum(p_done.astype(jnp.int32))
+        # dtype pinned: jnp.sum would promote i32 to the platform int
+        # (i64 under enable_x64) and break the carry contract
+        s["fleet_n"] = s["fleet_n"] + jnp.sum(p_done, dtype=jnp.int32)
         # ---- drift-evaluation tick
         firing = f_enabled & (s["t_fleet"] == t_star)
         e = jnp.clip(s["f_tick"], 0, E_f - 1)
@@ -613,8 +623,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              jnp.full((M_,), jnp.float32(FLEET_ACT_TRIGGER)),
              mids.astype(jnp.float32)], 1)
         s["fleet_act"] = s["fleet_act"].at[aidx].set(avals, mode="drop")
-        s["fleet_n"] = s["fleet_n"] + jnp.sum(fire.astype(jnp.int32))
-        s["pool_next"] = s["pool_next"] + jnp.sum(fire.astype(jnp.int32))
+        # dtype pinned (see _fleet_stage completion above)
+        s["fleet_n"] = s["fleet_n"] + jnp.sum(fire, dtype=jnp.int32)
+        s["pool_next"] = s["pool_next"] + jnp.sum(fire, dtype=jnp.int32)
         s["fl_acc"] = jnp.where(firing, acc_new, s["fl_acc"])
         # advance the tick grid exactly as the controller's (f32 ulp guard)
         t_nxt = s["t_fleet"] + f_interval
@@ -745,7 +756,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
     att_start = att_finish = None
     ctrl_times = ctrl_caps = None
     fl = fleet
-    if fl is not None and float(np.asarray(fl.trig)[0]) <= 0.0:
+    if fl is not None and float(np.asarray(fl.trig)[TRIG_INTERVAL]) <= 0.0:
         fl = None
     fleet_kw = {}
     if fl is not None:
@@ -757,11 +768,12 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
             pool_gain=jnp.asarray(fl.pool_gain, jnp.float32),
             pool_base=jnp.int32(fl.pool_base))
     pr = probe
-    if pr is not None and float(np.asarray(pr.header)[0]) <= 0.0:
+    if pr is not None and \
+            float(np.asarray(pr.header)[PROBE_INTERVAL]) <= 0.0:
         pr = None
     if pr is not None:
         hdr = np.asarray(pr.header, np.float32).copy()
-        hdr[3] = np.float32(fl.n_models if fl is not None else 0)
+        hdr[PROBE_N_MODELS] = np.float32(fl.n_models if fl is not None else 0)
         fleet_kw.update(probe=jnp.asarray(hdr),
                         n_probe_slots=int(pr.n_ticks))
     if scenario is not None:
@@ -793,7 +805,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         if slots is not None:
             att_start = np.asarray(res["att_start"], np.float64)
             att_finish = np.asarray(res["att_finish"], np.float64)
-        if ctrl is not None and float(np.asarray(ctrl)[0]) > 0.0:
+        if ctrl is not None and \
+                float(np.asarray(ctrl)[CTRL_INTERVAL]) > 0.0:
             # enabled controller: realized timeline present (maybe empty),
             # exactly as the numpy engine reports it
             nres = int(scenario.cap_vals.shape[1])

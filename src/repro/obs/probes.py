@@ -45,7 +45,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import model as M
-from repro.core.des import PROBE_FIELDS, fleet_tick_grid, probe_channel_count
+from repro.core.des import (PROBE_FIELDS, PROBE_INTERVAL, PROBE_N_MODELS,
+                            PROBE_T_END, PROBE_T_FIRST, fleet_tick_grid,
+                            probe_channel_count)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,10 +92,10 @@ def compile_probe(spec: ProbeSpec, horizon_s: float,
             f"probe grid is empty: t_first={t_first} is past the horizon "
             f"{horizon_s}")
     header = np.zeros(PROBE_FIELDS, np.float32)
-    header[0] = spec.interval_s
-    header[1] = t_first
-    header[2] = horizon_s
-    header[3] = n_models
+    header[PROBE_INTERVAL] = spec.interval_s
+    header[PROBE_T_FIRST] = t_first
+    header[PROBE_T_END] = horizon_s
+    header[PROBE_N_MODELS] = n_models
     return CompiledProbe(header=header, times=times)
 
 

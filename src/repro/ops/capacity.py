@@ -31,7 +31,9 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.des import CTRL_FIELDS, CTRL_HEADER, CTRL_INF
+from repro.core.des import (CTRL_COOLDOWN, CTRL_FIELDS, CTRL_HEADER,
+                            CTRL_INF, CTRL_INTERVAL, CTRL_T_END,
+                            CTRL_T_FIRST)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,10 +332,10 @@ class ReactiveController:
         base = np.asarray(base_caps, np.float64)
         nres = base.shape[0]
         out = np.zeros(CTRL_HEADER + CTRL_FIELDS * nres, np.float32)
-        out[0] = self.interval_s
-        out[1] = self.cooldown_s
-        out[2] = self.interval_s          # first evaluation tick
-        out[3] = horizon_s                # last evaluation tick
+        out[CTRL_INTERVAL] = self.interval_s
+        out[CTRL_COOLDOWN] = self.cooldown_s
+        out[CTRL_T_FIRST] = self.interval_s   # first evaluation tick
+        out[CTRL_T_END] = horizon_s           # last evaluation tick
         which = set(range(nres)) if self.resources is None \
             else {int(r) for r in self.resources}
         for r in range(nres):

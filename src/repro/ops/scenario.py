@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core import model as M
+from repro.core import metrics as MET
 from repro.ops.accounting import SLOConfig
 from repro.ops.capacity import (CapacitySchedule, StaticCapacity,
                                 apply_capacity_deltas, static_schedule)
@@ -221,10 +222,14 @@ def compile_fleet(fleet_spec, trigger, workload: M.Workload,
     # compound Poisson — N ~ Poisson(rate * dt) jumps, each Exp(scale), so
     # the per-tick jump sum is Gamma(N, scale)
     widths = np.diff(np.concatenate([[0.0], ticks]))
-    lam = fleet[None, :, 2].astype(np.float64) * widths[:, None]
+    lam = (fleet[None, :, MET.FLEET_JUMP_RATE].astype(np.float64)
+           * widths[:, None])
     n_jumps = rng.poisson(lam)
-    drift_inc = (fleet[None, :, 1].astype(np.float64) * widths[:, None]
-                 + rng.gamma(n_jumps, fleet[None, :, 3].astype(np.float64)))
+    drift_inc = (fleet[None, :, MET.FLEET_GRAD_RATE].astype(np.float64)
+                 * widths[:, None]
+                 + rng.gamma(n_jumps,
+                             fleet[None, :, MET.FLEET_JUMP_SCALE]
+                             .astype(np.float64)))
 
     # injection budget: at most one fire per model per cooldown window (and
     # never more than one per tick)

@@ -1,0 +1,99 @@
+"""Recompile-count regression: a representative mixed Sweep grid (capacity
+x controller x trigger-policy x probe axes) must lower to exactly ONE
+``simulate_ensemble`` call and at most one XLA compilation, and the
+recompile audit must catch seeded per-point dispatch / static-axis
+promotion (the PR 2 bug class, acceptance hazard (c))."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.harness import (capture_calls, smoke_spec, smoke_sweep,
+                                    smoke_workload)
+from repro.analysis.recompile_audit import cache_key, run_recompile_audit
+from repro.core import vdes
+from repro.core.experiment import Sweep
+
+
+def test_mixed_sweep_compiles_exactly_once():
+    """The 16-point capacity+controller+trigger+probe grid: one
+    simulate_ensemble call, one new jit-cache entry. A unique workload
+    size keeps the cache cold for this test regardless of suite order."""
+    base = dataclasses.replace(smoke_spec(engine="jax"),
+                               workload=smoke_workload(n=43))
+    sweep = dataclasses.replace(smoke_sweep(), base=base)
+    assert len(sweep.points()) == 16
+
+    size_before = vdes.simulate_ensemble._cache_size()
+    with capture_calls("simulate_ensemble") as calls:
+        results = sweep.run()
+    size_after = vdes.simulate_ensemble._cache_size()
+
+    assert len(results) == 16
+    assert len(calls) == 1, "grid must lower to ONE simulate_ensemble call"
+    assert size_after - size_before == 1, \
+        "exactly one XLA compilation for the whole mixed grid"
+    # every axis value rides the batch tensors of that one call
+    assert calls[0].args[0].shape[0] == 16
+
+
+def test_audit_clean_on_production_sweep_path():
+    fs = run_recompile_audit(".", hash_rows=False)
+    assert fs == [], [f.render() for f in fs]
+
+
+def test_audit_catches_per_point_dispatch():
+    """Seeded hazard (c): running each grid point separately (what an axis
+    promoted to a static argument degenerates into) must be flagged."""
+    sweep = Sweep(smoke_spec(engine="jax"),
+                  {"controller": [None, _controller()]})
+
+    def per_point_runner(sw):
+        for p in sw.points():
+            Sweep(p, {}).run()
+
+    fs = run_recompile_audit(".", sweep=sweep, runner=per_point_runner,
+                             hash_rows=False)
+    rules = [f.rule for f in fs]
+    assert rules and set(rules) == {"recompile"}
+    msgs = " | ".join(f.message for f in fs)
+    assert "2 simulate_ensemble calls instead of 1" in msgs
+    # the controller axis splits the compile-cache key (scenario tensors
+    # present vs absent), which the key check pinpoints
+    assert "distinct compile-cache keys" in msgs
+
+
+def test_cache_key_separates_static_argnames():
+    """Two otherwise-identical calls that differ in a static argname map to
+    different compile-cache keys."""
+    from repro.analysis.harness import CapturedCall
+
+    arr = np.zeros((2, 3), np.float32)
+    a = CapturedCall((arr,), {"n_probe_slots": 3})
+    b = CapturedCall((arr,), {"n_probe_slots": 5})
+    c = CapturedCall((arr,), {"n_probe_slots": 3})
+    assert cache_key(a) != cache_key(b)
+    assert cache_key(a) == cache_key(c)
+
+
+def test_row_slices_hash_identically():
+    """Re-tracing each batch row of the production call yields one jaxpr:
+    no axis value is baked into the traced program."""
+    from repro.analysis.recompile_audit import (_batch_rows, _slice_row,
+                                                jaxpr_hash)
+
+    sweep = Sweep(smoke_spec(engine="jax"),
+                  {"trigger:drift_threshold": [0.04, 0.1, 0.3]})
+    with capture_calls("simulate_ensemble") as calls:
+        sweep.run()
+    assert len(calls) == 1
+    rows = _batch_rows(calls[0])
+    assert rows == 3
+    hashes = {jaxpr_hash(_slice_row(calls[0], b)) for b in range(rows)}
+    assert len(hashes) == 1
+
+
+def _controller():
+    from repro.ops.capacity import ReactiveController
+    return ReactiveController(high_watermark=0.5, step=0.25,
+                              interval_s=40.0)
