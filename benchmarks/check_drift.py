@@ -34,6 +34,7 @@ EXPECTED = (
     "BENCH_controller.json",
     "BENCH_feedback.json",
     "BENCH_obs.json",
+    "BENCH_kernels.json",
     # written by `make lint` (python -m repro.analysis), not by a bench
     "ANALYSIS.json",
 )

@@ -19,11 +19,14 @@ Two measurements, one report (``artifacts/BENCH_controller.json``):
      historical 3-chained-argsort wave loop — wave throughput and speedup.
   3. **Waves/s + the batched-vs-serial-numpy crossover** (ROADMAP open
      item 2): wave throughput of both engines on the closed-loop program,
-     measured batched walls at widths 1/2/4/8, a linear fit
-     ``wall(B) = a + b*B``, and the grid size at which ONE batched jit+vmap
-     call overtakes running the exact numpy engine once per point
-     (``batched_vs_numpy_crossover_points``; null if the batched per-row
-     cost never drops below a serial numpy run).
+     raw batched walls by width for the uncompacted ensemble AND the
+     windowed compaction driver (``repro.core.compaction``;
+     ``compaction_speedup_x`` is their ratio at the max width), then
+     ENGINE-level interleaved numpy-vs-jax-compact sweep walls, linear
+     fits ``wall(B) = a + b*B`` of both, and the grid size at which ONE
+     batched compacted call overtakes running the exact numpy engine once
+     per point (``batched_vs_numpy_crossover_points``; null if the
+     compacted per-point cost never drops below a serial numpy run).
 
 ``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon/replicas for CI
 (`make ci` runs this suite via ``benchmarks.run --smoke``).
@@ -148,12 +151,20 @@ def rows():
 
     # --- waves/s + the batched-vs-serial-numpy crossover (ROADMAP open
     # item 2): how many grid points must a sweep have before ONE batched
-    # jit+vmap call beats running the exact numpy engine per point? Serial
-    # numpy scales linearly at wall_np per point; the batched engine pays a
-    # near-constant dispatch plus a per-row cost (all rows advance every
-    # wave), so the crossover is where B*wall_np >= a + b*B from a linear
-    # fit of the measured batched walls.
-    from repro.core import batching
+    # call beats running the exact numpy engine once per point? Three
+    # rungs, all on the same closed-loop program:
+    #   (a) raw uncompacted ensemble walls by width (transparency: the
+    #       pre-compaction baseline, near-flat per-row cost b);
+    #   (b) raw compacted-driver walls by width + the CompactionLog
+    #       schedule — compaction_speedup_x is (a)/(b) at the max width;
+    #   (c) ENGINE-level interleaved numpy-vs-jax-compact sweeps (the
+    #       honest ROADMAP framing: the numpy side pays exactly what
+    #       `engine="numpy"` pays per point — scenario compile, trace,
+    #       summaries — and so does the compacted side). Both sides are
+    #       timed min-of-N with the loops interleaved so machine noise
+    #       lands on both equally; the crossover comes from linear fits
+    #       wall(B) = a + b*B of the ENGINE walls.
+    from repro.core import batching, compaction
 
     t0 = time.perf_counter()
     t_np2 = des.simulate(wl, base.platform, scenario=comp)
@@ -164,13 +175,17 @@ def rows():
     cols_b = batching.pad_workloads([wl] * max(widths), base.platform)
     n_max_b = cols_b.pop("n_max")
     batched_walls = {}
+    compacted_walls = {}
     jax_waves_per_s = 0.0
+    comp_log = None
     for B in widths:
         scen_kw = batching.stack_scenarios([comp] * B, n_max_b, horizon)
-        args = [jax.numpy.asarray(np.asarray(cols_b[k])[:B]) for k in
-                ("arrival", "n_tasks", "task_res", "service", "priority")]
-        caps_b = jax.numpy.asarray(np.tile(
-            base.platform.capacities[None], (B, 1)).astype(np.int32))
+        np_args = [np.asarray(cols_b[k])[:B] for k in
+                   ("arrival", "n_tasks", "task_res", "service", "priority")]
+        args = [jax.numpy.asarray(a) for a in np_args]
+        caps_np = np.tile(
+            base.platform.capacities[None], (B, 1)).astype(np.int32)
+        caps_b = jax.numpy.asarray(caps_np)
         out_b = vdes.simulate_ensemble(*args, caps_b, **scen_kw)  # compile
         jax.block_until_ready(out_b["start"])
         t0 = time.perf_counter()
@@ -180,14 +195,56 @@ def rows():
         if B == 1:
             jax_waves_per_s = int(out_b["waves"][0]) \
                 / max(batched_walls[B], 1e-12)
-    bs = np.array(widths, np.float64)
-    ws = np.array([batched_walls[B] for B in widths])
-    slope_b, inter_a = np.polyfit(bs, ws, 1)
-    # serial numpy beats the batch until B*wall_np exceeds a + b*B
-    if wall_np_point > slope_b:
-        crossover = int(np.ceil(inter_a / (wall_np_point - slope_b)))
+        ckw = dict(scen_kw)
+        ckw["admission_sort"] = "dense"
+        comp_log = compaction.CompactionLog()
+        compaction.simulate_ensemble_compacted(
+            *np_args, caps_np, log=comp_log, **ckw)          # warm shapes
+        best = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out_c = compaction.simulate_ensemble_compacted(
+                *np_args, caps_np, **ckw)
+            best = min(best, time.perf_counter() - t0)
+        compacted_walls[B] = best
+        assert int(np.sum(out_c["waves"])) == int(np.sum(
+            np.asarray(out_b["waves"]))), "compacted driver diverged"
+    b_max = widths[-1]
+    compaction_speedup = batched_walls[b_max] / max(compacted_walls[b_max],
+                                                    1e-12)
+    compact_waves_per_s = b_max * int(t_np2.waves) \
+        / max(compacted_walls[b_max], 1e-12)
+
+    # (c) engine level, interleaved min-of-N (width 16 included even in
+    # smoke: the per-point costs are at parity, so the speedup curve is
+    # all about amortizing the constant batch dispatch)
+    eng_widths = [1, 2, 4, 8, 16]
+    ctrl0 = _controller(*GAINS[0], interval)
+    sweeps = {}
+    for B in eng_widths:
+        eng_axes = {"controller": [ctrl0] * B}
+        sweeps[("numpy", B)] = Sweep(base.with_(engine="numpy"), eng_axes)
+        sweeps[("compact", B)] = Sweep(base.with_(engine="jax-compact"),
+                                       eng_axes)
+        sweeps[("compact", B)].run()                         # warm shapes
+    eng_walls = {k: np.inf for k in sweeps}
+    for _ in range(2):
+        for k, sw in sweeps.items():
+            t0 = time.perf_counter()
+            sw.run()
+            eng_walls[k] = min(eng_walls[k], time.perf_counter() - t0)
+    bs = np.array(eng_widths, np.float64)
+    np_pp, np_disp = np.polyfit(
+        bs, [eng_walls[("numpy", B)] for B in eng_widths], 1)
+    jc_pp, jc_disp = np.polyfit(
+        bs, [eng_walls[("compact", B)] for B in eng_widths], 1)
+    speedup_at_max = eng_walls[("numpy", eng_widths[-1])] \
+        / max(eng_walls[("compact", eng_widths[-1])], 1e-12)
+    # serial numpy beats the batch until B*np_pp exceeds jc_disp + jc_pp*B
+    if np_pp > jc_pp:
+        crossover = int(np.ceil((jc_disp - np_disp) / (np_pp - jc_pp)))
         crossover = max(crossover, 1)
-    else:                   # batched per-row cost >= a serial numpy run
+    else:                   # batched per-point cost >= a serial numpy run
         crossover = None
 
     # --- fused vs chained admission round (same program, same waves)
@@ -232,10 +289,22 @@ def rows():
         "numpy_wall_per_point_s": wall_np_point,
         "numpy_waves_per_s": numpy_waves_per_s,
         "jax_waves_per_s": jax_waves_per_s,
+        "compact_waves_per_s": compact_waves_per_s,
         "batched_wall_by_width_s": {str(k): v
                                     for k, v in batched_walls.items()},
-        "batched_dispatch_s": float(inter_a),
-        "batched_per_point_s": float(slope_b),
+        "compacted_wall_by_width_s": {str(k): v
+                                      for k, v in compacted_walls.items()},
+        "compaction_speedup_x": compaction_speedup,
+        "compaction_segments": comp_log.n_segments,
+        "compaction_shapes": [list(s) for s in comp_log.shapes],
+        "engine_numpy_wall_by_width_s": {
+            str(B): eng_walls[("numpy", B)] for B in eng_widths},
+        "engine_compact_wall_by_width_s": {
+            str(B): eng_walls[("compact", B)] for B in eng_widths},
+        "engine_numpy_per_point_s": float(np_pp),
+        "engine_compact_dispatch_s": float(jc_disp),
+        "engine_compact_per_point_s": float(jc_pp),
+        "batched_vs_numpy_speedup_at_max_width_x": float(speedup_at_max),
         "batched_vs_numpy_crossover_points": crossover,
         "fused_wall_s": wall_fused,
         "chained_wall_s": wall_chained,
@@ -264,8 +333,11 @@ def rows():
          f"{report['fused_speedup_x']:.2f}x_fused_speedup"),
         ("controller_numpy_waves", wall_np_point * 1e6,
          f"{numpy_waves_per_s:.0f}waves/s"),
-        ("controller_batched_crossover", batched_walls[widths[0]] * 1e6,
-         f"crossover_B={crossover}"),
+        ("controller_compaction", compacted_walls[b_max] * 1e6,
+         f"{compaction_speedup:.2f}x_vs_uncompacted_B{b_max}"),
+        ("controller_batched_crossover",
+         eng_walls[("compact", eng_widths[-1])] * 1e6,
+         f"crossover_B={crossover}_speedup{speedup_at_max:.2f}x"),
     ]
 
 

@@ -1,17 +1,49 @@
-"""Kernel microbenchmarks: interpret-mode parity timing is meaningless for
-perf, so we report the jnp-reference wall time (the XLA path the dry-run
-uses) plus analytic kernel arithmetic intensities for the §Roofline story."""
+"""Kernel microbenchmarks + the kernel/compaction parity artifact.
+
+Two halves, one module:
+
+  1. **Reference-kernel rows** (full mode only): interpret-mode parity
+     timing is meaningless for perf, so we report the jnp-reference wall
+     time (the XLA path the dry-run uses) plus analytic kernel arithmetic
+     intensities for the §Roofline story.
+  2. **``artifacts/BENCH_kernels.json``** (always, and the whole smoke
+     run): the wave-loop fast-path parity gate —
+     ``pallas_vs_lax_admission_drift`` (the fused Pallas admission kernel
+     vs the ``lax.sort`` ranking vs the dense pairwise mask, random rounds
+     with heavy ties; integer mask compare, must be exactly 0.0),
+     ``compaction_vs_uncompacted_drift`` (the windowed compaction driver
+     vs the plain batched ensemble over every result tensor, exactly
+     0.0), and compaction on/off walls + waves/s at three ensemble
+     widths. ``benchmarks.check_drift`` fails ``make ci`` if either drift
+     key is nonzero or the artifact is missing.
+
+  PYTHONPATH=src python -m benchmarks.run kernels
+  PYTHONPATH=src python benchmarks/kernels_bench.py --smoke
+"""
 from __future__ import annotations
+
+import json
+import os
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timeit_us
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+from benchmarks.common import ART, timeit_us
+from repro.core import batching, compaction, vdes
+from repro.core import model as M
 from repro.kernels import ref
+from repro.kernels.queue_scan import fused_admission
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_kernels.json"))
 
 
-def rows():
+def _ref_kernel_rows():
     out = []
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 5)
@@ -57,9 +89,167 @@ def rows():
     return out
 
 
+# ------------------------------------------- admission/compaction parity
+
+def _admission_drift(n_rounds: int = 24) -> float:
+    """Max |pallas - lax| over the admitted masks of random admission
+    rounds (heavy ties in every key, sentinel rows included). The three
+    production paths — the Pallas kernel (interpreted off-TPU), the fused
+    ``lax.sort`` seat test, and the dense pairwise mask — must agree
+    bit-for-bit; the compare is integer, so any disagreement shows up as
+    exactly 1.0, never float noise."""
+    drift = 0.0
+    g = np.random.default_rng(20260807)
+    for i in range(n_rounds):
+        n = int(g.integers(1, 300))
+        nres = int(g.integers(1, 4))
+        res_q = g.integers(0, nres + 1, n).astype(np.int32)
+        pkey = g.integers(0, 3, n).astype(np.float32)
+        wave = g.integers(0, 4, n).astype(np.int32)
+        free = g.integers(0, max(2, n // 2), nres).astype(np.int32)
+        a_pl = np.asarray(fused_admission(res_q, pkey, wave, free))
+        a_dn = np.asarray(vdes.admission_mask_dense(res_q, pkey, wave, free))
+        r_s, o = (np.asarray(a) for a in
+                  vdes.admission_order(res_q, pkey, wave))
+        pos = np.arange(n)
+        seg = np.maximum.accumulate(
+            np.where(np.r_[True, r_s[1:] != r_s[:-1]], pos, -1))
+        a_lx = np.zeros(n, bool)
+        a_lx[o] = (pos - seg) < np.r_[free, 0][r_s]
+        drift = max(drift,
+                    float(np.max(np.abs(a_pl.astype(int) - a_lx.astype(int)),
+                                 initial=0.0)),
+                    float(np.max(np.abs(a_dn.astype(int) - a_lx.astype(int)),
+                                 initial=0.0)))
+    return drift
+
+
+def _workload(g, n, max_tasks=4, horizon=500.0):
+    """Random integer-time workload (same recipe as the engine twin tests:
+    integer times are exactly representable in f32, so the drift compare
+    is parity, not float noise)."""
+    n_tasks = g.integers(1, max_tasks + 1, n)
+    task_type = np.where(np.arange(max_tasks)[None, :] < n_tasks[:, None],
+                         g.integers(0, 2, (n, max_tasks)), -1)
+    return M.Workload(
+        arrival=np.floor(np.sort(g.uniform(0, horizon, n))),
+        n_tasks=n_tasks.astype(np.int32),
+        task_type=task_type.astype(np.int32),
+        task_res=(g.integers(0, 2, (n, max_tasks))
+                  * (task_type >= 0)).astype(np.int32),
+        exec_time=np.ceil(g.exponential(20.0, (n, max_tasks)))
+        * (task_type >= 0),
+        read_bytes=np.zeros((n, max_tasks)),
+        write_bytes=np.zeros((n, max_tasks)),
+        framework=g.integers(0, 5, n).astype(np.int32),
+        priority=g.uniform(0, 1, n).astype(np.float32),
+        model_perf=np.zeros(n, np.float32),
+        model_size=np.zeros(n, np.float32),
+        model_clever=np.zeros(n, np.float32),
+    )
+
+
+def _ensemble(widths):
+    """A congested little ensemble (tight caps -> long queues) with
+    replica-distinct integer workloads, padded to the max width."""
+    g = np.random.default_rng(7)
+    B = max(widths)
+    plat = M.PlatformConfig(resources=(M.ResourceConfig("a", 3),
+                                       M.ResourceConfig("b", 2)))
+    # enough rows/waves that the working set actually shrinks over the
+    # run — at toy sizes the driver's boundary overhead wins instead
+    wls = [_workload(g, 140 - 4 * i, horizon=1500.0) for i in range(B)]
+    cols = batching.pad_workloads(wls, plat)
+    cols.pop("n_max")
+    caps = np.tile(np.asarray(plat.capacities, np.int32)[None], (B, 1))
+    return cols, caps
+
+
+def _compaction_section(widths):
+    cols, caps = _ensemble(widths)
+    walls_on, walls_off, waves_ps = {}, {}, {}
+    drift = 0.0
+    segs = 0
+    for B in widths:
+        args_np = [np.asarray(cols[k])[:B] for k in
+                   ("arrival", "n_tasks", "task_res", "service", "priority")]
+        args = [jnp.asarray(a) for a in args_np]
+        caps_b = jnp.asarray(caps[:B])
+        out_off = vdes.simulate_ensemble(*args, caps_b,
+                                         admission_sort="dense")  # compile
+        jax.block_until_ready(out_off["start"])
+        t0 = time.perf_counter()
+        out_off = vdes.simulate_ensemble(*args, caps_b,
+                                         admission_sort="dense")
+        jax.block_until_ready(out_off["start"])
+        walls_off[B] = time.perf_counter() - t0
+
+        log = compaction.CompactionLog()
+        out_on = compaction.simulate_ensemble_compacted(
+            *args_np, caps[:B], admission_sort="dense", log=log)  # warm
+        best = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out_on = compaction.simulate_ensemble_compacted(
+                *args_np, caps[:B], admission_sort="dense")
+            best = min(best, time.perf_counter() - t0)
+        walls_on[B] = best
+        segs = log.n_segments
+        waves_ps[B] = float(np.sum(out_on["waves"])) / max(best, 1e-12)
+        for k, v in out_on.items():
+            drift = max(drift, float(np.max(np.abs(
+                np.nan_to_num(np.asarray(v, np.float64))
+                - np.nan_to_num(np.asarray(out_off[k], np.float64))),
+                initial=0.0)))
+    return walls_on, walls_off, waves_ps, drift, segs
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    widths = (2, 4, 8)
+    adm_drift = _admission_drift()
+    walls_on, walls_off, waves_ps, comp_drift, segs = \
+        _compaction_section(widths)
+    b_max = widths[-1]
+    speedup = walls_off[b_max] / max(walls_on[b_max], 1e-12)
+
+    report = {
+        "pallas_vs_lax_admission_drift": adm_drift,
+        "compaction_vs_uncompacted_drift": comp_drift,
+        "compaction_wall_by_width_s": {str(k): v
+                                       for k, v in walls_on.items()},
+        "uncompacted_wall_by_width_s": {str(k): v
+                                        for k, v in walls_off.items()},
+        "compaction_waves_per_s_by_width": {str(k): v
+                                            for k, v in waves_ps.items()},
+        "compaction_speedup_x": speedup,
+        "compaction_segments": segs,
+        "widths": list(widths),
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    out = [
+        ("kernel_pallas_admission_drift", adm_drift * 1e6, f"{adm_drift}"),
+        ("kernel_compaction_drift", comp_drift * 1e6, f"{comp_drift}"),
+        ("kernel_compaction_wall", walls_on[b_max] * 1e6,
+         f"{speedup:.2f}x_vs_uncompacted_B{b_max}"),
+        ("kernel_compaction_waves", walls_off[b_max] * 1e6,
+         f"{waves_ps[b_max]:.0f}waves/s"),
+    ]
+    if not smoke:
+        out = _ref_kernel_rows() + out
+    return out
+
+
 def main():
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     for r in rows():
         print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
 
 
 if __name__ == "__main__":

@@ -28,8 +28,12 @@ SUITES = [
     ("obs", "benchmarks.obs_bench"),
 ]
 
-# fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE
-SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback", "obs")
+# fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE ("kernels"
+# rides along for artifacts/BENCH_kernels.json — in smoke mode it skips
+# the heavy reference-kernel rows and runs only the admission/compaction
+# parity section)
+SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback", "obs",
+                "kernels")
 
 
 def main() -> None:

@@ -52,6 +52,10 @@ RULES: Dict[str, str] = {
                       "use repro.core.numerics.guarded_denominator"),
     "unguarded-log": ("log/rsqrt inside the wave loop whose operand is not "
                       "clamped away from zero"),
+    "pallas-opaque": ("a pallas_call whose kernel jaxpr the auditor could "
+                      "not locate in the eqn params: the kernel body went "
+                      "unaudited — fix the walker (or baseline with a "
+                      "review note) rather than silently skipping it"),
     # --- recompile pass (repro.analysis.recompile_audit) ---
     "recompile": ("a Sweep axis reached simulate_ensemble as a distinct "
                   "compile-cache key: per-point recompiles are back (the "

@@ -29,7 +29,7 @@ from repro.core.runtime import FleetSpec, TriggerSpec
 
 #: static (hashable, compile-key) argnames of both vdes entry points
 STATIC_ARGNAMES = ("policy", "n_attempt_slots", "admission_sort",
-                   "n_ctrl_slots", "n_probe_slots")
+                   "n_ctrl_slots", "n_probe_slots", "return_state")
 
 
 @dataclasses.dataclass

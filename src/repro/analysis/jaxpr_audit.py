@@ -212,6 +212,15 @@ class _JaxprAuditor:
             name = eqn.primitive.name
             if name == "while":
                 self.check_carry(eqn)
+            if name == "pallas_call" and \
+                    not _subjaxprs(list(eqn.params.values())):
+                # the generic recursion below audits kernel bodies exposed
+                # via the eqn params (the `jaxpr` param on this JAX
+                # version); if a JAX upgrade hides it, fail loudly instead
+                # of silently skipping the kernel
+                self.emit("pallas-opaque", eqn,
+                          "pallas_call kernel body not found in eqn params "
+                          "— the kernel went unaudited")
             if name == "convert_element_type" and \
                     str(eqn.params.get("new_dtype")) == "float64":
                 self.emit("f64-const", eqn,
@@ -339,4 +348,15 @@ def run_jaxpr_audit(root: str) -> List[Finding]:
         closed = trace_call(calls[0], "simulate_ensemble")
         findings += audit_closed_jaxpr(closed, root,
                                        "vdes.simulate_ensemble")
+        # the Pallas admission fast path is opt-in (admission_sort=
+        # "pallas"), so the default traces never contain its kernel:
+        # re-trace the same production call with the kernel selected so
+        # its body is audited (interpret mode keeps the pallas_call eqn
+        # and its kernel jaxpr in the trace)
+        call = calls[0]
+        call_p = CapturedCall(call.args,
+                              {**call.kwargs, "admission_sort": "pallas"})
+        closed_p = trace_call(call_p, "simulate_ensemble")
+        findings += audit_closed_jaxpr(closed_p, root,
+                                       "vdes.simulate_ensemble[pallas]")
     return findings

@@ -157,9 +157,12 @@ def probe_channel_count(nres: int) -> int:
     busy slots, effective capacity, controller delta — then the fleet's
     minimum performance and maximum staleness (min/max on purpose: they are
     order-independent reductions, so the f32 buffers stay bit-identical
-    across the numpy and vmapped-JAX reduction orders)."""
+    across the numpy and vmapped-JAX reduction orders), then the total
+    live-pipeline count (queued + running — the live-width timeline the
+    compaction driver's wave-rate changes are explained by; an integer,
+    exact in f32)."""
     # integer channel-count arithmetic, no floats.  # parity: allow(engine-fma)
-    return 4 * nres + 2
+    return 4 * nres + 3
 
 # fleet-stage action kinds on the shared SimTrace action timeline
 FLEET_ACT_TRIGGER, FLEET_ACT_REDEPLOY = 0, 1
@@ -569,6 +572,11 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                                                     xp=np).astype(f32).max()
             else:
                 row[4 * nres] = row[4 * nres + 1] = np.nan
+            # live pipelines = queued (waiting heaps) + running (each
+            # running pipeline holds exactly one kind-0 finish event) —
+            # integer, exact in f32, matches vdes's phase-mask count
+            row[4 * nres + 2] = (sum(len(waiting[r]) for r in range(nres))
+                                 + sum(1 for e_ in ev if e_[1] == 0))
             probe_vals[e] = row
             t_nxt = f32(t_probe + p_interval)
             t_probe = t_nxt if (t_nxt <= p_end and t_nxt > t_probe) \

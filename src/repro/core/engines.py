@@ -1,7 +1,7 @@
 """The unified Engine protocol: ``run(spec, params) -> ExperimentResult``.
 
 Callers never branch on ``spec.engine`` — they ask the registry for an
-engine and call it. Two implementations ship:
+engine and call it. Three implementations ship:
 
   - :class:`NumpyEngine` — the exact (f64, heap-based) reference engine.
     Replicas and sweep grids run as serial loops: the fallback for precise
@@ -12,6 +12,11 @@ engine and call it. Two implementations ship:
     (its capacities, its admission policy, its compiled operational
     scenario) becomes a row of the batch, so a 24-point capacity x load x
     scenario grid costs one XLA compile and one SPMD execution.
+  - :class:`JaxCompactEngine` (``"jax-compact"``) — the batched engine with
+    :mod:`repro.core.compaction`: the wave loop runs in segments, finished
+    replicas and DONE pipelines drop out of the working set between
+    segments (power-of-two buckets), so wave cost tracks the *live* width.
+    Bit-identical results, different wall clock — the fast CPU path.
 
 Both produce identical summaries on integer-time workloads (parity-tested);
 results are :class:`repro.core.experiment.ExperimentResult` either way.
@@ -259,6 +264,13 @@ class JaxEngine:
 
     name = "jax"
 
+    def _ensemble(self, *args, **kwargs):
+        """The one batched simulate call (overridden by
+        :class:`JaxCompactEngine` to substitute the segmented compaction
+        driver). Everything above this seam — padding, stacking, result
+        slicing — is shared between the two engines."""
+        return vdes.simulate_ensemble(*args, **kwargs)
+
     def run(self, spec, params=None):
         if spec.n_replicas <= 1:
             t0 = time.perf_counter()
@@ -351,7 +363,7 @@ class JaxEngine:
         probe_kw = batching.stack_probes([p for _, _, _, _, p in entries],
                                          [f for _, _, _, f, _ in entries])
 
-        out = vdes.simulate_ensemble(
+        out = self._ensemble(
             *[jax.numpy.asarray(cols[k]) for k in
               ("arrival", "n_tasks", "task_res", "service", "priority")],
             jax.numpy.asarray(caps), int(pol[0]),
@@ -394,6 +406,54 @@ class JaxEngine:
         return results
 
 
+class JaxCompactEngine(JaxEngine):
+    """The batched engine with active-set compaction
+    (:mod:`repro.core.compaction`): the wave loop runs in windowed
+    segments, finished replicas drop off the batch axis, DONE pipelines
+    are gathered out of the working set, and not-yet-arrived pipelines
+    are deferred past a per-segment time guard (power-of-two buckets) —
+    so the dominant O(N^2) admission term tracks the *active* width, not
+    the allocated one. Results are bit-identical to :class:`JaxEngine`
+    (twin-tested); only the wall clock differs. Uses the sort-free
+    ``"dense"`` admission ranking — the fast CPU path the compaction is
+    sized for."""
+
+    name = "jax-compact"
+
+    def __init__(self, segment_waves: int = 256, drain_waves: int = 256,
+                 min_rows: int = 8, lookahead: int = 24,
+                 admission_sort: str = "dense"):
+        self.segment_waves = segment_waves
+        self.drain_waves = drain_waves
+        self.min_rows = min_rows
+        self.lookahead = lookahead
+        self.admission_sort = admission_sort
+        self.last_log = None     # CompactionLog of the most recent sweep
+
+    def _ensemble(self, *args, **kwargs):
+        from repro.core.compaction import (CompactionLog,
+                                           simulate_ensemble_compacted)
+        kwargs.setdefault("admission_sort", self.admission_sort)
+        self.last_log = CompactionLog()
+        return simulate_ensemble_compacted(
+            *args, segment_waves=self.segment_waves,
+            drain_waves=self.drain_waves, min_rows=self.min_rows,
+            lookahead=self.lookahead, log=self.last_log, **kwargs)
+
+    def run(self, spec, params=None):
+        # single-replica runs go through the batched path too (B = 1):
+        # compaction needs the segmented ensemble driver
+        return self.run_sweep([spec], params)[0]
+
+    def run_sweep(self, specs: Sequence, params=None) -> List:
+        results = super().run_sweep(specs, params)
+        if self.last_log is not None:
+            for res in results:
+                res.summary["n_compactions"] = self.last_log.n_compactions
+                res.summary["compaction_segments"] = self.last_log.n_segments
+        return results
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -415,3 +475,4 @@ def get_engine(name: str) -> Engine:
 
 register_engine(NumpyEngine())
 register_engine(JaxEngine())
+register_engine(JaxCompactEngine())

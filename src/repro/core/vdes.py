@@ -149,6 +149,44 @@ def _cummax(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.associative_scan(jnp.maximum, x)
 
 
+def _onehot_cols(tcl: jnp.ndarray, T: int) -> jnp.ndarray:
+    """``[N, T]`` one-hot of each pipeline's (clipped) current task column.
+
+    The wave loop's ``[N, T]`` record updates and lookups all route through
+    this mask instead of vector-index gather/scatter: on CPU a vmapped
+    ``lax.scatter`` lowers to a serial per-row loop (~14 us/wave *each* at
+    N=134) while the equivalent dense masked ``where`` fuses with its
+    neighbours (<1 us/wave) — the difference between the batched engine
+    losing and beating serial numpy. Values are bit-identical: exactly one
+    column is hot per row."""
+    return tcl[:, None] == jnp.arange(T, dtype=jnp.int32)[None, :]
+
+
+def _take_cols(x: jnp.ndarray, oh: jnp.ndarray, fill) -> jnp.ndarray:
+    """``x[i, tcl[i]]`` as a gather-free dense reduction: mask everything
+    but the hot column to ``fill`` (strictly below any real value) and
+    ``max`` over columns. Exactly one element survives per row, so the
+    result is bit-identical to the gather and the reduction is
+    order-independent (auditor-clean, unlike a float sum)."""
+    return jnp.max(jnp.where(oh, x, fill), axis=1)
+
+
+def _onehot_rows(buf: jnp.ndarray, idx: jnp.ndarray,
+                 vals: jnp.ndarray) -> jnp.ndarray:
+    """``buf[idx[p]] = vals[p]`` as a dense one-hot write (the scatter-free
+    twin of ``.at[idx].set(vals, mode="drop")``: a traced-index scatter
+    serializes per replica under vmap on CPU). Rows with
+    ``idx == buf.shape[0]`` drop. Requirements, both guaranteed at the call
+    sites: live indices are unique (each target row has exactly one
+    writer, so the masked max selects *the* value bit-exactly) and values
+    are nonnegative (strictly above the ``-INF`` fill)."""
+    K = buf.shape[0]
+    m = idx[:, None] == jnp.arange(K, dtype=jnp.int32)[None, :]   # [P, K]
+    hit = jnp.any(m, axis=0)
+    upd = jnp.max(jnp.where(m[:, :, None], vals[:, None, :], -INF), axis=0)
+    return jnp.where(hit[:, None], upd, buf)
+
+
 def admission_order(res_q: jnp.ndarray, pkey: jnp.ndarray,
                     enq_wave: jnp.ndarray) -> tuple:
     """Fused admission ranking: ONE stable lexicographic ``lax.sort`` over
@@ -173,9 +211,60 @@ def admission_order_chained(res_q: jnp.ndarray, pkey: jnp.ndarray,
     return res_q[o], o
 
 
+def admission_mask_dense(res_q: jnp.ndarray, pkey: jnp.ndarray,
+                         enq_wave: jnp.ndarray,
+                         free: jnp.ndarray, *,
+                         skip_pkey: bool = False) -> jnp.ndarray:
+    """Sort-free admission decision: the ``[N]`` bool admitted mask, directly.
+
+    A job's *seat* under the stable lexicographic ranking equals the count
+    of same-resource jobs with strictly lex-smaller ``(pkey, enq_wave, id)``
+    keys — full keys are unique because the pipeline id breaks every tie,
+    so "stable sort position within the resource segment" and "number of
+    lex-smaller keys in the segment" are the same integer, and
+
+        admitted_i  =  seat_i < free[res_i]
+
+    is bit-identical to the sorted seat test in :func:`admission_order`.
+    The pairwise count is O(N^2) elementwise work, but it contains no sort
+    and no scatter, so XLA CPU fuses the whole admission round into one
+    pass (~20 us at N=134 vs ~40 us for the in-loop ``lax.sort`` *plus* the
+    unsort scatter) — and the N^2 term collapses as compaction shrinks N.
+    Comparisons are exact (int32 and f32 equality, no arithmetic), so the
+    mask is a pure function of the same keys the sort consumes.
+
+    ``skip_pkey`` (static) drops the two f32 pkey comparisons from the
+    pairwise matrix. It is only valid when every pkey is identical (FIFO
+    with a static policy: pkey == 0 everywhere), where ``pj < pi`` is
+    identically False and ``pj == pi`` identically True — the mask is
+    bit-identical, but the N^2 term sheds ~1/3 of its elementwise ops,
+    which at N ~ 134 is the single largest cost of the whole wave."""
+    n = res_q.shape[0]
+    nres = free.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    # key_j <lex key_i over (pkey, enq_wave, id); axes are [i, j].
+    # The integer (enq_wave, id) lex compare folds into one add + one
+    # compare:  wj < wi + [idj < idi]  <=>  (wj < wi) | (wj == wi & idj <
+    # idi)  — exact for int32 (enq_wave is a wave counter, far from
+    # overflow), and the id matrix is loop-invariant so XLA hoists it.
+    wj, wi = enq_wave[None, :], enq_wave[:, None]
+    lt = wj < wi + (ids[None, :] < ids[:, None]).astype(jnp.int32)
+    if not skip_pkey:
+        pj, pi = pkey[None, :], pkey[:, None]
+        lt = (pj < pi) | ((pj == pi) & lt)
+    seat = jnp.sum((res_q[None, :] == res_q[:, None]) & lt, axis=1,
+                   dtype=jnp.int32)
+    # free[res] via a dense select over the (tiny, static) resource count —
+    # sentinel rows (res_q == nres, i.e. not queued) keep 0 and never admit
+    free_q = jnp.zeros((n,), jnp.int32)
+    for r in range(nres):
+        free_q = jnp.where(res_q == r, free[r], free_q)
+    return (res_q < nres) & (seat < free_q)
+
+
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots", "n_probe_slots"))
+                          "n_ctrl_slots", "n_probe_slots", "return_state"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
@@ -189,7 +278,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              n_ctrl_slots: Optional[int] = None,
              fleet=None, trig=None, obs_noise=None, drift_inc=None,
              pool_gain=None, pool_base=None, n_pool_eff=None,
-             probe=None, n_probe_slots: Optional[int] = None):
+             probe=None, n_probe_slots: Optional[int] = None,
+             resume=None, wave_budget=None, time_budget=None,
+             return_state: bool = False):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
     NaN where a task does not exist or never ran) and the wave count.
 
@@ -248,11 +339,28 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     buffer, returned as ``probe_vals`` with the tick count ``probe_n``. The
     numpy engine mirrors the sampling f32-op-for-op, so probe buffers are
     parity-gated like task timestamps. The stage is physics-invisible.
+
+    **Segment-restart hooks** (for the active-replica compaction driver,
+    :mod:`repro.core.compaction`): ``resume`` is a prior carry pytree (the
+    ``state`` returned by a ``return_state=True`` call, possibly permuted/
+    compacted by the driver) adopted verbatim in place of the freshly built
+    initial state; ``wave_budget`` is a *traced* i32 scalar capping how many
+    waves this call may run (the loop also stops early when naturally
+    finished); ``time_budget`` is a *traced* f32 time guard — the loop stops
+    *before* processing any wave whose next-event time exceeds it, which
+    lets the compaction driver defer not-yet-arrived rows (a row with
+    ``phase == NOT_ARRIVED`` and ``t_next > guard`` is admission-inert and
+    can never be the event minimum of a wave at or before the guard, so its
+    absence is unobservable); ``return_state=True`` (static) additionally returns the raw
+    final carry as ``state``, whether the loop would continue as
+    ``running``, and the count of still-live non-padding pipelines as
+    ``n_keep``. Stopping at a wave boundary and resuming from the carry is
+    bit-exact: the carry *is* the loop's complete state.
     """
     n, T = vwl.task_res.shape
     if (cap_times is None) != (cap_vals is None):
         raise ValueError("cap_times and cap_vals must be given together")
-    if admission_sort not in ("fused", "chained"):
+    if admission_sort not in ("fused", "chained", "dense", "pallas"):
         raise ValueError(f"unknown admission_sort {admission_sort!r}")
     rank = (admission_order if admission_sort == "fused"
             else admission_order_chained)
@@ -362,6 +470,12 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         state["p_tick"] = jnp.int32(0)
         state["probe_vals"] = jnp.full((E_p, K_p), jnp.nan, jnp.float32)
 
+    if resume is not None:
+        # segment restart: adopt the prior carry verbatim (the compaction
+        # driver only permutes/pads rows between segments — same key set,
+        # same dtypes, so the while-carry contract is unchanged)
+        state = {k: resume[k] for k in state}
+
     def next_cap_time(cap_idx):
         return jnp.where(cap_idx < K, cap_times[jnp.clip(cap_idx, 0, K - 1)],
                          INF)
@@ -392,13 +506,20 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         arriving = (phase == _NOT_ARRIVED) & (t_next == t_star)
 
         tcl0 = jnp.clip(task_idx, 0, T - 1)
-        res_now = vwl.task_res[ids, tcl0]
-        freed = jax.ops.segment_sum(finishing.astype(jnp.int32), res_now,
-                                    num_segments=nres)
+        oh0 = _onehot_cols(tcl0, T)
+        res_now = _take_cols(vwl.task_res, oh0, -1)
+        # per-resource count as a dense one-hot i32 sum: a vmapped
+        # segment_sum lowers to a serial per-replica scatter-add on CPU;
+        # the bool-mask sum vectorizes across the batch (and integer sums
+        # are order-independent — exact under any reduction order)
+        freed = jnp.sum(finishing[:, None]
+                        & (res_now[:, None]
+                           == jnp.arange(nres, dtype=jnp.int32)[None, :]),
+                        axis=0, dtype=jnp.int32)
         s["free"] = s["free"] + freed
 
         att = s["attempt"]
-        retrying = finishing & (att + 1 < att_req[ids, tcl0])
+        retrying = finishing & (att + 1 < _take_cols(att_req, oh0, 0))
         succeeding = finishing & ~retrying
         delay = jnp.minimum(bo[0] * bo[1] ** att.astype(jnp.float32), bo[2])
 
@@ -417,8 +538,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         s["task_idx"], s["attempt"] = task_idx, att
 
         tcl = jnp.clip(task_idx, 0, T - 1)
-        s["ready"] = s["ready"].at[ids, tcl].set(
-            jnp.where(to_queue, t_star, s["ready"][ids, tcl]))
+        s["ready"] = jnp.where(_onehot_cols(tcl, T) & to_queue[:, None],
+                               t_star, s["ready"])
         return s
 
     def _control_stage(s, t_star, t_cap):
@@ -436,9 +557,14 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             firing = c_enabled & (s["t_eval"] == t_star)
             queued = s["phase"] == _QUEUED
             tcl = jnp.clip(s["task_idx"], 0, T - 1)
-            res_q = jnp.where(queued, vwl.task_res[ids, tcl], nres)
-            qlen = jax.ops.segment_sum(queued.astype(jnp.int32), res_q,
-                                       num_segments=nres + 1)[:nres]
+            res_q = jnp.where(
+                queued, _take_cols(vwl.task_res, _onehot_cols(tcl, T), -1),
+                nres)
+            # dense one-hot count (see _completion_stage): the sentinel
+            # res_q == nres never matches a real resource column
+            qlen = jnp.sum(
+                res_q[:, None] == jnp.arange(nres, dtype=jnp.int32)[None, :],
+                axis=0, dtype=jnp.int32)
             sched_now = cap_vals[jnp.clip(cap_idx - 1, 0, K - 1)]
             cap_eff = sched_now + s["ctrl_tgt"] - base_i
             per_slot = (qlen.astype(jnp.float32)
@@ -455,13 +581,17 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             changed = can_act & jnp.any(new_cap != cap_f)
             if rec_ctrl:
                 # an integer-target move is a provisioning action: append
-                # (t, target) to the realized timeline (numpy mirrors)
+                # (t, target) to the realized timeline (numpy mirrors). The
+                # append is a dense one-hot row write — a traced-index
+                # scatter would serialize under vmap on CPU
                 tgt_changed = can_act & jnp.any(new_tgt != s["ctrl_tgt"])
                 idx = jnp.minimum(s["ctrl_n"], n_ctrl_slots - 1)
                 row = jnp.concatenate([jnp.reshape(t_star, (1,)),
                                        new_tgt.astype(jnp.float32)])
-                s["ctrl_act"] = s["ctrl_act"].at[idx].set(
-                    jnp.where(tgt_changed, row, s["ctrl_act"][idx]))
+                oh_e = (jnp.arange(n_ctrl_slots, dtype=jnp.int32)
+                        == idx)[:, None]
+                s["ctrl_act"] = jnp.where(oh_e & tgt_changed, row[None, :],
+                                          s["ctrl_act"])
                 s["ctrl_n"] = jnp.minimum(
                     s["ctrl_n"] + tgt_changed.astype(jnp.int32), n_ctrl_slots)
             free = free + (new_tgt - s["ctrl_tgt"])
@@ -479,18 +609,30 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         return s
 
     def _admission_stage(s, t_star):
-        """Stage 4: one ranked admission round per resource (fused
-        lexicographic sort), recording start/finish for admitted attempts."""
+        """Stage 4: one ranked admission round per resource, recording
+        start/finish for admitted attempts. Four equivalent rankings select
+        the same admitted mask (bit-identical, see
+        :func:`admission_mask_dense`): ``"fused"`` — one stable 3-key
+        ``lax.sort``; ``"chained"`` — three stable argsorts; ``"dense"`` —
+        sort-free pairwise seat count (the fast CPU path); ``"pallas"`` —
+        the fused VMEM kernel in :mod:`repro.kernels.queue_scan`
+        (interpreted off-TPU)."""
         s = dict(s)
         att, task_idx = s["attempt"], s["task_idx"]
         tcl = jnp.clip(task_idx, 0, T - 1)
+        oh = _onehot_cols(tcl, T)
         queued = s["phase"] == _QUEUED
-        res_q = jnp.where(queued, vwl.task_res[ids, tcl], nres)  # sentinel
+        res_q = jnp.where(queued, _take_cols(vwl.task_res, oh, -1),
+                          nres)                          # sentinel
         if attempt_service is None:
-            svc = vwl.service[ids, tcl]
+            svc = _take_cols(vwl.service, oh, -INF)
         else:
             A = attempt_service.shape[2]
-            svc = attempt_service[ids, tcl, jnp.clip(att, 0, A - 1)]
+            ka_s = jnp.clip(att, 0, A - 1)
+            sel3 = oh[:, :, None] & (
+                ka_s[:, None, None]
+                == jnp.arange(A, dtype=jnp.int32)[None, None, :])
+            svc = jnp.max(jnp.where(sel3, attempt_service, -INF), axis=(1, 2))
         if policy_dyn is not None:
             pkey = jnp.where(policy_dyn == POLICY_PRIORITY, -vwl.priority,
                              jnp.where(policy_dyn == POLICY_SJF, svc,
@@ -503,44 +645,62 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             pkey = jnp.zeros((n,), jnp.float32)
 
         # lexicographic stable ranking: res -> pkey -> enq_wave -> pid
-        r_s, o = rank(res_q, pkey, s["enq_wave"])
-        pos = jnp.arange(n, dtype=jnp.int32)
-        is_start = jnp.concatenate([jnp.array([True]), r_s[1:] != r_s[:-1]])
-        seg_start = _cummax(jnp.where(is_start, pos, -1))
-        seat = pos - seg_start
-        free_ext = jnp.concatenate([s["free"], jnp.zeros((1,), jnp.int32)])
-        admit_sorted = seat < free_ext[r_s]
-        admitted = jnp.zeros((n,), bool).at[o].set(admit_sorted) & queued
+        if admission_sort in ("fused", "chained"):
+            r_s, o = rank(res_q, pkey, s["enq_wave"])
+            pos = jnp.arange(n, dtype=jnp.int32)
+            is_start = jnp.concatenate([jnp.array([True]),
+                                        r_s[1:] != r_s[:-1]])
+            seg_start = _cummax(jnp.where(is_start, pos, -1))
+            seat = pos - seg_start
+            free_ext = jnp.concatenate([s["free"],
+                                        jnp.zeros((1,), jnp.int32)])
+            admit_sorted = seat < free_ext[r_s]
+            admitted = jnp.zeros((n,), bool).at[o].set(admit_sorted) & queued
+        elif admission_sort == "dense":
+            # statically-FIFO runs have pkey == 0 everywhere: skip the f32
+            # pkey compares in the pairwise matrix (bit-identical mask)
+            fifo_static = policy_dyn is None and policy == POLICY_FIFO
+            admitted = admission_mask_dense(res_q, pkey, s["enq_wave"],
+                                            s["free"],
+                                            skip_pkey=fifo_static) & queued
+        else:  # "pallas": fused admission kernel (interpreted off-TPU)
+            from repro.kernels.queue_scan import fused_admission
+            admitted = fused_admission(res_q, pkey, s["enq_wave"],
+                                       s["free"]) & queued
 
         # a failing attempt (known at admission from the pre-sampled attempt
         # tensor) may hold its slot for only a fraction of the service time
         if fail_holds_frac is None:
             dur = svc
         else:
-            will_fail = (att + 1) < att_req[ids, tcl]
+            will_fail = (att + 1) < _take_cols(att_req, oh, 0)
             dur = jnp.where(will_fail,
                             jnp.asarray(fail_holds_frac, jnp.float32) * svc,
                             svc)
         t_fin = t_star + dur
+        adm_col = oh & admitted[:, None]
         s["t_next"] = jnp.where(admitted, t_fin, s["t_next"])
         s["phase"] = jnp.where(admitted, _RUNNING, s["phase"])
-        s["start"] = s["start"].at[ids, tcl].set(
-            jnp.where(admitted, t_star, s["start"][ids, tcl]))
-        s["finish"] = s["finish"].at[ids, tcl].set(
-            jnp.where(admitted, t_fin, s["finish"][ids, tcl]))
+        s["start"] = jnp.where(adm_col, t_star, s["start"])
+        s["finish"] = jnp.where(adm_col, t_fin[:, None], s["finish"])
         # executed attempts (matches the numpy engine's attempts_out: a task
         # stranded mid-retry reports the admissions that actually happened)
-        s["att_out"] = s["att_out"].at[ids, tcl].add(admitted.astype(jnp.int32))
-        # res_q of admitted jobs is < nres by construction (sentinel never admits)
-        taken = jax.ops.segment_sum(admitted.astype(jnp.int32), res_q,
-                                    num_segments=nres + 1)[:nres]
+        s["att_out"] = s["att_out"] + adm_col.astype(jnp.int32)
+        # res_q of admitted jobs is < nres by construction (sentinel never
+        # admits); dense one-hot count, see _completion_stage
+        taken = jnp.sum(admitted[:, None]
+                        & (res_q[:, None]
+                           == jnp.arange(nres, dtype=jnp.int32)[None, :]),
+                        axis=0, dtype=jnp.int32)
         s["free"] = s["free"] - taken
         if n_attempt_slots is not None:
             ka = jnp.clip(att, 0, n_attempt_slots - 1)
-            s["att_start"] = s["att_start"].at[ids, tcl, ka].set(
-                jnp.where(admitted, t_star, s["att_start"][ids, tcl, ka]))
-            s["att_finish"] = s["att_finish"].at[ids, tcl, ka].set(
-                jnp.where(admitted, t_fin, s["att_finish"][ids, tcl, ka]))
+            adm_slot = adm_col[:, :, None] & (
+                ka[:, None, None]
+                == jnp.arange(n_attempt_slots, dtype=jnp.int32)[None, None, :])
+            s["att_start"] = jnp.where(adm_slot, t_star, s["att_start"])
+            s["att_finish"] = jnp.where(adm_slot, t_fin[:, None, None],
+                                        s["att_finish"])
         return s
 
     def _fleet_stage(s, t_star):
@@ -566,8 +726,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         # order-sensitive reduction is safe.  # parity: allow(loop-reduce)
         gain_m = jax.ops.segment_sum(jnp.where(p_done, gain_t, 0.0), mdl,
                                      num_segments=M_)
-        hit = jax.ops.segment_sum(p_done.astype(jnp.int32), mdl,
-                                  num_segments=M_) > 0
+        hit = jnp.any(p_done[:, None]
+                      & (mdl[:, None]
+                         == jnp.arange(M_, dtype=jnp.int32)[None, :]), axis=0)
         s["fl_perf0"] = jnp.where(
             hit, jnp.clip(s["fl_perf0"] + gain_m, 0.4, 0.995), s["fl_perf0"])
         s["fl_dep"] = jnp.where(hit, t_star, s["fl_dep"])
@@ -580,7 +741,7 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             [jnp.full((P,), t_star),
              jnp.full((P,), jnp.float32(FLEET_ACT_REDEPLOY)),
              s["pool_model"].astype(jnp.float32)], 1)
-        s["fleet_act"] = s["fleet_act"].at[idx].set(vals, mode="drop")
+        s["fleet_act"] = _onehot_rows(s["fleet_act"], idx, vals)
         # dtype pinned: jnp.sum would promote i32 to the platform int
         # (i64 under enable_x64) and break the carry contract
         s["fleet_n"] = s["fleet_n"] + jnp.sum(p_done, dtype=jnp.int32)
@@ -595,10 +756,13 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         perf = fleet_performance_acc(s["fl_perf0"], acc_new, dt, fleet_t,
                                      xp=jnp)
         stale = fleet_staleness(s["fl_perf0"], perf, xp=jnp)
-        s["fleet_perf"] = s["fleet_perf"].at[e].set(
-            jnp.where(firing, perf, s["fleet_perf"][e]))
-        s["fleet_stale"] = s["fleet_stale"].at[e].set(
-            jnp.where(firing, stale, s["fleet_stale"][e]))
+        # dense one-hot row writes (see _onehot_rows: scatters serialize
+        # under vmap on CPU)
+        oh_f = (jnp.arange(E_f, dtype=jnp.int32) == e)[:, None]
+        s["fleet_perf"] = jnp.where(oh_f & firing, perf[None, :],
+                                    s["fleet_perf"])
+        s["fleet_stale"] = jnp.where(oh_f & firing, stale[None, :],
+                                     s["fleet_stale"])
         obs = perf + obs_t[e]
         drift = s["fl_perf0"] - obs
         want = firing & (drift > f_thr) & ((t_star - s["fl_fire"])
@@ -610,19 +774,24 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         arr_t = t_star + f_delay
         slot_idx = jnp.where(fire, slot, P)
         mids = jnp.arange(M_, dtype=jnp.int32)
-        s["pool_model"] = s["pool_model"].at[slot_idx].set(mids, mode="drop")
-        s["pool_arr"] = s["pool_arr"].at[slot_idx].set(
-            jnp.full((M_,), arr_t), mode="drop")
+        # dense one-hot writes into the [P] pool slots (fired slots are
+        # unique: slot = pool_next + rank with distinct ranks)
+        m_s = slot_idx[:, None] == jnp.arange(P, dtype=jnp.int32)[None, :]
+        hit_s = jnp.any(m_s, axis=0)
+        s["pool_model"] = jnp.where(
+            hit_s, jnp.max(jnp.where(m_s, mids[:, None], -1), axis=0),
+            s["pool_model"])
+        s["pool_arr"] = jnp.where(hit_s, arr_t, s["pool_arr"])
         # activate the latent workload rows: they arrive at t_star + delay
         row_idx = jnp.where(fire, pbase + slot, n)
-        s["t_next"] = s["t_next"].at[row_idx].set(
-            jnp.full((M_,), arr_t), mode="drop")
+        hit_r = jnp.any(row_idx[:, None] == ids[None, :], axis=0)
+        s["t_next"] = jnp.where(hit_r, arr_t, s["t_next"])
         aidx = jnp.where(fire, s["fleet_n"] + rank, A_f)
         avals = jnp.stack(
             [jnp.full((M_,), t_star),
              jnp.full((M_,), jnp.float32(FLEET_ACT_TRIGGER)),
              mids.astype(jnp.float32)], 1)
-        s["fleet_act"] = s["fleet_act"].at[aidx].set(avals, mode="drop")
+        s["fleet_act"] = _onehot_rows(s["fleet_act"], aidx, avals)
         # dtype pinned (see _fleet_stage completion above)
         s["fleet_n"] = s["fleet_n"] + jnp.sum(fire, dtype=jnp.int32)
         s["pool_next"] = s["pool_next"] + jnp.sum(fire, dtype=jnp.int32)
@@ -649,9 +818,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         e = jnp.clip(s["p_tick"], 0, E_p - 1)
         queued = s["phase"] == _QUEUED
         tcl = jnp.clip(s["task_idx"], 0, T - 1)
-        res_p = jnp.where(queued, vwl.task_res[ids, tcl], nres)
-        qlen = jax.ops.segment_sum(queued.astype(jnp.int32), res_p,
-                                   num_segments=nres + 1)[:nres]
+        res_p = jnp.where(
+            queued, _take_cols(vwl.task_res, _onehot_cols(tcl, T), -1),
+            nres)
+        # dense one-hot count (see _completion_stage); the sentinel
+        # res_p == nres never matches a real resource column. An integer
+        # bool-count is order-independent — exact under any reduction
+        # order, so the numpy mirror agrees bit-for-bit.
+        qlen = jnp.sum(  # parity: allow(probe-reduce)
+            res_p[:, None] == jnp.arange(nres, dtype=jnp.int32)[None, :],
+            axis=0, dtype=jnp.int32)
         sched_now = cap_vals[jnp.clip(s["cap_idx"] - 1, 0, K - 1)]
         if has_ctrl:
             delta = s["ctrl_tgt"] - base_i
@@ -678,12 +854,23 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                                 jnp.nan)[None]
         else:
             f_perf = f_stale = jnp.full((1,), jnp.nan, jnp.float32)
+        # live-pipelines channel: queued + running pipelines — the
+        # live-width timeline the compaction driver's wave-rate changes are
+        # explained by (numpy mirrors: waiting heaps plus outstanding
+        # finish events). A bool-count i32 sum is order-independent and
+        # exact in f32.  # parity: allow(probe-reduce)
+        live = jnp.sum((s["phase"] == _QUEUED) | (s["phase"] == _RUNNING),
+                       dtype=jnp.int32)
         row = jnp.concatenate(
             [qlen.astype(jnp.float32), busy.astype(jnp.float32),
              cap_eff.astype(jnp.float32), delta.astype(jnp.float32),
-             f_perf.astype(jnp.float32), f_stale.astype(jnp.float32)])
-        s["probe_vals"] = s["probe_vals"].at[e].set(
-            jnp.where(firing, row, s["probe_vals"][e]))
+             f_perf.astype(jnp.float32), f_stale.astype(jnp.float32),
+             live.astype(jnp.float32)[None]])
+        # dense one-hot row write (a traced-index scatter would serialize
+        # under vmap on CPU)
+        oh_e = (jnp.arange(E_p, dtype=jnp.int32) == e)[:, None]
+        s["probe_vals"] = jnp.where(oh_e & firing, row[None, :],
+                                    s["probe_vals"])
         # advance the tick grid exactly as the controller's (f32 ulp guard)
         t_nxt = s["t_probe"] + p_interval
         s["t_probe"] = jnp.where(
@@ -695,8 +882,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
 
     # -------------------------------------------------------- wave loop
 
-    def cond(s):
-        t_star, _ = _select_events(s)
+    def _running(s, t_star=None):
+        if t_star is None:
+            t_star, _ = _select_events(s)
         # exit when everything is done OR nothing can ever happen again
         # (e.g. capacity held at zero past the end of the schedule and the
         # controller's evaluation grid is exhausted). Remaining fleet ticks
@@ -710,6 +898,23 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             # cover the full grid even after every pipeline drained
             alive = alive | (s["t_probe"] < INF)
         return alive & (t_star < INF)
+
+    def cond(s):
+        t_star, _ = _select_events(s)
+        go = _running(s, t_star)
+        if wave_budget is not None:
+            # segment cap: stop at the budget boundary — a wave boundary is
+            # a consistent cut, so the compaction driver resumes bit-exactly
+            go = go & (s["wave"] < jnp.asarray(wave_budget, jnp.int32))
+        if time_budget is not None:
+            # time-window cut: stop before processing any wave beyond the
+            # driver's guard — rows deferred by the driver all satisfy
+            # t_next > guard, so no wave at or before the guard can tell
+            # they are missing (and if one of them *would* have been the
+            # event minimum, the minimum over present rows is larger still,
+            # and the cut fires either way)
+            go = go & (t_star <= jnp.asarray(time_budget, jnp.float32))
+        return go
 
     def body(s):
         t_star, t_cap = _select_events(s)
@@ -740,6 +945,15 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     if has_probe:
         res["probe_vals"] = out["probe_vals"]
         res["probe_n"] = out["p_tick"]
+    if return_state:
+        res["state"] = out
+        # would the loop keep going without the budget cap?
+        res["running"] = _running(out)
+        # live pipelines: what the compaction driver must keep. Padding rows
+        # (batching.pad_workloads, arrival = PAD_ARRIVAL) count as live
+        # until their waves run at the padding timestamp — dropping them
+        # early would change the wave counter vs the uncompacted run.
+        res["n_keep"] = jnp.sum(out["phase"] != _DONE, dtype=jnp.int32)
     return res
 
 
@@ -859,7 +1073,7 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots", "n_probe_slots"))
+                          "n_ctrl_slots", "n_probe_slots", "return_state"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
@@ -870,7 +1084,9 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       n_ctrl_slots: Optional[int] = None,
                       fleets=None, trig=None, obs_noise=None, drift_inc=None,
                       pool_gain=None, pool_base=None, n_pool_eff=None,
-                      probes=None, n_probe_slots: Optional[int] = None):
+                      probes=None, n_probe_slots: Optional[int] = None,
+                      resume=None, wave_budget=None, time_budget=None,
+                      return_state: bool = False):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
 
     Optional per-replica scenario tensors — ``attempts [R, N, T]``,
@@ -904,6 +1120,12 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
     for that replica) plus the static ``n_probe_slots`` (the max tick bound
     over the batch) bring back stacked ``probe_vals [R, E, K]`` telemetry
     buffers, which ``batching.batch_trace`` slices per entry.
+
+    Segment-restart hooks batch per replica too: ``resume`` (a stacked
+    carry pytree from a prior ``return_state=True`` call), ``wave_budget
+    [R]`` i32 per-replica wave caps, ``time_budget [R]`` f32 per-replica
+    time guards, and the static ``return_state`` — see :func:`simulate`
+    and :mod:`repro.core.compaction`.
     """
     R = arrival.shape[0]
     if attempts is None:
@@ -942,6 +1164,12 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         mapped["n_pool_eff"] = jnp.asarray(n_pool_eff, jnp.int32)
     if probes is not None:
         mapped["probes"] = jnp.asarray(probes, jnp.float32)
+    if resume is not None:
+        mapped["resume"] = resume
+    if wave_budget is not None:
+        mapped["wave_budget"] = jnp.asarray(wave_budget, jnp.int32)
+    if time_budget is not None:
+        mapped["time_budget"] = jnp.asarray(time_budget, jnp.float32)
 
     def one(m):
         vwl = VWorkload(m["arrival"], m["n_tasks"], m["task_res"],
@@ -963,6 +1191,10 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         pool_base=m.get("pool_base"),
                         n_pool_eff=m.get("n_pool_eff"),
                         probe=m.get("probes"),
-                        n_probe_slots=n_probe_slots)
+                        n_probe_slots=n_probe_slots,
+                        resume=m.get("resume"),
+                        wave_budget=m.get("wave_budget"),
+                        time_budget=m.get("time_budget"),
+                        return_state=return_state)
 
     return jax.vmap(one)(mapped)

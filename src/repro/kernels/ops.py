@@ -7,21 +7,12 @@ forced via the REPRO_KERNEL_INTERPRET env var.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gmm_logpdf import gmm_logpdf as _gmm
 from repro.kernels.mamba2_scan import mamba2_scan as _mamba
+from repro.kernels.queue_scan import _auto_interpret as _default_interpret
+from repro.kernels.queue_scan import fused_admission  # noqa: F401  (re-export)
 from repro.kernels.queue_scan import queue_scan as _queue
-
-
-def _default_interpret() -> bool:
-    env = os.environ.get("REPRO_KERNEL_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
 
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,

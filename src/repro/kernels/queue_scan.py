@@ -1,38 +1,80 @@
-"""c-server FIFO queue scan Pallas kernel — the DES hot loop (DESIGN.md §3).
+"""Admission/queue Pallas kernels — the DES hot loop (DESIGN.md §3).
 
-Given per-resource job streams sorted by ready time, computes exact start /
-finish times of an M/G/c FIFO station: the carry is the vector of the c
-earliest server-free times, held in VMEM; each job takes the min slot.
-Grid = (n_queues,) — one program per (resource x replica), so a Monte-Carlo
-capacity sweep of thousands of stations runs as one kernel launch.
+Two kernels share this module:
 
-The inner loop is argmin + masked update over a (c,)-vector — VPU work, not
-MXU; the win over the host engine is batching queues across the grid and
-keeping the whole job stream in VMEM.
+``queue_scan`` — c-server FIFO queue scan. Given per-resource job streams
+sorted by ready time, computes exact start / finish times of an M/G/c FIFO
+station: the carry is the vector of the c earliest server-free times, held
+in VMEM; each job takes the min slot. Grid = (n_queues,) — one program per
+(resource x replica), so a Monte-Carlo capacity sweep of thousands of
+stations runs as one kernel launch. The inner loop is argmin + masked
+update over a (c,)-vector — VPU work, not MXU; the win over the host
+engine is batching queues across the grid and keeping the whole job stream
+in VMEM. Oracle: :func:`repro.core.des.single_station_fifo`.
+
+``fused_admission`` — ONE ranked admission round of the wave loop
+(``vdes._admission_stage``), fused: lexicographic rank over
+``(resource, policy key, enqueue wave, pipeline id)``, capacity prefix
+test, and slot assignment in a single ``pallas_call`` instead of the 3-key
+``lax.sort`` + segment-scan + unsort-scatter round. The ranking is
+computed as a pairwise *seat count* (VMEM-resident, one row block per
+program): a job's seat under the stable lexicographic sort equals the
+number of same-resource jobs with strictly lex-smaller keys — full keys
+are unique because the pipeline id breaks every tie — so
+
+    admitted_i  =  seat_i < free[res_i]
+
+is bit-identical to the sorted-seat test (and to
+:func:`repro.core.vdes.admission_mask_dense`, the same counting argument
+executed as plain XLA ops). Selected via ``simulate(...,
+admission_sort="pallas")``; parity with the ``"fused"`` / ``"chained"`` /
+``"dense"`` paths is asserted by tests and gated by
+``artifacts/BENCH_kernels.json: pallas_vs_lax_admission_drift``.
+
+Both kernels auto-fallback to ``interpret=True`` off-TPU (the container's
+CPU included), overridable via the ``REPRO_KERNEL_INTERPRET`` env var or
+the explicit ``interpret`` kwarg — kernel bodies then run through the
+Pallas interpreter as ordinary traceable XLA ops, so they work under
+``jit``/``vmap``/``lax.while_loop`` on any backend.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# lane width: pad job axes to a multiple of this (f32 min tile is (8, 128))
+_LANES = 128
+
+
+def _auto_interpret() -> bool:
+    """Interpret kernels off-TPU (overridable via REPRO_KERNEL_INTERPRET) —
+    the canonical backend check, shared with :mod:`repro.kernels.ops`."""
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ queue_scan
 
 def _queue_kernel(ready_ref, service_ref, start_ref, finish_ref, slots_ref,
                   *, n_jobs: int, capacity: int):
     slots_ref[...] = jnp.zeros_like(slots_ref)
 
     def body(j, _):
-        slots = slots_ref[...]
-        k = jnp.argmin(slots)
+        slots = slots_ref[...]                       # [1, capacity]
+        k = jnp.argmin(slots[0, :])
         r = ready_ref[0, j]
-        s = jnp.maximum(r, slots[k])
+        s = jnp.maximum(r, slots[0, k])
         f = s + service_ref[0, j]
         start_ref[0, j] = s
         finish_ref[0, j] = f
-        idx = jax.lax.broadcasted_iota(jnp.int32, (capacity,), 0)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
         slots_ref[...] = jnp.where(idx == k, f, slots)
         return 0
 
@@ -40,10 +82,7 @@ def _queue_kernel(ready_ref, service_ref, start_ref, finish_ref, slots_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
-def queue_scan(ready: jnp.ndarray, service: jnp.ndarray, *, capacity: int,
-               interpret: bool = False):
-    """ready, service: [R, N] (sorted by ready within each row).
-    Returns (start, finish): [R, N] f32."""
+def _queue_scan_call(ready, service, *, capacity: int, interpret: bool):
     R, N = ready.shape
     kernel = functools.partial(_queue_kernel, n_jobs=N, capacity=capacity)
     start, finish = pl.pallas_call(
@@ -61,7 +100,104 @@ def queue_scan(ready: jnp.ndarray, service: jnp.ndarray, *, capacity: int,
             jax.ShapeDtypeStruct((R, N), jnp.float32),
             jax.ShapeDtypeStruct((R, N), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((capacity,), jnp.float32)],
+        # 2D scratch: f32 VMEM tiles are (8, 128)-aligned, a bare (c,)
+        # vector is not a legal TPU layout
+        scratch_shapes=[pltpu.VMEM((1, capacity), jnp.float32)],
         interpret=interpret,
     )(ready.astype(jnp.float32), service.astype(jnp.float32))
     return start, finish
+
+
+def queue_scan(ready: jnp.ndarray, service: jnp.ndarray, *, capacity: int,
+               interpret=None):
+    """ready, service: [R, N] (sorted by ready within each row).
+    Returns (start, finish): [R, N] f32 — exact M/G/c FIFO station times
+    (oracle: :func:`repro.core.des.single_station_fifo` per row).
+    ``interpret=None`` auto-falls back to the Pallas interpreter off-TPU."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _queue_scan_call(ready, service, capacity=capacity,
+                            interpret=bool(interpret))
+
+
+# -------------------------------------------------------- fused_admission
+
+def _admission_kernel(res_r_ref, pk_r_ref, wv_r_ref,
+                      res_c_ref, pk_c_ref, wv_c_ref,
+                      free_ref, out_ref, *, nres: int, blk: int, n_pad: int):
+    """One row block of the pairwise seat count. ``*_r_ref`` are this
+    program's ``[1, blk]`` row slices, ``*_c_ref`` the full ``[1, n_pad]``
+    column views of the same arrays (VMEM-resident). Comparisons only — no
+    float arithmetic — so the admitted mask is exact."""
+    i = pl.program_id(0)
+    ri = res_r_ref[...].reshape(blk, 1)              # rows as a column
+    pi = pk_r_ref[...].reshape(blk, 1)
+    wi = wv_r_ref[...].reshape(blk, 1)
+    rj = res_c_ref[...]                              # [1, n_pad] -> cols
+    pj = pk_c_ref[...]
+    wj = wv_c_ref[...]
+    # lexicographic key_j < key_i over (pkey, enq_wave, id); ids via 2D
+    # iota (TPU requires >= 2D iota)
+    col_id = jax.lax.broadcasted_iota(jnp.int32, (blk, n_pad), 1)
+    row_id = i * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, n_pad), 0)
+    lt = (pj < pi) | ((pj == pi)
+                      & ((wj < wi) | ((wj == wi) & (col_id < row_id))))
+    seat = jnp.sum(((rj == ri) & lt).astype(jnp.int32), axis=1,
+                   keepdims=True)                    # [blk, 1]
+    # free[res] via a static unrolled select (nres is tiny); sentinel rows
+    # (res == nres: not queued, or padding) keep 0 and never admit
+    free_q = jnp.zeros((blk, 1), jnp.int32)
+    for r in range(nres):
+        free_q = jnp.where(ri == r, free_ref[0, r], free_q)
+    adm = (ri < nres) & (seat < free_q)
+    out_ref[...] = adm.reshape(1, blk).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("nres", "interpret"))
+def _fused_admission_call(res_q, pkey, enq_wave, free, *, nres: int,
+                          interpret: bool):
+    n = res_q.shape[0]
+    n_pad = max(_LANES, -(-n // _LANES) * _LANES)
+    pad = n_pad - n
+    # padding jobs carry the res == nres sentinel: they never admit and,
+    # sharing no resource with real jobs, never change a real seat count
+    res_p = jnp.pad(res_q.astype(jnp.int32), (0, pad),
+                    constant_values=nres)[None, :]
+    pk_p = jnp.pad(pkey.astype(jnp.float32), (0, pad))[None, :]
+    wv_p = jnp.pad(enq_wave.astype(jnp.int32), (0, pad))[None, :]
+    free_p = jnp.pad(free.astype(jnp.int32), (0, _LANES - nres))[None, :]
+    blk = _LANES
+    kernel = functools.partial(_admission_kernel, nres=nres, blk=blk,
+                               n_pad=n_pad)
+    row_spec = pl.BlockSpec((1, blk), lambda i: (0, i))
+    col_spec = pl.BlockSpec((1, n_pad), lambda i: (0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // blk,),
+        in_specs=[row_spec, row_spec, row_spec,
+                  col_spec, col_spec, col_spec,
+                  pl.BlockSpec((1, _LANES), lambda i: (0, 0))],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        interpret=interpret,
+    )(res_p, pk_p, wv_p, res_p, pk_p, wv_p, free_p)
+    return out[0, :n] > 0
+
+
+def fused_admission(res_q: jnp.ndarray, pkey: jnp.ndarray,
+                    enq_wave: jnp.ndarray, free: jnp.ndarray,
+                    *, interpret=None) -> jnp.ndarray:
+    """The wave loop's fused admission round: ``[N]`` bool admitted mask.
+
+    ``res_q [N]`` i32 — each job's resource, with the ``nres`` sentinel for
+    non-queued rows; ``pkey [N]`` f32 — the policy key (0 FIFO, -priority,
+    or service time for SJF); ``enq_wave [N]`` i32 — FIFO tie-break wave
+    counter; ``free [nres]`` i32 — free slots per resource. Bit-identical
+    to the ``lax.sort`` ranking in ``vdes._admission_stage`` (see module
+    docstring for the seat-count argument). ``interpret=None`` auto-falls
+    back to the Pallas interpreter off-TPU."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _fused_admission_call(res_q, pkey, enq_wave, free,
+                                 nres=int(free.shape[0]),
+                                 interpret=bool(interpret))

@@ -20,7 +20,7 @@ its heap loop, the JAX engine as a sixth kernel stage inside
 :class:`~repro.core.model.SimTrace` as ``probe_times`` / ``probe_vals`` and
 wrapped here as a :class:`ProbeTimeline` with named channels.
 
-Channel layout (K = ``probe_channel_count(nres)`` = ``4*nres + 2``):
+Channel layout (K = ``probe_channel_count(nres)`` = ``4*nres + 3``):
 
   ====================  ====================================================
   ``qlen:<res>``        jobs queued on the resource (post-admission)
@@ -30,6 +30,8 @@ Channel layout (K = ``probe_channel_count(nres)`` = ``4*nres + 2``):
                         loop)
   ``fleet_min_perf``    minimum live model performance across the fleet
   ``fleet_max_staleness``  maximum staleness across the fleet
+  ``live_pipelines``    queued + running pipelines — the live-width
+                        timeline that explains compaction wave-rate changes
   ====================  ====================================================
 
 The fleet channels are min/max on purpose: order-independent reductions stay
@@ -105,7 +107,8 @@ def probe_channel_names(resource_names: Sequence[str]) -> List[str]:
     names = []
     for prefix in ("qlen", "busy", "cap", "ctrl_delta"):
         names.extend(f"{prefix}:{r}" for r in resource_names)
-    names.extend(["fleet_min_perf", "fleet_max_staleness"])
+    names.extend(["fleet_min_perf", "fleet_max_staleness",
+                  "live_pipelines"])
     assert len(names) == probe_channel_count(len(resource_names))
     return names
 
