@@ -35,6 +35,7 @@ EXPECTED = (
     "BENCH_feedback.json",
     "BENCH_obs.json",
     "BENCH_kernels.json",
+    "BENCH_stream.json",
     # written by `make lint` (python -m repro.analysis), not by a bench
     "ANALYSIS.json",
 )

@@ -26,6 +26,7 @@ SUITES = [
     ("controller", "benchmarks.controller_bench"),
     ("feedback", "benchmarks.feedback_bench"),
     ("obs", "benchmarks.obs_bench"),
+    ("stream", "benchmarks.stream_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE ("kernels"
@@ -33,7 +34,7 @@ SUITES = [
 # the heavy reference-kernel rows and runs only the admission/compaction
 # parity section)
 SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback", "obs",
-                "kernels")
+                "kernels", "stream")
 
 
 def main() -> None:

@@ -1,0 +1,244 @@
+"""Streaming ingestion & replay acceptance bench (``artifacts/BENCH_stream.json``).
+
+Four measurements, one report:
+
+  1. **Windowed parity** (``stream_parity_drift``, gated at exactly 0.0 by
+     ``check_drift.py``): a full-stack program — failures/retries +
+     closed-loop controller + fleet/trigger lifecycle + probe — streamed
+     through :func:`repro.stream.stream_simulate` at SEVERAL window counts
+     must be bit-identical (records, per-attempt windows, controller/fleet/
+     probe timelines) to materializing the stream into one
+     ``simulate_ensemble`` call.
+  2. **Replay round-trip** (``replay_roundtrip_drift``, gated too): span
+     export -> chunked JSONL (``append=True``) -> :class:`SpanSource` ->
+     re-simulate must reproduce every attempt interval bit-exactly on the
+     integer-time configuration, windowed replay included.
+  3. **Sustained streaming rate**: a :class:`SyntheticSource` stream over
+     10x the baseline horizon, consumed with a
+     :class:`~repro.ops.accounting.StreamAccumulator` sink — tasks/s and
+     the peak working width, which must stay a small fraction of the
+     stream length (the bounded-memory claim).
+  4. **Ingest overlap**: wall clock with synthesis pipelined under the
+     device step vs sequential, same stream
+     (``overlap_parity_drift`` gates that the toggle is physics-free).
+
+``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks horizons for CI.
+
+  PYTHONPATH=src python -m benchmarks.run stream
+  PYTHONPATH=src python benchmarks/stream_bench.py --smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import jax
+
+from benchmarks.common import ART, fitted_params
+from repro.core import model as M
+from repro.core.metrics import FLEET_FIELDS
+from repro.core.runtime import FleetSpec, TriggerSpec
+from repro.core.synthesizer import synthesize_workload
+from repro.obs import ProbeSpec, attempt_intervals_from_records, build_spans
+from repro.obs.spans import attempt_intervals, write_spans_jsonl
+from repro.ops import FailureModel, ReactiveController, RetryPolicy, Scenario
+from repro.ops.accounting import StreamAccumulator
+from repro.stream import (SpanSource, SyntheticSource, oneshot_reference,
+                          parity_drift, stream_simulate)
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_stream.json"))
+
+
+class _BlockSource:
+    """A pinned workload replayed as fixed-size arrival-ordered blocks."""
+
+    name = "bench-blocks"
+
+    def __init__(self, wl, block=64):
+        self.wl, self.block = wl, block
+
+    def blocks(self):
+        n = self.wl.arrival.shape[0]
+        for lo in range(0, n, self.block):
+            hi = min(lo + self.block, n)
+            yield M.Workload(**{
+                f.name: (v[lo:hi] if isinstance(
+                    v := getattr(self.wl, f.name), np.ndarray) else v)
+                for f in dataclasses.fields(M.Workload)})
+
+
+def _integer_workload(horizon_s: float, seed: int = 31):
+    wl = synthesize_workload(fitted_params(), jax.random.PRNGKey(seed),
+                             horizon_s)
+    wl.arrival = np.floor(wl.arrival)
+    wl.exec_time = np.ceil(wl.exec_time)
+    wl.read_bytes[:] = 0.0
+    wl.write_bytes[:] = 0.0
+    return wl
+
+
+def _fleet_tensor():
+    fl = np.zeros((4, FLEET_FIELDS), np.float32)
+    fl[:, 0] = [0.9, 0.8, 0.95, 0.7]
+    fl[:, 1] = [2e-3, 1e-3, 5e-4, 3e-3]
+    fl[:, 5] = 7 * 24 * 3600.0
+    return fl
+
+
+def _full_stack_kwargs(retry_resample=True):
+    return dict(
+        scenario=Scenario(
+            name="streambench",
+            failures=FailureModel(
+                p_fail_by_type=(0.25,) * M.N_TASK_TYPES,
+                retry=RetryPolicy(max_retries=2, base_s=30.0, mult=2.0,
+                                  cap_s=240.0),
+                resample_service=retry_resample),
+            controller=ReactiveController(
+                high_watermark=0.3, low_watermark=0.05, step=0.5,
+                min_scale=0.5, max_scale=3.0, interval_s=1800.0)),
+        fleet=FleetSpec(params=_fleet_tensor()),
+        trigger=TriggerSpec(drift_threshold=0.05, cooldown_s=600.0,
+                            obs_noise=0.01, interval_s=300.0,
+                            retrain_durations=(400.0, 50.0, 150.0)),
+        probe=ProbeSpec(interval_s=900.0))
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.1 if smoke else 0.25) * 86400.0
+    out_rows = []
+
+    # --- 1. windowed parity: full stack, several window counts -------------
+    wl = _integer_workload(horizon)
+    src = _BlockSource(wl, block=64)
+    kw = _full_stack_kwargs()
+    t0 = time.perf_counter()
+    ref = oneshot_reference(src, horizon_s=horizon, seed=17, **kw)
+    oneshot_wall = time.perf_counter() - t0
+    window_counts = (2, 4, 8) if smoke else (2, 4, 8, 16)
+    stream_parity_drift = 0.0
+    window_walls = {}
+    for nw in window_counts:
+        sr = stream_simulate(src, horizon_s=horizon, window_s=horizon / nw,
+                             seed=17, **kw)
+        stream_parity_drift = max(stream_parity_drift,
+                                  parity_drift(sr, ref))
+        window_walls[nw] = sr.wall_s
+    out_rows.append(("stream_parity", oneshot_wall * 1e6,
+                     f"drift={stream_parity_drift}_over_"
+                     f"{len(window_counts)}window_counts"))
+
+    # --- 2. replay round-trip (integer time, resample off = exactness) ----
+    replay_sc = Scenario(name="rp", failures=FailureModel(
+        p_fail_by_type=(0.3,) * M.N_TASK_TYPES,
+        retry=RetryPolicy(max_retries=2, base_s=30.0, mult=2.0, cap_s=240.0),
+        resample_service=False))
+    orig = oneshot_reference(src, horizon_s=horizon, seed=17,
+                             scenario=replay_sc)
+    spans = build_spans(orig["records"], name="streambench")
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "spans.jsonl")
+        cut = len(spans) // 3
+        write_spans_jsonl(spans[:cut], path)
+        write_spans_jsonl(spans[cut:], path, append=True)
+        rsrc = SpanSource(path)
+    rscn = rsrc.scenario(backoff=replay_sc.failures.retry.backoff)
+    rref = oneshot_reference(rsrc, scenario=rscn, horizon_s=horizon)
+    got = attempt_intervals_from_records(
+        rsrc.remap_pipelines(rref["records"]))
+    want = attempt_intervals(spans)
+    if set(got) != set(want):
+        replay_roundtrip_drift = float("inf")
+    else:
+        replay_roundtrip_drift = max(
+            max(abs(a0 - b0), abs(a1 - b1))
+            for (a0, a1), (b0, b1) in ((got[k], want[k]) for k in want))
+    rstream = stream_simulate(rsrc, scenario=rscn, horizon_s=horizon,
+                              window_s=horizon / 4)
+    replay_roundtrip_drift = max(replay_roundtrip_drift,
+                                 parity_drift(rstream, rref))
+    out_rows.append(("stream_replay_roundtrip", rstream.wall_s * 1e6,
+                     f"drift={replay_roundtrip_drift}_"
+                     f"{len(want)}intervals_approx{rsrc.n_approximate}"))
+
+    # --- 3. sustained rate over a 10x-horizon stream, sink consumption ----
+    mult = 10
+    long_h = mult * horizon
+    lsrc = SyntheticSource(fitted_params(), seed=23, block_size=256,
+                           until_s=long_h)
+    acc = StreamAccumulator(M.PlatformConfig().capacities, long_h)
+    t0 = time.perf_counter()
+    sr_long = stream_simulate(lsrc, horizon_s=long_h, window_s=horizon,
+                              seed=23, sink=acc.add)
+    long_wall = time.perf_counter() - t0
+    tasks_per_s = sr_long.n_task_rows / max(long_wall, 1e-9)
+    peak_frac = sr_long.peak_rows / max(sr_long.n_pipelines, 1)
+    out_rows.append(("stream_sustained", long_wall * 1e6,
+                     f"{tasks_per_s:.0f}tasks/s_{mult}x_horizon_"
+                     f"peak{sr_long.peak_rows}of{sr_long.n_pipelines}"))
+
+    # --- 4. ingest overlap on/off: wall only, physics bit-identical -------
+    a = stream_simulate(lsrc, horizon_s=long_h, window_s=horizon, seed=23,
+                        overlap=True)
+    b = stream_simulate(lsrc, horizon_s=long_h, window_s=horizon, seed=23,
+                        overlap=False)
+    overlap_parity_drift = 0.0
+    for f in ("start", "finish", "ready", "attempts"):
+        va, vb = getattr(a.records, f), getattr(b.records, f)
+        if not np.array_equal(va, vb, equal_nan=True):
+            overlap_parity_drift = 1.0
+    out_rows.append(("stream_overlap", a.wall_s * 1e6,
+                     f"overlap{a.wall_s:.2f}s_sequential{b.wall_s:.2f}s_"
+                     f"ingest{a.ingest_s:.2f}s"))
+
+    report = {
+        "pipelines": int(wl.n),
+        "horizon_s": horizon,
+        "window_counts": list(window_counts),
+        "stream_parity_drift": stream_parity_drift,
+        "oneshot_wall_s": oneshot_wall,
+        "window_walls_s": {str(k): v for k, v in window_walls.items()},
+        "replay_roundtrip_drift": replay_roundtrip_drift,
+        "replay_intervals": len(want),
+        "replay_approximate": rsrc.n_approximate,
+        "long_horizon_multiple": mult,
+        "long_pipelines": int(sr_long.n_pipelines),
+        "long_task_rows": int(sr_long.n_task_rows),
+        "long_windows": int(sr_long.n_windows),
+        "sustained_tasks_per_s": tasks_per_s,
+        "sustained_wall_s": long_wall,
+        "ingest_s": sr_long.ingest_s,
+        "peak_rows": int(sr_long.peak_rows),
+        "peak_rows_frac_of_stream": peak_frac,
+        "sink_n_tasks": acc.summary()["n_tasks"],
+        "overlap_wall_s": a.wall_s,
+        "sequential_wall_s": b.wall_s,
+        "overlap_parity_drift": overlap_parity_drift,
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return out_rows
+
+
+def main():
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for r in rows():
+        print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,28 @@ class CapturedCall:
         return arrays, static
 
 
+def call_signature(call: "CapturedCall") -> Tuple:
+    """The call's compile-cache identity: every static kwarg by value,
+    every array argument by ``(shape, dtype)`` aval. Two calls with equal
+    signatures hit the same jitted executable — the invariant the
+    streaming driver's window loop is audited against (every
+    ``resume``-carrying window call must produce ONE signature, or an
+    unbounded stream recompiles without bound)."""
+    def aval(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return ("arr", tuple(x.shape), str(x.dtype))
+        if isinstance(x, (list, tuple)):
+            return ("seq", tuple(aval(v) for v in x))
+        if isinstance(x, dict):
+            return ("map", tuple((k, aval(x[k])) for k in sorted(x)))
+        return ("static", repr(x))
+
+    arrays, static = call.split()
+    return (tuple(aval(a) for a in call.args),
+            tuple((k, aval(arrays[k])) for k in sorted(arrays)),
+            tuple(sorted((k, repr(v)) for k, v in static.items())))
+
+
 @contextlib.contextmanager
 def capture_calls(fn_name: str):
     """Record every production call to ``vdes.<fn_name>`` (``simulate`` or
@@ -148,6 +170,36 @@ def smoke_spec(engine: str = "jax") -> ExperimentSpec:
                             retrain_durations=(40.0, 5.0, 15.0)),
         probe=smoke_probe(),
     )
+
+
+def smoke_stream_source(block: int = 12):
+    """:func:`smoke_workload` served as a :class:`~repro.stream.TraceSource`
+    (fixed-size arrival-ordered blocks) — the streamed counterpart of the
+    pinned smoke workload, for auditing the windowed driver's call
+    signatures."""
+    wl = smoke_workload()
+
+    class _Source:
+        name = "smoke-stream"
+
+        def blocks(self):
+            n = wl.arrival.shape[0]
+            for lo in range(0, n, block):
+                hi = min(lo + block, n)
+                yield M.Workload(**{
+                    f.name: (v[lo:hi] if isinstance(
+                        v := getattr(wl, f.name), np.ndarray) else v)
+                    for f in dataclasses.fields(M.Workload)})
+
+    return _Source()
+
+
+def smoke_stream_spec() -> ExperimentSpec:
+    """The full-stack smoke spec in streamed form (``"jax-stream"`` over a
+    :func:`smoke_stream_source`): same scenario/fleet/trigger/probe stack,
+    consumed windowwise."""
+    return dataclasses.replace(smoke_spec(engine="jax-stream"),
+                               workload=None, source=smoke_stream_source())
 
 
 def smoke_sweep() -> Sweep:

@@ -229,6 +229,14 @@ def unpack_ctrl_actions(buf, count):
     return acts[:, 0], np.rint(acts[:, 1:]).astype(np.int64)
 
 
+# mutable fleet-stage loop variables, in adoption order — the resume /
+# return_state state-dict keys for the windowed-cut hooks below
+_FLEET_STATE_KEYS = ("fl_perf0", "fl_dep", "fl_acc", "fl_dep_tick",
+                     "fl_fire", "t_fleet", "fl_tick", "pool_model",
+                     "pool_next", "pool_arr", "redeployed", "fleet_perf",
+                     "fleet_stale")
+
+
 def _policy_key(policy: int, wl: M.Workload, svc_val: float,
                 pid: int) -> float:
     if policy == POLICY_PRIORITY:
@@ -240,7 +248,8 @@ def _policy_key(policy: int, wl: M.Workload, svc_val: float,
 
 def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
              policy: int = POLICY_FIFO, scenario=None,
-             fleet=None, probe=None) -> M.SimTrace:
+             fleet=None, probe=None, *, time_budget: Optional[float] = None,
+             resume: Optional[dict] = None, return_state: bool = False):
     """``fleet`` is a :class:`repro.ops.scenario.CompiledFleet`: the model
     lifecycle (run-time view) stage. ``wl`` must then be the *extended*
     workload — the exogenous pipelines followed by the fleet's preallocated
@@ -257,7 +266,17 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     min-performance / max-staleness — is sampled in f32 into a preallocated
     ``[E, K]`` buffer, mirroring ``vdes._probe_stage`` op-for-op. The stage
     is physics-invisible: task timestamps are identical with and without a
-    probe."""
+    probe.
+
+    ``time_budget`` / ``resume`` / ``return_state`` mirror the vdes hooks
+    (the windowed-cut semantics the streaming driver and the compaction
+    engine rely on): the loop stops BEFORE processing any wave whose
+    next-event time exceeds ``time_budget``, so a boundary is a bit-exact
+    cut; with ``return_state=True`` the call returns ``(trace, state)``
+    where ``state`` is an opaque dict of every mutable loop variable, and a
+    later call with ``resume=state`` (same workload/scenario/fleet/probe
+    tensors) continues wave-for-wave as if never interrupted. The state is
+    adopted by reference — callers must not mutate it between calls."""
     platform = platform or M.PlatformConfig()
     service = wl.service_time(platform.datastore)
     n, T = wl.task_type.shape
@@ -394,6 +413,30 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                 if np.isfinite(wl.arrival[i])]
     heapq.heapify(ev)
 
+    if resume is not None:
+        # adopt every mutable loop variable by reference (the fresh
+        # allocations above are discarded); static/derived tensors were
+        # recomputed identically from the same inputs
+        st = resume
+        start, finish, ready = st["start"], st["finish"], st["ready"]
+        attempts_out = st["attempts_out"]
+        att_start, att_finish = st["att_start"], st["att_finish"]
+        free, waiting = st["free"], st["waiting"]
+        task_idx, att = st["task_idx"], st["att"]
+        wave, cap_ptr, ev = st["wave"], st["cap_ptr"], st["ev"]
+        if ctrl is not None:
+            ctrl_cap, ctrl_tgt = st["ctrl_cap"], st["ctrl_tgt"]
+            t_eval, t_act = st["t_eval"], st["t_act"]
+            ctrl_actions = st["ctrl_actions"]
+        if fl is not None:
+            (fl_perf0, fl_dep, fl_acc, fl_dep_tick, fl_fire, t_fleet,
+             fl_tick, pool_model, pool_next, pool_arr, redeployed,
+             fleet_perf, fleet_stale) = (st[k] for k in _FLEET_STATE_KEYS)
+            fleet_actions = st["fleet_actions"]
+        if pr is not None:
+            t_probe, p_tick, probe_vals = (st["t_probe"], st["p_tick"],
+                                           st["probe_vals"])
+
     def enqueue(pid: int, t: float) -> None:
         tidx = int(task_idx[pid])
         r = int(wl.task_res[pid, tidx])
@@ -437,6 +480,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         t_star = min(t_heap, t_cap, t_ctrl, t_fl, t_pr)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
+        if time_budget is not None and t_star > time_budget:
+            break   # windowed cut: waves past the guard wait for a resume
         # mirror: vdes._completion_stage — finishes release slots, failed
         # attempts re-queue after backoff, arrivals/successors enqueue
         wave_ev = []
@@ -603,7 +648,7 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             fl, arrival_out, pool_arr, act_buf, len(fleet_actions),
             fleet_perf, fleet_stale)
 
-    return M.SimTrace(
+    tr = M.SimTrace(
         start=start, finish=finish, ready=ready,
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,
         task_type=wl.task_type, arrival=arrival_out,
@@ -621,6 +666,25 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         waves=wave,
         **fl_cols,
     )
+    if not return_state:
+        return tr
+    state = dict(start=start, finish=finish, ready=ready,
+                 attempts_out=attempts_out, att_start=att_start,
+                 att_finish=att_finish, free=free, waiting=waiting,
+                 task_idx=task_idx, att=att, wave=wave, cap_ptr=cap_ptr,
+                 ev=ev)
+    if ctrl is not None:
+        state.update(ctrl_cap=ctrl_cap, ctrl_tgt=ctrl_tgt, t_eval=t_eval,
+                     t_act=t_act, ctrl_actions=ctrl_actions)
+    if fl is not None:
+        state.update(zip(_FLEET_STATE_KEYS,
+                         (fl_perf0, fl_dep, fl_acc, fl_dep_tick, fl_fire,
+                          t_fleet, fl_tick, pool_model, pool_next, pool_arr,
+                          redeployed, fleet_perf, fleet_stale)))
+        state["fleet_actions"] = fleet_actions
+    if pr is not None:
+        state.update(t_probe=t_probe, p_tick=p_tick, probe_vals=probe_vals)
+    return tr, state
 
 
 def single_station_fifo(ready: np.ndarray, service: np.ndarray,

@@ -100,6 +100,12 @@ def _spec_workloads(spec, params, cache=None):
     """
     if spec.workload is not None:
         wls = [spec.workload] * spec.n_replicas
+    elif getattr(spec, "source", None) is not None:
+        # non-stream engines treat a TraceSource as a pinned workload:
+        # materialize the whole stream once (deterministic re-iteration,
+        # so this equals what the stream engine consumes incrementally)
+        from repro.stream import materialize
+        wls = [materialize(spec.source)] * spec.n_replicas
     else:
         if params is None:
             raise ValueError("params required unless spec.workload is set")
@@ -454,6 +460,74 @@ class JaxCompactEngine(JaxEngine):
         return results
 
 
+class JaxStreamEngine:
+    """Streaming engine (``"jax-stream"``): consumes ``spec.source`` (a
+    :class:`~repro.stream.TraceSource`) through
+    :func:`repro.stream.stream_simulate` — the batched wave loop runs in
+    resumable arrival windows, retired pipelines leave the working set at
+    window boundaries, and ingestion (synthesis / trace decode + failure
+    draws) overlaps the device step. Results are bit-identical to
+    materializing the stream and running ``"jax"`` (parity-gated by
+    :func:`repro.stream.parity_drift`); memory is bounded by the live
+    backlog instead of the stream length.
+
+    Specs without a ``source`` stream their own synthetic workload: the
+    engine wraps ``(params, seed, horizon)`` in a
+    :class:`~repro.stream.SyntheticSource`. Blockwise synthesis keys
+    differ from one-shot ``synthesize_workload`` (block ``b`` folds in its
+    index), so set an explicit ``source`` when comparing engines — two
+    engines reading the SAME source see identical tensors.
+    """
+
+    name = "jax-stream"
+
+    def __init__(self, window_s=None, overlap: bool = True,
+                 min_rows: int = 64, admission_sort: str = "fused"):
+        self.window_s = window_s
+        self.overlap = overlap
+        self.min_rows = min_rows
+        self.admission_sort = admission_sort
+        self.last_result = None       # StreamResult of the most recent run
+
+    def _source(self, spec, params):
+        if getattr(spec, "source", None) is not None:
+            return spec.source
+        if spec.workload is not None:
+            raise ValueError(
+                "jax-stream streams a TraceSource; wrap the pinned workload "
+                "in a source (or use engine='jax' for pinned workloads)")
+        if params is None:
+            raise ValueError("params required unless spec.source is set")
+        from repro.stream import SyntheticSource
+        return SyntheticSource(params, platform=spec.platform,
+                               seed=spec.seed, until_s=spec.horizon_s,
+                               interarrival_factor=spec.interarrival_factor)
+
+    def run(self, spec, params=None):
+        if spec.n_replicas != 1:
+            raise ValueError(
+                "jax-stream is a single-replica engine (a stream has one "
+                "realization); use n_replicas=1 or the 'jax' engine")
+        from repro.core.experiment import ExperimentResult
+        from repro.stream import stream_simulate
+        sr = stream_simulate(
+            self._source(spec, params), spec.platform, policy=spec.policy,
+            scenario=spec.scenario, fleet=spec.fleet, trigger=spec.trigger,
+            probe=spec.probe, horizon_s=spec.horizon_s,
+            window_s=self.window_s, seed=spec.seed, params=params,
+            overlap=self.overlap, min_rows=self.min_rows,
+            admission_sort=self.admission_sort)
+        self.last_result = sr
+        summary = dict(sr.summary)
+        summary["pipelines_per_s"] = sr.n_pipelines / max(sr.wall_s, 1e-9)
+        return ExperimentResult(spec, summary, sr.records, sr.wall_s)
+
+    def run_sweep(self, specs: Sequence, params=None) -> List:
+        # streams are stateful and windowed; the grid runs serially (each
+        # point still batches its own windows through one jit signature)
+        return [self.run(s, params) for s in specs]
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -476,3 +550,4 @@ def get_engine(name: str) -> Engine:
 register_engine(NumpyEngine())
 register_engine(JaxEngine())
 register_engine(JaxCompactEngine())
+register_engine(JaxStreamEngine())

@@ -50,7 +50,13 @@ class ExperimentSpec:
     parameters. ``workload`` optionally pins a pre-materialized
     :class:`~repro.core.model.Workload` (then no synthesis happens and
     ``interarrival_factor`` is ignored) — the hook deterministic parity
-    tests and trace replays use.
+    tests and trace replays use. ``source`` (a
+    :class:`~repro.stream.TraceSource`) is the *streamed* form of the same
+    hook: the ``"jax-stream"`` engine pulls workload blocks from it
+    incrementally and simulates in resumable windows with bounded memory,
+    while every other engine materializes the source into a pinned
+    workload once (deterministic re-iteration makes the two paths
+    bit-identical).
 
     ``fleet`` + ``trigger`` declare the *run-time view* (Fig 7): a fleet of
     deployed models under drift and the execution trigger that retrains
@@ -81,6 +87,11 @@ class ExperimentSpec:
     fleet: Optional[FleetSpec] = None
     trigger: Optional[TriggerSpec] = None
     probe: Optional[object] = None   # repro.obs.probes.ProbeSpec
+    # a repro.stream.TraceSource: the streamed alternative to ``workload``.
+    # The "jax-stream" engine consumes it incrementally (windowed, bounded
+    # memory); every other engine materializes it into a pinned workload
+    # once (bit-identical — TraceSource iteration is deterministic).
+    source: Optional[object] = None
 
     def with_(self, **kw) -> "ExperimentSpec":
         """Functional update (``dataclasses.replace`` with axis shorthands):
@@ -159,6 +170,9 @@ class ExperimentResult:
         exp = self.experiment
         if getattr(exp, "workload", None) is not None:
             exp = dataclasses.replace(exp, workload=None)  # tensors -> npz
+        if getattr(exp, "source", None) is not None:
+            exp = dataclasses.replace(
+                exp, source=getattr(exp.source, "name", "source"))
         meta = {"experiment": dataclasses.asdict(exp),
                 "summary": self.summary, "wall_s": self.wall_s}
         with open(os.path.join(directory, "meta.json"), "w") as f:

@@ -78,6 +78,45 @@ def synthesize_workload(
     n = arrival.shape[0]
     if n == 0:
         raise ValueError("horizon too short: no arrivals synthesized")
+    return _draw_tasks(params, keys, arrival, platform)
+
+
+def synthesize_block(
+    params: SimulationParams,
+    key: jax.Array,
+    n: int,
+    t0: float = 0.0,
+    platform: Optional[M.PlatformConfig] = None,
+    interarrival_factor: float = 1.0,
+) -> M.Workload:
+    """Synthesize exactly ``n`` pipelines continuing from clock ``t0`` —
+    the streaming unit (:class:`repro.stream.SyntheticSource`).
+
+    Count-based on purpose: every per-task draw in :func:`_draw_tasks` is
+    shaped by ``n`` alone (no horizon truncation anywhere), so a stream of
+    fixed-size blocks with per-block folded keys produces the *same task
+    tensors regardless of how the consumer windows them* — the invariant
+    the streamed-vs-oneshot parity gate rests on. Arrivals continue the
+    clustered interarrival process from ``t0`` (the hour-of-week cluster of
+    the previous block's last arrival)."""
+    if n < 1:
+        raise ValueError(f"block size must be >= 1, got {n}")
+    platform = platform or M.PlatformConfig()
+    keys = jax.random.split(key, 24)
+    arrival = np.asarray(sample_clustered_arrivals(
+        params.interarrival_clusters, keys[1], n, interarrival_factor,
+        t0=float(t0))).astype(np.float64)
+    return _draw_tasks(params, keys, arrival, platform)
+
+
+def _draw_tasks(params: SimulationParams, keys: jax.Array,
+                arrival: np.ndarray, platform: M.PlatformConfig
+                ) -> M.Workload:
+    """Per-pipeline content draws (structures, frameworks, assets,
+    durations, model assets) for a fixed arrival vector — ``keys`` is the
+    24-way split consumed from index 2 up. Shared op-for-op by the one-shot
+    and block synthesis paths, so streamed synthesis stays bit-identical."""
+    n = arrival.shape[0]
 
     # --- structures (fitted presence probabilities, canonical order)
     sp = params.structure_probs

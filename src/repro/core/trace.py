@@ -107,10 +107,19 @@ def flatten_trace(trace: M.SimTrace, wl: M.Workload) -> TaskRecords:
 
 
 def concat_records(recs) -> TaskRecords:
-    """Concatenate record batches. The per-attempt columns may be absent or
-    have different attempt-slot widths across batches (e.g. co-simulation
-    windows with different failure draws): widths are NaN-padded to the
-    maximum, and batches without the columns contribute all-NaN rows."""
+    """Concatenate record batches *exactly*. The per-attempt columns may be
+    absent or have different attempt-slot widths across batches (e.g.
+    window-partial records whose scenarios drew different maximum retry
+    counts): attempt ``k`` always occupies slot ``k`` in both engines (the
+    recording width covers every attempt that can execute), so right-padding
+    narrower batches with NaN is positionally exact. A batch *without* the
+    columns still executed every started task as one attempt over
+    ``(start, finish)`` — those rows contribute that exact interval in slot
+    0 (NaN only where the task never started), so the attempt-window
+    accounting path charges concatenated batches identically to charging
+    each batch alone (no silent under-charge at window cuts). Accepts any
+    iterable (materialized once)."""
+    recs = list(recs)
     fields = [f.name for f in dataclasses.fields(TaskRecords)]
     out = {}
     for f in fields:
@@ -123,12 +132,15 @@ def concat_records(recs) -> TaskRecords:
             cols = []
             for r, v in zip(recs, vals):
                 if v is None:
+                    # exact single-attempt interval, not an all-NaN row
                     v = np.full((r.start.shape[0], width), np.nan)
+                    src = r.start if f == "att_start" else r.finish
+                    v[:, 0] = np.asarray(src, np.float64)
                 elif v.shape[1] < width:
                     v = np.pad(v, ((0, 0), (0, width - v.shape[1])),
                                constant_values=np.nan)
                 cols.append(v)
-            out[f] = np.concatenate(cols)
+            out[f] = np.concatenate(cols) if cols else None
         else:
             out[f] = np.concatenate(vals)
     return TaskRecords(**out)

@@ -200,11 +200,19 @@ def attempt_intervals_from_records(rec: TaskRecords
 # writers / readers
 # ---------------------------------------------------------------------------
 
-def write_spans_jsonl(spans: List[dict], path: str) -> None:
+def write_spans_jsonl(spans: List[dict], path: str,
+                      append: bool = False) -> None:
     """One span per line. f64 seconds serialize via ``repr`` (shortest
     round-trip representation), so a parse reconstructs every timestamp
-    bit-exactly."""
-    with open(path, "w") as f:
+    bit-exactly.
+
+    ``append=True`` extends an existing file in place (chunked export: the
+    streaming driver writes each window's retired spans as it goes, never
+    rewriting earlier chunks). JSONL is concatenation-closed, so N appended
+    chunks read back exactly as one list — the round-trip stays bit-exact
+    and byte-identical to a single ``append=False`` write of the
+    concatenated span list."""
+    with open(path, "a" if append else "w") as f:
         for s in spans:
             f.write(json.dumps(s, separators=(",", ":")) + "\n")
 

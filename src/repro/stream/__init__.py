@@ -1,0 +1,21 @@
+"""Streaming trace ingestion & replay (trace-driven operating mode).
+
+The fixed-horizon workload tensor becomes one *source* among several: a
+:class:`TraceSource` yields arrival-ordered workload blocks, a
+:class:`WorkloadManager` buffers and window-slices them, and
+:func:`stream_simulate` runs the stream through the batched JAX engine in
+resumable horizon windows — bit-identical to materializing the whole
+stream into one call (:func:`oneshot_reference`, gated by
+:func:`parity_drift`), with memory bounded by the live backlog instead of
+the stream length.
+"""
+from repro.stream.driver import (StreamResult, oneshot_reference,
+                                 parity_drift, stream_simulate)
+from repro.stream.sources import (SpanSource, SyntheticSource, TraceSource,
+                                  WorkloadManager, materialize)
+
+__all__ = [
+    "TraceSource", "SyntheticSource", "SpanSource", "WorkloadManager",
+    "materialize", "stream_simulate", "oneshot_reference", "parity_drift",
+    "StreamResult",
+]

@@ -404,7 +404,11 @@ def test_concat_records_pads_attempt_columns(rng):
     E_a = rec_a.start.shape[0]
     assert cat.att_start.shape == (E_a + rec_b.start.shape[0],
                                    rec_a.att_start.shape[1])
-    assert np.isnan(cat.att_start[E_a:]).all()
+    # column-less rows ran once over (start, finish): that interval lands in
+    # slot 0 (all-NaN rows would under-charge attempt-window accounting)
+    assert np.array_equal(cat.att_start[E_a:, 0], rec_b.start)
+    assert np.array_equal(cat.att_finish[E_a:, 0], rec_b.finish)
+    assert np.isnan(cat.att_start[E_a:, 1:]).all()
     assert np.allclose(cat.att_start[:E_a], rec_a.att_start, equal_nan=True)
 
 
