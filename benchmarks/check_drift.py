@@ -36,6 +36,7 @@ EXPECTED = (
     "BENCH_obs.json",
     "BENCH_kernels.json",
     "BENCH_stream.json",
+    "BENCH_reliability.json",
     # written by `make lint` (python -m repro.analysis), not by a bench
     "ANALYSIS.json",
 )

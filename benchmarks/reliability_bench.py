@@ -1,0 +1,208 @@
+"""Reliability-subsystem acceptance bench (``artifacts/BENCH_reliability.json``).
+
+Three measurements, one report:
+
+  1. **Engine parity** (``reliability_parity_drift``, gated at exactly 0.0
+     by ``check_drift.py``): a fully-loaded program — correlated domain
+     outages through a one-crew repair queue, spot evictions, checkpointed
+     retries, plus closed-loop controller and in-loop probe — on an
+     integer-grid workload must produce *bit-identical* start/finish
+     times, wave counts, fired reliability event records, and probe
+     buffers in the numpy reference engine and the JAX engine.
+  2. **One-call mixed grid**: a 16-point topology x repair-crews x
+     spot x checkpoint sweep must lower to ONE ``simulate_ensemble``
+     call (recompile-audited via ``capture_calls``) — padded never-firing
+     event rows keep reliability-free points in the same batch.
+  3. **Repair-delayed return**: a zone-outage run's realized capacity
+     timeline must recover at the repair crew's FIFO finish time, with at
+     least one queue-delayed recovery edge — never an instantaneous
+     refill. Folded into the drift gate (a violation forces it nonzero).
+
+``REPRO_BENCH_SMOKE=1`` (or ``--smoke``) shrinks the horizon for CI.
+
+  PYTHONPATH=src python -m benchmarks.run reliability
+  PYTHONPATH=src python benchmarks/reliability_bench.py --smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import jax
+
+from benchmarks.common import ART, fitted_params
+from repro.core import des, vdes
+from repro.core.experiment import ExperimentSpec, Sweep
+from repro.core.synthesizer import synthesize_workload
+from repro.ops import ReactiveController, Scenario
+from repro.ops.accounting import realized_schedule
+from repro.ops.scenario import compile_static
+from repro.reliability import (CheckpointSpec, DomainOutageModel,
+                               ReliabilitySpec, RepairSpec, SpotPoolSpec,
+                               TopologySpec, compile_reliability)
+
+OUT_PATH = os.path.abspath(os.path.join(ART, "BENCH_reliability.json"))
+
+
+def _integer_workload(horizon_s: float):
+    """Integer-time synthesized workload (arrival floor, exec ceil, no IO):
+    with the reliability spec's integer event grid (``time_quantum_s=1``)
+    every wave time is exactly representable in f32, so any nonzero drift
+    is a real parity break."""
+    params = fitted_params()
+    wl = synthesize_workload(params, jax.random.PRNGKey(31), horizon_s)
+    wl.arrival = np.floor(wl.arrival)
+    wl.exec_time = np.ceil(wl.exec_time)
+    wl.read_bytes[:] = 0.0
+    wl.write_bytes[:] = 0.0
+    return wl
+
+
+def _reliability(horizon_s: float) -> ReliabilitySpec:
+    """Dense enough that every channel fires inside the bench horizon:
+    zone+rack outages queueing on one crew, spot mass evictions, and
+    checkpointed (half-progress) retries."""
+    return ReliabilitySpec(
+        topology=TopologySpec(zones=2, racks_per_zone=2),
+        outages=DomainOutageModel(zone_mtbf_s=horizon_s / 6.0,
+                                  rack_mtbf_s=horizon_s / 8.0,
+                                  mttr_s=horizon_s / 24.0),
+        repair=RepairSpec(crews=1, repair_time_s=horizon_s / 24.0),
+        spot=SpotPoolSpec(frac=0.3, evict_mtbe_s=horizon_s / 4.0,
+                          reclaim_s=horizon_s / 48.0, discount=0.35),
+        checkpoint=CheckpointSpec(ckpt_frac=0.5),
+        time_quantum_s=1.0)
+
+
+def rows():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+    horizon = (0.125 if smoke else 0.5) * 86400.0
+    wl = _integer_workload(horizon)
+    base = ExperimentSpec(name="relbench", horizon_s=horizon,
+                          workload=wl).with_(
+        **{"capacity:compute_cluster": 6, "capacity:learning_cluster": 4})
+    plat = base.platform
+    rel_spec = _reliability(horizon)
+    rel = compile_reliability(rel_spec, wl, plat, horizon, seed=17)
+
+    ctrl_sc = Scenario(name="ctrl", controller=ReactiveController(
+        high_watermark=0.3, low_watermark=0.05, step=0.5, min_scale=0.5,
+        max_scale=3.0, interval_s=1800.0))
+    from repro.obs import ProbeSpec, compile_probe
+    comp = ctrl_sc.compile(wl, plat, horizon, seed=17)
+    probe = compile_probe(ProbeSpec(interval_s=900.0), horizon)
+
+    # --- 1. bit parity: the fully-loaded program, both engines
+    t0 = time.perf_counter()
+    t_np = des.simulate(wl, plat, scenario=comp, probe=probe,
+                        reliability=rel)
+    wall_np = time.perf_counter() - t0
+    t_jx = vdes.simulate_to_trace(wl, plat, scenario=comp, probe=probe,
+                                  reliability=rel)
+    waves_agree = bool(t_np.waves == t_jx.waves)
+    drift = 0.0
+    for k in ("start", "finish", "ready"):
+        if not np.array_equal(getattr(t_np, k), getattr(t_jx, k),
+                              equal_nan=True):
+            drift = 1.0
+    if not (np.array_equal(t_np.rel_times, t_jx.rel_times)
+            and np.array_equal(t_np.rel_caps, t_jx.rel_caps)):
+        drift = 1.0
+    probe_drift = float(np.max(np.abs(
+        np.nan_to_num(t_np.probe_vals) - np.nan_to_num(t_jx.probe_vals))))
+    if not waves_agree:
+        drift = 1.0
+    drift = max(drift, probe_drift)
+
+    # --- 2. one-call mixed grid (recompile audit)
+    from repro.analysis.harness import capture_calls
+    sweep = Sweep(dataclasses.replace(base, engine="jax",
+                                      reliability=rel_spec), {
+        "reliability:topology": [TopologySpec(2, 2), TopologySpec(3, 2)],
+        "reliability:repair": [RepairSpec(crews=1, repair_time_s=horizon
+                                          / 24.0),
+                               RepairSpec(crews=4, repair_time_s=horizon
+                                          / 24.0)],
+        "reliability:spot": [None, SpotPoolSpec(frac=0.3)],
+        "reliability:checkpoint": [None, CheckpointSpec(ckpt_frac=0.5)],
+    })
+    t0 = time.perf_counter()
+    with capture_calls("simulate_ensemble") as calls:
+        results = sweep.run()
+    sweep_wall = time.perf_counter() - t0
+    one_call = len(calls) == 1 and calls[0].args[0].shape[0] == 16
+    if not one_call:
+        drift = max(drift, 1.0)
+    avail = [r.summary["availability"]["availability"]["compute_cluster"]
+             for r in results if "availability" in r.summary]
+
+    # --- 3. repair-delayed capacity return on the realized timeline
+    sched = realized_schedule(t_np, compile_static(wl, plat))
+    dips = bool((sched.caps < plat.capacities[None, :]).any())
+    rises = np.nonzero((np.diff(sched.caps, axis=0) > 0).any(1))[0] + 1
+    up_times = {float(np.float32(e.t_up)) for e in rel.events
+                if e.t_up < horizon}
+    edges_are_up_events = all(float(t) in up_times
+                              for t in sched.times[rises])
+    delayed = {float(np.float32(e.t_up)) for e in rel.events
+               if e.repair_wait > 0 and e.t_up < horizon}
+    queue_delayed = bool(delayed & set(map(float, sched.times[rises])))
+    delayed_return_ok = dips and edges_are_up_events and queue_delayed
+    if not delayed_return_ok:
+        drift = max(drift, 1.0)
+
+    report = {
+        "pipelines": wl.n,
+        "horizon_s": horizon,
+        "n_rel_events": rel.n_events,
+        "reliability_parity_drift": drift,
+        "waves_agree": waves_agree,
+        "sweep_points": len(results),
+        "sweep_one_call": one_call,
+        "sweep_wall_s": sweep_wall,
+        "availability_min": min(avail) if avail else None,
+        "availability_max": max(avail) if avail else None,
+        "repair_queue_depth_max": rel.repair_depth_max,
+        "repair_wait_mean_s": float(rel.repair_waits.mean())
+        if rel.repair_waits.size else 0.0,
+        "n_straggler_repairs": rel.n_straggler_repairs,
+        "evicted_tasks": int(rel.evict_attempts.sum())
+        if rel.evict_attempts is not None else 0,
+        "delayed_return_ok": delayed_return_ok,
+        "numpy_wall_s": wall_np,
+        "smoke": smoke,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        ("reliability_parity", wall_np * 1e6,
+         f"drift={drift}_events={rel.n_events}_waves_agree={waves_agree}"),
+        ("reliability_sweep", sweep_wall * 1e6,
+         f"{len(results)}pts_one_call={one_call}"),
+        ("reliability_delayed_return", float(rel.repair_waits.max()
+                                             if rel.repair_waits.size
+                                             else 0.0) * 1e6,
+         f"ok={delayed_return_ok}_depth={rel.repair_depth_max}"),
+    ]
+
+
+def main():
+    if "--smoke" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for r in rows():
+        print(",".join(str(x) for x in r))
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ SUITES = [
     ("feedback", "benchmarks.feedback_bench"),
     ("obs", "benchmarks.obs_bench"),
     ("stream", "benchmarks.stream_bench"),
+    ("reliability", "benchmarks.reliability_bench"),
 ]
 
 # fast subset for CI: shrunken sizes via REPRO_BENCH_SMOKE ("kernels"
@@ -34,7 +35,7 @@ SUITES = [
 # the heavy reference-kernel rows and runs only the admission/compaction
 # parity section)
 SMOKE_SUITES = ("scenarios", "sweep", "controller", "feedback", "obs",
-                "kernels", "stream")
+                "kernels", "stream", "reliability")
 
 
 def main() -> None:

@@ -1,0 +1,59 @@
+"""Availability-vs-cost frontier under correlated failures (AIReSim-style):
+sweep the spot-pool share against repair-crew capacity and read the
+trade-off straight out of each point's ``availability`` summary block.
+
+A bigger spot pool is cheaper (``discount`` x on-demand) but loses more
+capacity to mass evictions; more repair crews return failed domains
+faster (capacity comes back at the crew's FIFO *finish* time, never
+instantaneously) but add standing cost you can price however you like.
+The ``"reliability:*"`` sweep axes batch like every other axis — the
+whole 4 x 3 grid below lowers to ONE jit+vmap ``simulate_ensemble`` call,
+reliability-free points riding the same batch via never-firing padding
+rows.
+
+  PYTHONPATH=src python examples/reliability_frontier.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+from benchmarks.common import fitted_params
+from repro.core.experiment import ExperimentSpec, Sweep
+from repro.reliability import (DomainOutageModel, ReliabilitySpec,
+                               RepairSpec, SpotPoolSpec, TopologySpec)
+
+params = fitted_params()
+HORIZON = 43200.0
+
+base = ExperimentSpec(
+    name="frontier", horizon_s=HORIZON, engine="jax", seed=7,
+    reliability=ReliabilitySpec(
+        topology=TopologySpec(zones=2, racks_per_zone=4),
+        outages=DomainOutageModel(zone_mtbf_s=HORIZON / 2.0,
+                                  rack_mtbf_s=HORIZON / 4.0,
+                                  mttr_s=HORIZON / 24.0),
+        time_quantum_s=1.0))
+
+SPOTS = [None] + [SpotPoolSpec(frac=f, evict_mtbe_s=HORIZON / 3.0,
+                               reclaim_s=HORIZON / 48.0) for f in
+                  (0.2, 0.4, 0.6)]
+CREWS = [RepairSpec(crews=c, repair_time_s=HORIZON / 24.0) for c in (1, 2, 6)]
+
+results = Sweep(base, {"reliability:spot": SPOTS,
+                       "reliability:repair": CREWS}).run(params)
+
+print(f"{'spot frac':>9} {'crews':>5} {'avail':>7} {'cost':>10} "
+      f"{'savings':>9} {'max wait s':>10} {'evicted':>7}")
+for (spot, crew), res in zip(((s, c) for s in SPOTS for c in CREWS), results):
+    a = res.summary["availability"]
+    cost = a["cost_split"]["on_demand_cost"] + a["cost_split"]["spot_cost"]
+    print(f"{(spot.frac if spot else 0.0):9.1f} {crew.crews:5d} "
+          f"{min(a['availability'].values()):7.3f} {cost:10.0f} "
+          f"{a['cost_split']['spot_savings']:9.0f} "
+          f"{a['repair']['max_wait_s']:10.0f} "
+          f"{a['eviction']['evicted_tasks'] if 'eviction' in a else 0:7d}")
+
+print("\nThe frontier: walk down the cost column until availability drops "
+      "below your SLO; adding crews buys back availability at the "
+      "saturated (1-crew) points where max repair wait explodes.")

@@ -29,7 +29,8 @@ from repro.core.runtime import FleetSpec, TriggerSpec
 
 #: static (hashable, compile-key) argnames of both vdes entry points
 STATIC_ARGNAMES = ("policy", "n_attempt_slots", "admission_sort",
-                   "n_ctrl_slots", "n_probe_slots", "return_state")
+                   "n_ctrl_slots", "n_probe_slots", "n_rel_slots",
+                   "return_state")
 
 
 @dataclasses.dataclass
@@ -153,10 +154,25 @@ def smoke_probe():
     return ProbeSpec(interval_s=60.0)
 
 
+def smoke_reliability():
+    """A reliability spec dense enough to fire inside the 300 s smoke
+    horizon: short domain MTBFs, one repair crew (so returns queue),
+    a spot pool with mass evictions."""
+    from repro.reliability import (DomainOutageModel, ReliabilitySpec,
+                                  RepairSpec, SpotPoolSpec, TopologySpec)
+    return ReliabilitySpec(
+        topology=TopologySpec(zones=2, racks_per_zone=2),
+        outages=DomainOutageModel(zone_mtbf_s=120.0, rack_mtbf_s=80.0,
+                                  mttr_s=30.0),
+        repair=RepairSpec(crews=1, repair_time_s=30.0),
+        spot=SpotPoolSpec(frac=0.4, evict_mtbe_s=150.0, reclaim_s=20.0),
+        time_quantum_s=1.0)   # integer event grid: the bit-parity config
+
+
 def smoke_spec(engine: str = "jax") -> ExperimentSpec:
     """One spec that lights up every kernel stage: completion/admission
     (always), control (ReactiveController), fleet (FleetSpec + TriggerSpec),
-    probe (ProbeSpec)."""
+    probe (ProbeSpec), reliability (ReliabilitySpec)."""
     return ExperimentSpec(
         name="analysis-smoke",
         platform=smoke_platform(),
@@ -169,6 +185,7 @@ def smoke_spec(engine: str = "jax") -> ExperimentSpec:
                             obs_noise=0.01, interval_s=20.0,
                             retrain_durations=(40.0, 5.0, 15.0)),
         probe=smoke_probe(),
+        reliability=smoke_reliability(),
     )
 
 
@@ -199,18 +216,21 @@ def smoke_stream_spec() -> ExperimentSpec:
     :func:`smoke_stream_source`): same scenario/fleet/trigger/probe stack,
     consumed windowwise."""
     return dataclasses.replace(smoke_spec(engine="jax-stream"),
-                               workload=None, source=smoke_stream_source())
+                               workload=None, source=smoke_stream_source(),
+                               reliability=None)  # stream engine rejects it
 
 
 def smoke_sweep() -> Sweep:
     """The representative mixed grid the recompile audit lowers: capacity x
-    controller x trigger x probe axes (2*2*2*2 = 16 points). Every axis
-    value must land in the batch tensors — none may become a fresh
-    compile-cache key."""
+    controller x trigger x probe x reliability axes (2*2*2*2*2 = 32
+    points). Every axis value must land in the batch tensors — none may
+    become a fresh compile-cache key (reliability points with and without
+    events share the batch via never-firing padding rows)."""
     base = smoke_spec(engine="jax")
     return Sweep(base, {
         "capacity:a": [3, 4],
         "controller": [None, smoke_controller()],
         "trigger:drift_threshold": [0.05, 0.2],
         "probe:interval_s": [60.0, 100.0],
+        "reliability": [None, smoke_reliability()],
     })

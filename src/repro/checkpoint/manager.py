@@ -126,7 +126,14 @@ class CheckpointManager:
 
 class FaultInjector:
     """Deterministic failure schedule for fault-tolerance tests: raises
-    RuntimeError at configured steps (once each)."""
+    RuntimeError at configured steps (once each).
+
+    Wired into the simulator's reliability subsystem:
+    :meth:`repro.reliability.CheckpointSpec.injector` maps a compiled
+    reliability timeline's outage start times onto training steps and
+    returns one of these — the same schedule that drains simulated
+    capacity crashes the real training loop (``launch/train.py``), so
+    fault-tolerance tests and simulation share one failure source."""
 
     def __init__(self, fail_at: List[int]):
         self.fail_at = set(fail_at)
@@ -141,7 +148,13 @@ class FaultInjector:
 class StragglerMonitor:
     """Step-time watchdog: flags steps slower than ``threshold x`` the
     trailing median (the straggler-mitigation signal; on a real pod this
-    triggers re-slicing / hot-spare swap, here it feeds logs + PipeSim)."""
+    triggers re-slicing / hot-spare swap, here it feeds logs + PipeSim).
+
+    Also the simulator's repair watchdog:
+    :func:`repro.reliability.compile_reliability` streams repair-crew
+    service durations through one of these, so pathologically slow repairs
+    surface in ``availability_summary`` (``n_stragglers``) through the
+    same statistic that flags slow training steps."""
 
     def __init__(self, window: int = 20, threshold: float = 2.5):
         self.times: List[float] = []

@@ -243,10 +243,39 @@ def stack_probes(probes, fleets=None) -> dict:
                 n_probe_slots=max(p.n_ticks for p in live))
 
 
+def stack_reliability(rels) -> dict:
+    """Pad/stack per-entry
+    :class:`~repro.reliability.compile.CompiledReliability`\\ s (None
+    entries allowed) into the reliability kwargs of
+    ``vdes.simulate_ensemble``: ``rel_times [B, RV]`` f32, ``rel_deltas
+    [B, RV, R]`` i32, plus the static ``n_rel_slots`` (the batch's largest
+    event count). Padding rows carry the never-firing sentinel time
+    (``des.CTRL_INF``) and a zero delta, so entries WITHOUT reliability —
+    or with fewer events — apply nothing: exactly the disabled semantics.
+    """
+    from repro.core.des import CTRL_INF
+    live = [r for r in rels if r is not None and r.n_events > 0]
+    if not live:
+        return {}
+    RV = max(r.n_events for r in live)
+    nres = live[0].deltas.shape[1]
+    ts, ds = [], []
+    for r in rels:
+        n = r.n_events if r is not None else 0
+        ts.append(np.pad(np.asarray(r.times, np.float32) if n else
+                         np.zeros(0, np.float32), (0, RV - n),
+                         constant_values=CTRL_INF))
+        ds.append(np.pad(np.asarray(r.deltas, np.int64) if n else
+                         np.zeros((0, nres), np.int64),
+                         ((0, RV - n), (0, 0))))
+    return dict(rel_times=np.stack(ts), rel_deltas=np.stack(ds).astype(
+        np.int32), n_rel_slots=RV)
+
+
 def batch_trace(out: dict, idx: int, wl: M.Workload,
                 capacities: np.ndarray,
                 with_scenario: bool = True, fleet=None,
-                probe=None) -> M.SimTrace:
+                probe=None, reliability=None) -> M.SimTrace:
     """Slice entry ``idx`` of a ``simulate_ensemble`` result back into a
     numpy :class:`SimTrace` for ``wl`` (dropping padded pipelines). With
     ``with_scenario=False`` the attempt/completion columns are omitted so
@@ -255,7 +284,9 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
     slices the entry's own model/tick/pool extents back out of the padded
     lifecycle tensors; ``probe`` (the entry's
     :class:`~repro.obs.probes.CompiledProbe`) likewise slices the probe
-    buffer to the entry's own tick grid."""
+    buffer to the entry's own tick grid; ``reliability`` (the entry's
+    :class:`~repro.reliability.compile.CompiledReliability`) decodes the
+    fired-event buffer back into ``rel_times``/``rel_caps``."""
     n = wl.n
     sl = lambda k: np.asarray(out[k][idx][:n], np.float64)
     ctrl_times = ctrl_caps = None
@@ -278,6 +309,11 @@ def batch_trace(out: dict, idx: int, wl: M.Workload,
             probe_times=np.asarray(probe.times, np.float64),
             probe_vals=np.asarray(
                 out["probe_vals"][idx][:probe.n_ticks], np.float64))
+    if reliability is not None and reliability.n_events > 0 \
+            and "rel_act" in out:
+        from repro.core.des import unpack_rel_actions
+        rt, rc = unpack_rel_actions(out["rel_act"][idx], out["rel_n"][idx])
+        fl_cols.update(rel_times=rt, rel_caps=rc)
     return M.SimTrace(
         start=sl("start"), finish=sl("finish"), ready=sl("ready"),
         n_tasks=wl.n_tasks.astype(np.int64), task_res=wl.task_res,

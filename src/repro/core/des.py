@@ -154,15 +154,16 @@ PROBE_INTERVAL, PROBE_T_FIRST, PROBE_T_END, PROBE_N_MODELS = \
 def probe_channel_count(nres: int) -> int:
     """Probe-buffer channel layout, shared by both engines and the
     :mod:`repro.obs.probes` naming helpers: per resource — queue depth,
-    busy slots, effective capacity, controller delta — then the fleet's
-    minimum performance and maximum staleness (min/max on purpose: they are
-    order-independent reductions, so the f32 buffers stay bit-identical
-    across the numpy and vmapped-JAX reduction orders), then the total
-    live-pipeline count (queued + running — the live-width timeline the
-    compaction driver's wave-rate changes are explained by; an integer,
-    exact in f32)."""
+    busy slots, effective capacity, controller delta, reliability delta
+    (cumulative outage/eviction capacity loss, <= 0 while domains are
+    down) — then the fleet's minimum performance and maximum staleness
+    (min/max on purpose: they are order-independent reductions, so the f32
+    buffers stay bit-identical across the numpy and vmapped-JAX reduction
+    orders), then the total live-pipeline count (queued + running — the
+    live-width timeline the compaction driver's wave-rate changes are
+    explained by; an integer, exact in f32)."""
     # integer channel-count arithmetic, no floats.  # parity: allow(engine-fma)
-    return 4 * nres + 3
+    return 5 * nres + 3
 
 # fleet-stage action kinds on the shared SimTrace action timeline
 FLEET_ACT_TRIGGER, FLEET_ACT_REDEPLOY = 0, 1
@@ -229,6 +230,16 @@ def unpack_ctrl_actions(buf, count):
     return acts[:, 0], np.rint(acts[:, 1:]).astype(np.int64)
 
 
+def unpack_rel_actions(buf, count):
+    """Decode an engine's ``[RV, 1+nres]`` reliability-event buffer (first
+    ``count`` rows valid: f32 time in column 0, the integer *cumulative*
+    per-resource reliability delta after) into ``(rel_times [count] f64,
+    rel_caps [count, nres] i64)`` — the ONE decoder shared by the
+    single-replica and batched trace paths. Same row layout as the
+    controller's realized-action buffer, so the decoding is identical."""
+    return unpack_ctrl_actions(buf, count)
+
+
 # mutable fleet-stage loop variables, in adoption order — the resume /
 # return_state state-dict keys for the windowed-cut hooks below
 _FLEET_STATE_KEYS = ("fl_perf0", "fl_dep", "fl_acc", "fl_dep_tick",
@@ -248,7 +259,8 @@ def _policy_key(policy: int, wl: M.Workload, svc_val: float,
 
 def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
              policy: int = POLICY_FIFO, scenario=None,
-             fleet=None, probe=None, *, time_budget: Optional[float] = None,
+             fleet=None, probe=None, reliability=None, *,
+             time_budget: Optional[float] = None,
              resume: Optional[dict] = None, return_state: bool = False):
     """``fleet`` is a :class:`repro.ops.scenario.CompiledFleet`: the model
     lifecycle (run-time view) stage. ``wl`` must then be the *extended*
@@ -267,6 +279,18 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
     ``[E, K]`` buffer, mirroring ``vdes._probe_stage`` op-for-op. The stage
     is physics-invisible: task timestamps are identical with and without a
     probe.
+
+    ``reliability`` is a :class:`repro.reliability.compile.
+    CompiledReliability`: a pre-sampled timeline of correlated domain
+    outage / repair-return / spot-eviction capacity deltas. Events join the
+    control stage's capacity-delta machinery (``free`` moves, drain
+    semantics — a down event never preempts running jobs) and are recorded
+    (f32 time + integer cumulative delta) into the trace's
+    ``rel_times``/``rel_caps`` timeline, mirroring ``vdes``'s reliability
+    buffer event-for-event. Like the capacity schedule — and unlike the
+    controller/probe grids — pending reliability events do NOT keep the
+    loop alive: events after the workload drains never fire (availability
+    integrals use the compile-time tensors instead).
 
     ``time_budget`` / ``resume`` / ``return_state`` mirror the vdes hooks
     (the windowed-cut semantics the streaming driver and the compaction
@@ -384,6 +408,20 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         p_tick = 0
         probe_vals = np.full((E_p, K_p), np.nan, f32)
 
+    # ---- reliability stage state: a pre-sampled capacity-delta timeline
+    # (f32 grid, compared exactly — times are f64 values of the compiled
+    # f32 grid, the same convention as the controller tick clock)
+    rel = reliability
+    if rel is not None and np.asarray(rel.times).shape[0] == 0:
+        rel = None
+    if rel is not None:
+        rel_times = np.asarray(rel.times, np.float64)   # exact f32 values
+        rel_deltas = np.asarray(rel.deltas, np.int64)
+        n_rel = rel_times.shape[0]
+        rel_ptr = 0
+        rel_cum = np.zeros(nres, np.int64)
+    rel_actions: list = []
+
     start = np.full((n, T), np.nan)
     finish = np.full((n, T), np.nan)
     ready = np.full((n, T), np.nan)
@@ -436,6 +474,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if pr is not None:
             t_probe, p_tick, probe_vals = (st["t_probe"], st["p_tick"],
                                            st["probe_vals"])
+        if rel is not None:
+            rel_ptr, rel_cum = st["rel_ptr"], st["rel_cum"]
+            rel_actions = st["rel_actions"]
 
     def enqueue(pid: int, t: float) -> None:
         tidx = int(task_idx[pid])
@@ -475,9 +516,12 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             else np.inf
         t_pr = float(t_probe) if pr is not None and t_probe < CTRL_INF \
             else np.inf
+        t_rel = float(rel_times[rel_ptr]) if rel is not None \
+            and rel_ptr < n_rel else np.inf
         # mirror: vdes._select_events — the global next-event minimum over
-        # task events, capacity changes, and the controller/fleet/probe grids
-        t_star = min(t_heap, t_cap, t_ctrl, t_fl, t_pr)
+        # task events, capacity changes, reliability events, and the
+        # controller/fleet/probe grids
+        t_star = min(t_heap, t_cap, t_ctrl, t_fl, t_pr, t_rel)
         if not np.isfinite(t_star):
             break                       # stalled forever: remaining tasks NaN
         if time_budget is not None and t_star > time_budget:
@@ -506,11 +550,24 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         if cap_ptr < K and cap_times[cap_ptr] == t_star:
             free += cap_vals[cap_ptr] - cap_vals[cap_ptr - 1]
             cap_ptr += 1
+        # mirror: vdes._control_stage — reliability capacity-delta event
+        # (domain outage / repair return / spot eviction); same drain
+        # semantics as a scheduled capacity decrease, applied before the
+        # controller evaluates so it reacts to post-outage capacity
+        if rel is not None and rel_ptr < n_rel and \
+                rel_times[rel_ptr] == t_star:
+            d = rel_deltas[rel_ptr]
+            free += d
+            rel_cum = rel_cum + d
+            rel_actions.append((f32(t_star), rel_cum.copy()))
+            rel_ptr += 1
         # mirror: vdes._control_stage — closed-loop evaluation tick (f32
         # arithmetic, operation-for-operation)
         if ctrl is not None and float(t_eval) == t_star:
             qlen = np.array([len(waiting[r]) for r in range(nres)], np.int64)
             cap_eff = cap_vals[cap_ptr - 1] + ctrl_tgt - base_i
+            if rel is not None:
+                cap_eff = cap_eff + rel_cum
             per_slot = qlen.astype(f32) / np.maximum(cap_eff, 1).astype(f32)
             if f32(t_star) - t_act >= c_cooldown:
                 new_cap = np.where(
@@ -602,25 +659,27 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
             sched_now = cap_vals[cap_ptr - 1]
             delta = (ctrl_tgt - base_i) if ctrl is not None \
                 else np.zeros(nres, np.int64)
-            cap_eff = sched_now + delta
+            rdelta = rel_cum if rel is not None else np.zeros(nres, np.int64)
+            cap_eff = sched_now + delta + rdelta
             row = np.empty(K_p, f32)
             row[0:nres] = [len(waiting[r]) for r in range(nres)]
             row[nres:2 * nres] = cap_eff - free      # busy = running jobs
             row[2 * nres:3 * nres] = cap_eff
             row[3 * nres:4 * nres] = delta
+            row[4 * nres:5 * nres] = rdelta
             if fl is not None:
                 dtp = np.maximum(f32(t_star) - fl_dep, f32(0.0)).astype(f32)
                 perf_p = fleet_performance_acc(fl_perf0, fl_acc, dtp,
                                                fleet_t, xp=np).astype(f32)
-                row[4 * nres] = perf_p.min()
-                row[4 * nres + 1] = fleet_staleness(fl_perf0, perf_p,
+                row[5 * nres] = perf_p.min()
+                row[5 * nres + 1] = fleet_staleness(fl_perf0, perf_p,
                                                     xp=np).astype(f32).max()
             else:
-                row[4 * nres] = row[4 * nres + 1] = np.nan
+                row[5 * nres] = row[5 * nres + 1] = np.nan
             # live pipelines = queued (waiting heaps) + running (each
             # running pipeline holds exactly one kind-0 finish event) —
             # integer, exact in f32, matches vdes's phase-mask count
-            row[4 * nres + 2] = (sum(len(waiting[r]) for r in range(nres))
+            row[5 * nres + 2] = (sum(len(waiting[r]) for r in range(nres))
                                  + sum(1 for e_ in ev if e_[1] == 0))
             probe_vals[e] = row
             t_nxt = f32(t_probe + p_interval)
@@ -638,6 +697,11 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         ctrl_times = np.array([t for t, _ in ctrl_actions], np.float64)
         ctrl_caps = (np.stack([c for _, c in ctrl_actions])
                      if ctrl_actions else np.zeros((0, nres), np.int64))
+    rel_times_out = rel_caps_out = None
+    if rel is not None:      # enabled reliability: timeline present (maybe empty)
+        rel_times_out = np.array([t for t, _ in rel_actions], np.float64)
+        rel_caps_out = (np.stack([c for _, c in rel_actions])
+                        if rel_actions else np.zeros((0, nres), np.int64))
 
     arrival_out = np.asarray(wl.arrival, np.float64)
     fl_cols = {}
@@ -660,6 +724,8 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         att_finish=att_finish,
         ctrl_times=ctrl_times,
         ctrl_caps=ctrl_caps,
+        rel_times=rel_times_out,
+        rel_caps=rel_caps_out,
         probe_times=np.asarray(pr.times, np.float64)
         if pr is not None else None,
         probe_vals=probe_vals.astype(np.float64) if pr is not None else None,
@@ -684,6 +750,9 @@ def simulate(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
         state["fleet_actions"] = fleet_actions
     if pr is not None:
         state.update(t_probe=t_probe, p_tick=p_tick, probe_vals=probe_vals)
+    if rel is not None:
+        state.update(rel_ptr=rel_ptr, rel_cum=rel_cum,
+                     rel_actions=rel_actions)
     return tr, state
 
 

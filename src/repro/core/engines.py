@@ -81,22 +81,76 @@ def _workload_key(spec):
             dataclasses.astuple(spec.platform.datastore))
 
 
+def _fold_reliability(comp, rel_c, w, plat):
+    """Fold one replica's compiled reliability *task-level* effects into
+    its compiled scenario: presampled spot-eviction retries add to the
+    ``attempts`` tensor, and a CheckpointSpec scales every retry slot of
+    ``attempt_service`` by ``1 - ckpt_frac`` (a checkpointed retrain only
+    re-runs the lost fraction — the generalization of the failing-attempt
+    ``fail_holds_frac`` hold). Scaled durations are computed in f32 so both
+    engines see bit-identical values (the compile-time f32 convention).
+    Capacity-level events ride the separate ``reliability=`` engine kwarg.
+    Returns ``comp`` unchanged when the reliability has no task effects; a
+    scenario-less spec gets the inert placeholder scenario first."""
+    if rel_c is None:
+        return comp
+    ev, ck = rel_c.evict_attempts, rel_c.ckpt_frac
+    if ev is None and ck is None:
+        return comp
+    if comp is None:
+        from repro.ops.capacity import static_schedule
+        from repro.ops.scenario import CompiledScenario
+        comp = CompiledScenario(
+            schedule=static_schedule(plat.capacities),
+            attempts=np.ones(w.task_type.shape, np.int64),
+            backoff=vdes._NO_RETRY_BACKOFF)
+    att = np.asarray(comp.attempts, np.int64)
+    if ev is not None:
+        att = att + np.asarray(ev, np.int64)
+    asv = getattr(comp, "attempt_service", None)
+    if ck is not None:
+        A = int(max(int(att.max()),
+                    asv.shape[2] if asv is not None else 0))
+        if A > 1:
+            if asv is None:
+                base = np.asarray(w.service_time(plat.datastore),
+                                  np.float64)
+                asv = np.repeat(base[..., None], A, -1)
+            elif asv.shape[2] < A:
+                # engines clip the attempt index at A-1: repeating the
+                # last slot preserves the entry's semantics exactly
+                asv = np.concatenate(
+                    [asv, np.repeat(asv[..., -1:], A - asv.shape[2], -1)],
+                    -1)
+            asv = np.asarray(asv, np.float64).copy()
+            asv[..., 1:] = (asv[..., 1:].astype(np.float32)
+                            * np.float32(1.0 - ck)).astype(np.float64)
+    return dataclasses.replace(comp, attempts=att, attempt_service=asv)
+
+
 def _spec_workloads(spec, params, cache=None):
     """The spec's replica workloads + per-replica compiled scenarios and
     compiled fleets + the spec's compiled telemetry probe (None without a
     :class:`~repro.obs.probes.ProbeSpec`; probes are deterministic, so one
-    compile covers every replica).
+    compile covers every replica) + per-replica compiled reliability
+    timelines (None without a
+    :class:`~repro.reliability.ReliabilitySpec`).
 
     Seed conventions match the historical ``run_experiment`` exactly (single
     replica: PRNGKey(seed); ensembles: split(PRNGKey(seed), R); scenario /
-    fleet replica r compiles with seed + 1000*r) so batched and serial
-    execution see identical random draws. ``cache`` (dict) shares synthesis
-    across grid points whose workload axes agree.
+    fleet / reliability replica r compiles with seed + 1000*r) so batched
+    and serial execution see identical random draws. ``cache`` (dict)
+    shares synthesis across grid points whose workload axes agree.
 
     With a :class:`~repro.core.runtime.FleetSpec` on the spec, each replica
     workload is *extended* with the latent retraining pool BEFORE the
     scenario compiles — failure/retry draws then cover retraining pipelines
-    too, identically in both engines.
+    too, identically in both engines. Reliability compiles after the same
+    extension (spot-eviction draws cover retraining pipelines), and its
+    task-level effects (eviction retries, checkpointed retry scaling) fold
+    into the compiled scenario via :func:`_fold_reliability` — composition
+    with ``fail_holds_frac`` is rejected by
+    :func:`repro.reliability.check_no_double_apply`.
     """
     if spec.workload is not None:
         wls = [spec.workload] * spec.n_replicas
@@ -137,29 +191,47 @@ def _spec_workloads(spec, params, cache=None):
             fleets.append(cf)
             ext.append(w2)
         wls = ext
+    rels = None
+    if getattr(spec, "reliability", None) is not None:
+        from repro.reliability import (check_no_double_apply,
+                                       compile_reliability)
+        check_no_double_apply(spec.reliability, spec.scenario)
+        rels = [compile_reliability(spec.reliability, w, spec.platform,
+                                    spec.horizon_s,
+                                    seed=spec.seed + 1000 * r)
+                for r, w in enumerate(wls)]
     compiled = None
     if spec.scenario is not None:
         compiled = [spec.scenario.compile(w, spec.platform, spec.horizon_s,
                                           seed=spec.seed + 1000 * r,
                                           policy=spec.policy)
                     for r, w in enumerate(wls)]
+    if rels is not None:
+        compiled = [_fold_reliability(
+            compiled[r] if compiled is not None else None, rels[r], w,
+            spec.platform) for r, w in enumerate(wls)]
+        if all(c is None for c in compiled):
+            compiled = None
     probe = None
     if getattr(spec, "probe", None) is not None:
         from repro.obs.probes import compile_probe
         probe = compile_probe(
             spec.probe, spec.horizon_s,
             n_models=fleets[0].n_models if fleets is not None else 0)
-    return wls, compiled, fleets, probe
+    return wls, compiled, fleets, probe, rels
 
 
-def _summarize(spec, rec, compiled, tr=None):
+def _summarize(spec, rec, compiled, tr=None, rel=None):
     """Summary for one replica. ``tr`` (the SimTrace) carries the
     engine-recorded controller action timeline: under closed-loop control
     cost/utilization integrate the *realized* capacity schedule, not the
     planned one (identical — same object — when the controller never
     acted, so scenario-less and open-loop summaries are unchanged). It also
     carries the fleet-stage tensors, which fold in as the ``lifecycle``
-    summary block."""
+    summary block. ``rel`` (the replica's
+    :class:`~repro.reliability.CompiledReliability`) folds in as the
+    ``availability`` block (downtime integrals, repair-queue stats, spot
+    cost split)."""
     realized = None
     if compiled is not None and tr is not None:
         from repro.ops.accounting import realized_schedule
@@ -170,19 +242,23 @@ def _summarize(spec, rec, compiled, tr=None):
     if tr is not None and getattr(tr, "fleet_perf", None) is not None:
         from repro.ops.accounting import lifecycle_summary
         lifecycle = lifecycle_summary(tr)
-    return trace.summarize(
+    s = trace.summarize(
         rec, spec.platform.capacities, spec.horizon_s,
         schedule=compiled.schedule if compiled is not None else None,
         cost_rates=spec.platform.cost_rates if compiled is not None else None,
         slo=spec.scenario.slo if spec.scenario is not None else None,
         realized=realized, lifecycle=lifecycle)
+    if rel is not None:
+        from repro.ops.accounting import availability_summary
+        s["availability"] = availability_summary(rel, spec.platform, tr=tr)
+    return s
 
 
-def _single_result(spec, wl, compiled, tr, wall):
+def _single_result(spec, wl, compiled, tr, wall, rel=None):
     from repro.core.experiment import ExperimentResult
     from repro.core.runtime import lifecycle_result
     rec = trace.flatten_trace(tr, wl)
-    summary = _summarize(spec, rec, compiled, tr)
+    summary = _summarize(spec, rec, compiled, tr, rel=rel)
     summary["wall_s"] = wall
     # pipelines that actually entered the platform (latent, never-activated
     # retraining-pool rows are excluded by flatten_trace)
@@ -232,25 +308,31 @@ class NumpyEngine:
 
     def run(self, spec, params=None, _cache=None):
         t0 = time.perf_counter()
-        wls, compiled, fleets, probe = _spec_workloads(spec, params,
-                                                       cache=_cache)
+        wls, compiled, fleets, probe, rels = _spec_workloads(spec, params,
+                                                             cache=_cache)
         if spec.n_replicas == 1:
             comp = compiled[0] if compiled is not None else None
             tr = des.simulate(wls[0], spec.platform, spec.policy,
                               scenario=comp,
                               fleet=fleets[0] if fleets is not None else None,
-                              probe=probe)
+                              probe=probe,
+                              reliability=rels[0] if rels is not None
+                              else None)
             return _single_result(spec, wls[0], comp, tr,
-                                  time.perf_counter() - t0)
+                                  time.perf_counter() - t0,
+                                  rel=rels[0] if rels is not None else None)
         recs, sums = [], []
         for r, w in enumerate(wls):
             comp = compiled[r] if compiled is not None else None
             tr = des.simulate(w, spec.platform, spec.policy, scenario=comp,
                               fleet=fleets[r] if fleets is not None else None,
-                              probe=probe)
+                              probe=probe,
+                              reliability=rels[r] if rels is not None
+                              else None)
             rec = trace.flatten_trace(tr, w)
             recs.append(rec)
-            sums.append(_summarize(spec, rec, comp, tr))
+            sums.append(_summarize(spec, rec, comp, tr,
+                                   rel=rels[r] if rels is not None else None))
         return _aggregate_replicas(spec, sums, recs,
                                    time.perf_counter() - t0)
 
@@ -280,15 +362,19 @@ class JaxEngine:
     def run(self, spec, params=None):
         if spec.n_replicas <= 1:
             t0 = time.perf_counter()
-            wls, compiled, fleets, probe = _spec_workloads(spec, params)
+            wls, compiled, fleets, probe, rels = _spec_workloads(spec,
+                                                                 params)
             comp = compiled[0] if compiled is not None else None
             tr = vdes.simulate_to_trace(wls[0], spec.platform, spec.policy,
                                         scenario=comp,
                                         fleet=fleets[0]
                                         if fleets is not None else None,
-                                        probe=probe)
+                                        probe=probe,
+                                        reliability=rels[0]
+                                        if rels is not None else None)
             return _single_result(spec, wls[0], comp, tr,
-                                  time.perf_counter() - t0)
+                                  time.perf_counter() - t0,
+                                  rel=rels[0] if rels is not None else None)
         return self.run_sweep([spec], params)[0]
 
     def run_sweep(self, specs: Sequence, params=None) -> List:
@@ -317,19 +403,20 @@ class JaxEngine:
                                                               nres_max))
                 for s in specs]
 
-        entries = []    # (spec index, workload, compiled, fleet, probe)
+        entries = []  # (spec index, workload, compiled, fleet, probe, rel)
         wl_cache = {}   # distinct workloads synthesized once for the grid
         for g, spec in enumerate(exec_specs):
-            wls, compiled, fleets, probe = _spec_workloads(spec, params,
-                                                           cache=wl_cache)
+            wls, compiled, fleets, probe, rels = _spec_workloads(
+                spec, params, cache=wl_cache)
             for r, w in enumerate(wls):
                 entries.append(
                     (g, w, compiled[r] if compiled is not None else None,
-                     fleets[r] if fleets is not None else None, probe))
+                     fleets[r] if fleets is not None else None, probe,
+                     rels[r] if rels is not None else None))
 
-        plats = [exec_specs[g].platform for g, _, _, _, _ in entries]
+        plats = [exec_specs[g].platform for g, *_ in entries]
         try:
-            cols = batching.pad_workloads([w for _, w, _, _, _ in entries],
+            cols = batching.pad_workloads([w for _, w, *_ in entries],
                                           plats)
         except ValueError as e:          # genuinely incompatible grid
             warnings.warn(
@@ -339,16 +426,16 @@ class JaxEngine:
             return get_engine("numpy").run_sweep(specs, params)
         n_max = cols.pop("n_max")
         caps = np.stack([p.capacities for p in plats]).astype(np.int32)
-        pol = np.array([exec_specs[g].policy for g, _, _, _, _ in entries],
+        pol = np.array([exec_specs[g].policy for g, *_ in entries],
                        np.int32)
         uniform_policy = bool((pol == pol[0]).all())
 
         scen_kw = {}
-        if any(c is not None for _, _, c, _, _ in entries):
+        if any(c is not None for _, _, c, _, _, _ in entries):
             from repro.ops.scenario import CompiledScenario
             from repro.ops.capacity import static_schedule
             comps = []
-            for g, w, c, _, _ in entries:
+            for g, w, c, _, _, _ in entries:
                 if c is None:           # inert placeholder row
                     c = CompiledScenario(
                         schedule=static_schedule(
@@ -358,23 +445,27 @@ class JaxEngine:
                 comps.append(c)
             horizon = max(s.horizon_s for s in specs)
             services = [cols["service"][i][: w.n]
-                        for i, (_, w, _, _, _) in enumerate(entries)]
+                        for i, (_, w, *_) in enumerate(entries)]
             scen_kw = batching.stack_scenarios(comps, n_max, horizon,
                                                services=services)
         # lifecycle (fleet/trigger) tensors batch per entry the same way —
         # a whole trigger-policy grid rides ONE jit+vmap call
-        fleet_kw = batching.stack_fleets([f for _, _, _, f, _ in entries],
+        fleet_kw = batching.stack_fleets([f for _, _, _, f, _, _ in entries],
                                          n_max)
         # telemetry probes too: probed and unprobed points share one batch
-        probe_kw = batching.stack_probes([p for _, _, _, _, p in entries],
-                                         [f for _, _, _, f, _ in entries])
+        probe_kw = batching.stack_probes([p for _, _, _, _, p, _ in entries],
+                                         [f for _, _, _, f, _, _ in entries])
+        # reliability event timelines: padded rows never fire, so points
+        # with and without reliability share the one batch
+        rel_kw = batching.stack_reliability(
+            [rl for _, _, _, _, _, rl in entries])
 
         out = self._ensemble(
             *[jax.numpy.asarray(cols[k]) for k in
               ("arrival", "n_tasks", "task_res", "service", "priority")],
             jax.numpy.asarray(caps), int(pol[0]),
             policies=None if uniform_policy else pol, **scen_kw, **fleet_kw,
-            **probe_kw)
+            **probe_kw, **rel_kw)
         out = {k: np.asarray(v) for k, v in out.items()}
         wall = time.perf_counter() - t0
 
@@ -383,18 +474,20 @@ class JaxEngine:
             recs, sums = [], []
             last_tr = None
             for r in range(spec.n_replicas):
-                _, wl, comp, fl, pr = entries[i + r]
+                _, wl, comp, fl, pr, rl = entries[i + r]
                 tr = batching.batch_trace(out, i + r, wl,
                                           spec.platform.capacities,
                                           with_scenario=comp is not None,
-                                          fleet=fl, probe=pr)
+                                          fleet=fl, probe=pr,
+                                          reliability=rl)
                 last_tr = tr
                 rec = trace.flatten_trace(tr, wl)
                 recs.append(rec)
                 # summarize against the executed (possibly padded) platform
                 # so cost/schedule tensors line up; padded pools contribute
                 # zero everywhere
-                sums.append(_summarize(exec_specs[g], rec, comp, tr))
+                sums.append(_summarize(exec_specs[g], rec, comp, tr,
+                                       rel=rl))
             i += spec.n_replicas
             if spec.n_replicas == 1:
                 from repro.core.experiment import ExperimentResult
@@ -439,6 +532,11 @@ class JaxCompactEngine(JaxEngine):
     def _ensemble(self, *args, **kwargs):
         from repro.core.compaction import (CompactionLog,
                                            simulate_ensemble_compacted)
+        if "rel_times" in kwargs:
+            raise NotImplementedError(
+                "reliability event timelines are not yet supported by the "
+                "segmented compaction driver; run reliability specs on the "
+                "'jax' (one-call batched) or 'numpy' engine")
         kwargs.setdefault("admission_sort", self.admission_sort)
         self.last_log = CompactionLog()
         return simulate_ensemble_compacted(
@@ -508,6 +606,10 @@ class JaxStreamEngine:
             raise ValueError(
                 "jax-stream is a single-replica engine (a stream has one "
                 "realization); use n_replicas=1 or the 'jax' engine")
+        if getattr(spec, "reliability", None) is not None:
+            raise ValueError(
+                "jax-stream does not support reliability specs yet (event "
+                "timelines span windows); use the 'jax' or 'numpy' engine")
         from repro.core.experiment import ExperimentResult
         from repro.stream import stream_simulate
         sr = stream_simulate(

@@ -87,6 +87,11 @@ class ExperimentSpec:
     fleet: Optional[FleetSpec] = None
     trigger: Optional[TriggerSpec] = None
     probe: Optional[object] = None   # repro.obs.probes.ProbeSpec
+    # a repro.reliability.ReliabilitySpec: correlated failure domains,
+    # finite repair crews, spot eviction, checkpointed retrains — compiled
+    # per replica (seed + 1000*r) into the engines' control-stage event
+    # timeline (see repro.reliability.compile)
+    reliability: Optional[object] = None
     # a repro.stream.TraceSource: the streamed alternative to ``workload``.
     # The "jax-stream" engine consumes it incrementally (windowed, bounded
     # memory); every other engine materializes it into a pinned workload
@@ -98,7 +103,8 @@ class ExperimentSpec:
         plain field names, ``**{"capacity:<resource>": n}`` to resize one
         pool of the platform, ``**{"trigger:<field>": v}`` /
         ``**{"fleet:<field>": v}`` / ``**{"probe:<field>": v}`` to update
-        one field of the lifecycle/telemetry specs (creating default
+        (or ``**{"reliability:<field>": v}``) to update
+        one field of the lifecycle/telemetry/reliability specs (creating default
         ``TriggerSpec()`` / ``FleetSpec()`` / ``ProbeSpec()`` if the
         spec has none — the ``"trigger:drift_threshold"`` /
         ``"trigger:cooldown_s"`` / ``"probe:interval_s"`` Sweep axes), or
@@ -128,6 +134,13 @@ class ExperimentSpec:
                 pr = out.probe if out.probe is not None else ProbeSpec()
                 out = dataclasses.replace(out, probe=dataclasses.replace(
                     pr, **{k.split(":", 1)[1]: v}))
+            elif k.startswith("reliability:"):
+                from repro.reliability import ReliabilitySpec
+                rl = out.reliability if out.reliability is not None \
+                    else ReliabilitySpec()
+                out = dataclasses.replace(
+                    out, reliability=dataclasses.replace(
+                        rl, **{k.split(":", 1)[1]: v}))
             else:
                 out = dataclasses.replace(out, **{k: v})
         if ctrl is not _UNSET and not (ctrl is None and out.scenario is None):

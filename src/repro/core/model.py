@@ -215,6 +215,16 @@ class SimTrace:
     # integrate what the engines actually provisioned
     ctrl_times: Optional[np.ndarray] = None
     ctrl_caps: Optional[np.ndarray] = None
+    # reliability event timeline: rel_times [E] the fired outage / repair /
+    # eviction event times and rel_caps [E, R] the integer *cumulative*
+    # per-resource reliability capacity delta after each event
+    # (engine-recorded, identical in both engines; <= 0 while domains are
+    # down). None when the run had no compiled reliability scenario; empty
+    # arrays when one was enabled but no event fired before the run
+    # drained. ops.accounting.realized_schedule splices this onto the
+    # planned schedule alongside the controller timeline.
+    rel_times: Optional[np.ndarray] = None
+    rel_caps: Optional[np.ndarray] = None
     # model-lifecycle (fleet) stage outputs. fleet_perf/fleet_stale [E, M]:
     # true per-model performance / staleness at each drift-evaluation tick
     # (fleet_ticks [E]); fleet_times/fleet_kind/fleet_model [A]: the
@@ -245,12 +255,17 @@ class SimTrace:
 
     def action_timeline(self):
         """The SHARED in-engine action timeline: every discrete action an
-        in-engine actor took, time-sorted. Controller capacity moves appear
-        as ``("scale", t, target_vector)``; model-lifecycle actions as
+        in-engine actor took, time-sorted. Reliability events appear as
+        ``("outage", t, cumulative_delta_vector)`` (any outage / repair /
+        eviction capacity move); controller capacity moves as
+        ``("scale", t, target_vector)``; model-lifecycle actions as
         ``("trigger", t, model_id)`` / ``("redeploy", t, model_id)``. Ties
-        keep controller actions first (the control stage runs before the
-        fleet stage within a wave)."""
+        keep reliability events first, then controller actions (the order
+        the control stage applies them within a wave)."""
         rows = []
+        if self.rel_times is not None:
+            for t, caps in zip(self.rel_times, self.rel_caps):
+                rows.append((float(t), -1, ("outage", float(t), caps)))
         if self.ctrl_times is not None:
             for t, caps in zip(self.ctrl_times, self.ctrl_caps):
                 rows.append((float(t), 0, ("scale", float(t), caps)))

@@ -12,13 +12,18 @@ Each loop iteration (a **wave**) is composed of up to six named kernel stages:
      arrival path after a deterministic bounded exponential backoff
      ``min(base * mult**k, cap)``; arrivals and successor tasks enqueue;
   3. **control** (``_control_stage``): the pending piecewise-constant
-     capacity change applies, then the *closed-loop controller* (if
-     configured) observes the live queue lengths and adjusts capacity —
-     entirely inside the jitted loop, no Python-level replanning. Each
-     integer-target move is appended to a preallocated ``[E, 1+nres]``
-     action buffer (the *realized capacity timeline*; ``E`` bounded by the
-     compile-time evaluation-tick grid) so cost/utilization accounting can
-     charge what was actually provisioned;
+     capacity change applies, then the pending *reliability event* (if a
+     compiled reliability timeline is given: correlated domain outages,
+     repair-queue capacity returns, spot evictions — pre-sampled by
+     :func:`repro.reliability.compile.compile_reliability`) applies its
+     capacity delta and is recorded into a preallocated ``[RV, 1+nres]``
+     event buffer, then the *closed-loop controller* (if configured)
+     observes the live queue lengths and adjusts capacity — entirely inside
+     the jitted loop, no Python-level replanning. Each integer-target move
+     is appended to a preallocated ``[E, 1+nres]`` action buffer (the
+     *realized capacity timeline*; ``E`` bounded by the compile-time
+     evaluation-tick grid) so cost/utilization accounting can charge what
+     was actually provisioned;
   4. **admission** (``_admission_stage``): one ranked admission round per
      resource via a single fused lexicographic ``lax.sort`` over
      ``(resource, policy key, enqueue wave)`` keys (``num_keys=3``) —
@@ -264,7 +269,8 @@ def admission_mask_dense(res_q: jnp.ndarray, pkey: jnp.ndarray,
 
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots", "n_probe_slots", "return_state"))
+                          "n_ctrl_slots", "n_probe_slots", "n_rel_slots",
+                          "return_state"))
 def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              cap_times: Optional[jnp.ndarray] = None,
              cap_vals: Optional[jnp.ndarray] = None,
@@ -279,6 +285,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
              fleet=None, trig=None, obs_noise=None, drift_inc=None,
              pool_gain=None, pool_base=None, n_pool_eff=None,
              probe=None, n_probe_slots: Optional[int] = None,
+             rel_times=None, rel_deltas=None,
+             n_rel_slots: Optional[int] = None,
              resume=None, wave_budget=None, time_budget=None,
              return_state: bool = False):
     """Run one replica. Returns dict with start/finish/ready [N, T] (f32;
@@ -339,6 +347,19 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     buffer, returned as ``probe_vals`` with the tick count ``probe_n``. The
     numpy engine mirrors the sampling f32-op-for-op, so probe buffers are
     parity-gated like task timestamps. The stage is physics-invisible.
+
+    The **reliability stage** activates with ``rel_times [RV]`` (f32,
+    strictly increasing; padded tail rows at ``INF`` never fire) /
+    ``rel_deltas [RV, nres]`` (integer capacity deltas) plus the static
+    ``n_rel_slots = RV`` — the pre-sampled correlated outage / repair /
+    eviction timeline from :func:`repro.reliability.compile.
+    compile_reliability`. Each event joins the next-event minimum, applies
+    its delta through the control stage's capacity machinery (drain
+    semantics: a down event never preempts), and is recorded (f32 time +
+    integer cumulative delta) into a ``[RV, 1+nres]`` buffer returned as
+    ``rel_act``/``rel_n``. Like the capacity schedule — and unlike the
+    controller/probe grids — pending reliability events do NOT keep the
+    loop alive. The numpy engine mirrors the stage op-for-op.
 
     **Segment-restart hooks** (for the active-replica compaction driver,
     :mod:`repro.core.compaction`): ``resume`` is a prior carry pytree (the
@@ -414,6 +435,13 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         c_enabled = c_interval > 0.0
         base_i = jnp.round(c_base).astype(jnp.int32)
 
+    has_rel = rel_times is not None and n_rel_slots is not None \
+        and n_rel_slots > 0
+    if has_rel:
+        rel_t = jnp.asarray(rel_times, jnp.float32)      # [RV]
+        rel_d = jnp.asarray(rel_deltas, jnp.int32)       # [RV, nres]
+        RV = n_rel_slots
+
     state = dict(
         phase=jnp.full((n,), _NOT_ARRIVED, jnp.int32),
         task_idx=jnp.zeros((n,), jnp.int32),
@@ -446,6 +474,15 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         state["ctrl_act"] = jnp.full((n_ctrl_slots, 1 + nres), jnp.nan,
                                      jnp.float32)
         state["ctrl_n"] = jnp.int32(0)
+    if has_rel:
+        state["rel_idx"] = jnp.int32(0)    # next pending compiled event
+        state["rel_cum"] = jnp.zeros((nres,), jnp.int32)
+        # fired-event buffer: [RV, 1+nres] rows of (f32 event time, integer
+        # cumulative per-resource reliability delta) — same row layout as
+        # the controller's realized-action buffer
+        state["rel_act"] = jnp.full((n_rel_slots, 1 + nres), jnp.nan,
+                                    jnp.float32)
+        state["rel_n"] = jnp.int32(0)
     if has_fleet:
         state["fl_perf0"] = fleet_t[:, FLEET_PERF0]  # current post-deploy perf
         state["fl_dep"] = jnp.zeros((M_,), jnp.float32)   # deployed_at
@@ -484,10 +521,14 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
 
     def _select_events(s):
         """Stage 1: the global next-event time. Task events, the next
-        scheduled capacity change, and the next controller tick all
-        participate in the minimum."""
+        scheduled capacity change, the next reliability event, and the next
+        controller tick all participate in the minimum."""
         t_cap = next_cap_time(s["cap_idx"])
         t_star = jnp.minimum(jnp.min(s["t_next"]), t_cap)
+        if has_rel:
+            ri = jnp.clip(s["rel_idx"], 0, RV - 1)
+            t_rel = jnp.where(s["rel_idx"] < RV, rel_t[ri], INF)
+            t_star = jnp.minimum(t_star, t_rel)
         if has_ctrl:
             t_star = jnp.minimum(t_star, s["t_eval"])
         if has_fleet:
@@ -544,6 +585,8 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
 
     def _control_stage(s, t_star, t_cap):
         """Stage 3: the pending scheduled capacity change applies, then the
+        pending reliability event (domain outage / repair return / spot
+        eviction) applies its capacity delta and is recorded, then the
         closed-loop controller observes live queue lengths and adjusts
         capacity — all before the admission round."""
         s = dict(s)
@@ -553,6 +596,30 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         free = s["free"] + jnp.where(cap_changing, cap_vals[hi] - cap_vals[lo],
                                      0)
         cap_idx = s["cap_idx"] + cap_changing.astype(jnp.int32)
+        if has_rel:
+            # reliability capacity-delta event: same drain semantics as a
+            # scheduled decrease, applied before the controller evaluates
+            # so it reacts to post-outage capacity (numpy mirrors)
+            ri = jnp.clip(s["rel_idx"], 0, RV - 1)
+            rel_firing = (s["rel_idx"] < RV) & (rel_t[ri] == t_star)
+            drow = jnp.where(rel_firing, rel_d[ri], 0)
+            free = free + drow
+            rel_cum = s["rel_cum"] + drow
+            # record (t, cumulative delta) with the controller buffer's
+            # dense one-hot row-write pattern (scatters serialize on CPU);
+            # cumulative deltas can be negative, so a where-write, not
+            # _onehot_rows
+            ridx = jnp.minimum(s["rel_n"], n_rel_slots - 1)
+            rrow = jnp.concatenate([jnp.reshape(t_star, (1,)),
+                                    rel_cum.astype(jnp.float32)])
+            oh_r = (jnp.arange(n_rel_slots, dtype=jnp.int32)
+                    == ridx)[:, None]
+            s["rel_act"] = jnp.where(oh_r & rel_firing, rrow[None, :],
+                                     s["rel_act"])
+            s["rel_n"] = jnp.minimum(
+                s["rel_n"] + rel_firing.astype(jnp.int32), n_rel_slots)
+            s["rel_cum"] = rel_cum
+            s["rel_idx"] = s["rel_idx"] + rel_firing.astype(jnp.int32)
         if has_ctrl:
             firing = c_enabled & (s["t_eval"] == t_star)
             queued = s["phase"] == _QUEUED
@@ -567,6 +634,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
                 axis=0, dtype=jnp.int32)
             sched_now = cap_vals[jnp.clip(cap_idx - 1, 0, K - 1)]
             cap_eff = sched_now + s["ctrl_tgt"] - base_i
+            if has_rel:
+                # the controller watches post-outage effective capacity
+                cap_eff = cap_eff + s["rel_cum"]
             per_slot = (qlen.astype(jnp.float32)
                         / jnp.maximum(cap_eff, 1).astype(jnp.float32))
             can_act = firing & (t_star - s["t_act"] >= c_cooldown)
@@ -833,7 +903,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
             delta = s["ctrl_tgt"] - base_i
         else:
             delta = jnp.zeros((nres,), jnp.int32)
-        cap_eff = sched_now + delta
+        rdelta = s["rel_cum"] if has_rel \
+            else jnp.zeros((nres,), jnp.int32)
+        cap_eff = sched_now + delta + rdelta
         busy = cap_eff - s["free"]                       # running jobs
         if has_fleet:
             # fleet channels reduce with min/max (order-independent, so the
@@ -864,6 +936,7 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
         row = jnp.concatenate(
             [qlen.astype(jnp.float32), busy.astype(jnp.float32),
              cap_eff.astype(jnp.float32), delta.astype(jnp.float32),
+             rdelta.astype(jnp.float32),
              f_perf.astype(jnp.float32), f_stale.astype(jnp.float32),
              live.astype(jnp.float32)[None]])
         # dense one-hot row write (a traced-index scatter would serialize
@@ -938,6 +1011,9 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
     if rec_ctrl:
         res["ctrl_act"] = out["ctrl_act"]
         res["ctrl_n"] = out["ctrl_n"]
+    if has_rel:
+        res["rel_act"] = out["rel_act"]
+        res["rel_n"] = out["rel_n"]
     if has_fleet:
         for k in ("fleet_perf", "fleet_stale", "fleet_act", "fleet_n",
                   "pool_arr", "pool_model", "pool_next"):
@@ -959,13 +1035,16 @@ def simulate(vwl: VWorkload, capacities: jnp.ndarray, policy: int = POLICY_FIFO,
 
 def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = None,
                       policy: int = POLICY_FIFO, scenario=None,
-                      fleet=None, probe=None) -> M.SimTrace:
+                      fleet=None, probe=None, reliability=None) -> M.SimTrace:
     """Convenience: numpy Workload in, SimTrace out (single replica).
     ``scenario`` is a :class:`repro.ops.scenario.CompiledScenario`;
     ``fleet`` a :class:`repro.ops.scenario.CompiledFleet` (``wl`` must then
     be the extended workload carrying the latent retraining-pool rows);
     ``probe`` a :class:`repro.obs.probes.CompiledProbe` (in-loop telemetry
-    sampling onto the trace's ``probe_times``/``probe_vals``)."""
+    sampling onto the trace's ``probe_times``/``probe_vals``);
+    ``reliability`` a :class:`repro.reliability.compile.CompiledReliability`
+    (correlated outage/repair/eviction capacity events recorded onto the
+    trace's ``rel_times``/``rel_caps``)."""
     platform = platform or M.PlatformConfig()
     att_start = att_finish = None
     ctrl_times = ctrl_caps = None
@@ -990,6 +1069,13 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         hdr[PROBE_N_MODELS] = np.float32(fl.n_models if fl is not None else 0)
         fleet_kw.update(probe=jnp.asarray(hdr),
                         n_probe_slots=int(pr.n_ticks))
+    rel = reliability
+    if rel is not None and int(np.asarray(rel.times).shape[0]) == 0:
+        rel = None
+    if rel is not None:
+        fleet_kw.update(rel_times=jnp.asarray(rel.times, jnp.float32),
+                        rel_deltas=jnp.asarray(rel.deltas, jnp.int32),
+                        n_rel_slots=int(np.asarray(rel.times).shape[0]))
     if scenario is not None:
         from repro.core.des import ctrl_tick_bound, unpack_ctrl_actions
         vwl = VWorkload.from_workload(wl, platform, attempts=scenario.attempts)
@@ -1048,6 +1134,10 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
         fl_cols.update(
             probe_times=np.asarray(pr.times, np.float64),
             probe_vals=np.asarray(res["probe_vals"], np.float64))
+    if rel is not None:
+        from repro.core.des import unpack_rel_actions
+        rt, rc = unpack_rel_actions(res["rel_act"], res["rel_n"])
+        fl_cols.update(rel_times=rt, rel_caps=rc)
     return M.SimTrace(
         start=np.asarray(res["start"], np.float64),
         finish=np.asarray(res["finish"], np.float64),
@@ -1073,7 +1163,8 @@ def simulate_to_trace(wl: M.Workload, platform: Optional[M.PlatformConfig] = Non
 
 @partial(jax.jit,
          static_argnames=("policy", "n_attempt_slots", "admission_sort",
-                          "n_ctrl_slots", "n_probe_slots", "return_state"))
+                          "n_ctrl_slots", "n_probe_slots", "n_rel_slots",
+                          "return_state"))
 def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       capacities, policy: int = POLICY_FIFO,
                       attempts=None, cap_times=None, cap_vals=None,
@@ -1085,6 +1176,8 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                       fleets=None, trig=None, obs_noise=None, drift_inc=None,
                       pool_gain=None, pool_base=None, n_pool_eff=None,
                       probes=None, n_probe_slots: Optional[int] = None,
+                      rel_times=None, rel_deltas=None,
+                      n_rel_slots: Optional[int] = None,
                       resume=None, wave_budget=None, time_budget=None,
                       return_state: bool = False):
     """arrival: [R, N]; task_res/service: [R, N, T]; capacities: [R, nres].
@@ -1120,6 +1213,14 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
     for that replica) plus the static ``n_probe_slots`` (the max tick bound
     over the batch) bring back stacked ``probe_vals [R, E, K]`` telemetry
     buffers, which ``batching.batch_trace`` slices per entry.
+
+    The reliability stage batches the same way: ``rel_times [R, RV]`` /
+    ``rel_deltas [R, RV, nres]`` (entries padded to a common RV with
+    never-firing ``INF``-time zero-delta rows — a reliability-free replica
+    is all padding) plus the static ``n_rel_slots`` bring back stacked
+    ``rel_act [R, RV, 1+nres]`` event buffers with counts ``rel_n [R]``.
+    ``"reliability:*"`` Sweep axes ride these tensors, so a whole
+    availability-policy grid lowers to this one jit+vmap call.
 
     Segment-restart hooks batch per replica too: ``resume`` (a stacked
     carry pytree from a prior ``return_state=True`` call), ``wave_budget
@@ -1164,6 +1265,9 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
         mapped["n_pool_eff"] = jnp.asarray(n_pool_eff, jnp.int32)
     if probes is not None:
         mapped["probes"] = jnp.asarray(probes, jnp.float32)
+    if rel_times is not None:
+        mapped["rel_times"] = jnp.asarray(rel_times, jnp.float32)
+        mapped["rel_deltas"] = jnp.asarray(rel_deltas, jnp.int32)
     if resume is not None:
         mapped["resume"] = resume
     if wave_budget is not None:
@@ -1192,6 +1296,9 @@ def simulate_ensemble(arrival, n_tasks, task_res, service, priority,
                         n_pool_eff=m.get("n_pool_eff"),
                         probe=m.get("probes"),
                         n_probe_slots=n_probe_slots,
+                        rel_times=m.get("rel_times"),
+                        rel_deltas=m.get("rel_deltas"),
+                        n_rel_slots=n_rel_slots,
                         resume=m.get("resume"),
                         wave_budget=m.get("wave_budget"),
                         time_budget=m.get("time_budget"),

@@ -20,14 +20,18 @@ its heap loop, the JAX engine as a sixth kernel stage inside
 :class:`~repro.core.model.SimTrace` as ``probe_times`` / ``probe_vals`` and
 wrapped here as a :class:`ProbeTimeline` with named channels.
 
-Channel layout (K = ``probe_channel_count(nres)`` = ``4*nres + 3``):
+Channel layout (K = ``probe_channel_count(nres)`` = ``5*nres + 3``):
 
   ====================  ====================================================
   ``qlen:<res>``        jobs queued on the resource (post-admission)
   ``busy:<res>``        occupied slots = effective capacity - free
   ``cap:<res>``         effective capacity = schedule + controller delta
+                        + reliability delta
   ``ctrl_delta:<res>``  controller delta vs the schedule baseline (0 open
                         loop)
+  ``rel_delta:<res>``   cumulative reliability delta (outages/evictions
+                        negative, repairs restoring; 0 without a
+                        ReliabilitySpec)
   ``fleet_min_perf``    minimum live model performance across the fleet
   ``fleet_max_staleness``  maximum staleness across the fleet
   ``live_pipelines``    queued + running pipelines — the live-width
@@ -105,7 +109,7 @@ def probe_channel_names(resource_names: Sequence[str]) -> List[str]:
     """The ``[K]`` channel names for a platform's resources, in buffer
     order (see the module docstring for the layout)."""
     names = []
-    for prefix in ("qlen", "busy", "cap", "ctrl_delta"):
+    for prefix in ("qlen", "busy", "cap", "ctrl_delta", "rel_delta"):
         names.extend(f"{prefix}:{r}" for r in resource_names)
     names.extend(["fleet_min_perf", "fleet_max_staleness",
                   "live_pipelines"])

@@ -93,34 +93,57 @@ def capacity_cost(schedule: CapacitySchedule, horizon_s: float,
 
 def realized_schedule(tr, compiled) -> CapacitySchedule:
     """The capacity timeline the engines *actually* provisioned: the planned
-    schedule overlaid with the controller's recorded action timeline.
+    schedule overlaid with the controller's recorded action timeline AND
+    the reliability stage's recorded outage/repair events.
 
     ``tr`` is the :class:`~repro.core.model.SimTrace` (its ``ctrl_times`` /
-    ``ctrl_caps`` columns are the engine-recorded actions), ``compiled`` the
-    :class:`~repro.ops.scenario.CompiledScenario` that produced it. The
-    controller composes with the schedule as a delta (effective capacity =
-    schedule(t) + target(t) - base, exactly the engines' control stage), so
-    the realized schedule is that sum clipped at 0. With no controller, a
-    disabled row, or zero recorded actions, the *planned schedule object* is
-    returned unchanged — existing summaries stay bit-identical.
+    ``ctrl_caps`` columns are the engine-recorded controller actions, its
+    ``rel_times`` / ``rel_caps`` columns the engine-recorded reliability
+    events as *cumulative* per-resource deltas), ``compiled`` the
+    :class:`~repro.ops.scenario.CompiledScenario` that produced it. Both
+    compose with the schedule as deltas (effective capacity = schedule(t) +
+    ctrl_target(t) - base + rel_cum(t), exactly the engines' control
+    stage), so the realized schedule is that sum clipped at 0. A zone
+    outage therefore shows up as a capacity *dip* whose recovery edge is
+    the repair crew's FIFO finish time — repair-delayed, not instantaneous.
+    With no controller and no fired reliability events the *planned
+    schedule object* is returned unchanged — existing summaries stay
+    bit-identical.
     """
     sched = compiled.schedule
     ctrl = getattr(compiled, "controller", None)
     times = getattr(tr, "ctrl_times", None)
-    if ctrl is None or times is None or times.shape[0] == 0:
+    has_ctrl = (ctrl is not None and times is not None
+                and times.shape[0] > 0)
+    rtimes = getattr(tr, "rel_times", None)
+    has_rel = rtimes is not None and rtimes.shape[0] > 0
+    if not has_ctrl and not has_rel:
         return sched
-    base = np.rint(np.asarray(
-        unpack_controller(np.asarray(ctrl, np.float64))[9])).astype(np.int64)
-    times = np.asarray(times, np.float64)
-    targets = np.asarray(tr.ctrl_caps, np.int64)
-    cuts = np.unique(np.concatenate([sched.times, times]))
-    planned = sched.at(cuts)
-    # controller target in effect at each cut: the last action at or before
-    # it, else the base (delta 0)
-    idx = np.searchsorted(times, cuts, side="right") - 1
-    tgt = np.where(idx[:, None] >= 0, targets[np.clip(idx, 0, None)],
-                   base[None, :])
-    return normalize(cuts, np.clip(planned + tgt - base[None, :], 0, None))
+    cut_list = [sched.times]
+    if has_ctrl:
+        times = np.asarray(times, np.float64)
+        cut_list.append(times)
+    if has_rel:
+        rtimes = np.asarray(rtimes, np.float64)
+        cut_list.append(rtimes)
+    cuts = np.unique(np.concatenate(cut_list))
+    caps = sched.at(cuts).astype(np.int64)
+    if has_ctrl:
+        base = np.rint(np.asarray(unpack_controller(
+            np.asarray(ctrl, np.float64))[9])).astype(np.int64)
+        targets = np.asarray(tr.ctrl_caps, np.int64)
+        # controller target in effect at each cut: the last action at or
+        # before it, else the base (delta 0)
+        idx = np.searchsorted(times, cuts, side="right") - 1
+        tgt = np.where(idx[:, None] >= 0, targets[np.clip(idx, 0, None)],
+                       base[None, :])
+        caps = caps + tgt - base[None, :]
+    if has_rel:
+        rcum = np.asarray(tr.rel_caps, np.int64)
+        ridx = np.searchsorted(rtimes, cuts, side="right") - 1
+        caps = caps + np.where(ridx[:, None] >= 0,
+                               rcum[np.clip(ridx, 0, None)], 0)
+    return normalize(cuts, np.clip(caps, 0, None))
 
 
 def lifecycle_summary(tr) -> Dict:
@@ -160,6 +183,87 @@ def lifecycle_summary(tr) -> Dict:
             - np.nan_to_num(tr.start[tr.fleet_pool_base:], nan=0.0),
             0.0, None).sum()),
     }
+
+
+def availability_summary(rel, platform, tr=None) -> Dict:
+    """The reliability block :func:`repro.core.engines._summarize` folds
+    into each replica's summary (``summary["availability"]``).
+
+    ``rel`` is the replica's
+    :class:`~repro.reliability.CompiledReliability`. Downtime integrals
+    come from the compiled event timeline itself (``times`` +
+    ``cum_deltas`` — post-drain up events past the horizon contribute
+    nothing, matching the engines, which never run past the horizon's
+    drain); per-domain-kind node-seconds come from the host-side
+    :class:`~repro.reliability.RelEvent` records (overlap-clamped node
+    counts). ``tr`` (the replica's SimTrace) adds eviction *resume*
+    accounting: evicted pipelines whose tasks still completed.
+
+    The spot-vs-on-demand cost split charges the nominal pools over the
+    horizon at the platform's cost rates, with the spot slice discounted —
+    the denominator a spot-fraction frontier (``examples/
+    reliability_frontier.py``) trades against availability.
+    """
+    h = float(rel.horizon_s)
+    base = np.asarray(rel.base_caps, np.float64)
+    nres = base.shape[0]
+
+    # ∫ nodes-down dt per resource, truncated at the horizon
+    down_node_s = np.zeros(nres)
+    if rel.n_events:
+        ts = np.asarray(rel.times, np.float64)
+        cum = rel.cum_deltas().astype(np.float64)          # [RV, R], <= 0
+        dt = np.diff(np.concatenate([ts, [h]])).clip(0.0, None)
+        down_node_s = (np.maximum(-cum, 0.0) * dt[:, None]).sum(0)
+    denom = np.maximum(base * h, 1e-12)
+    avail = 1.0 - down_node_s / denom
+
+    by_kind: Dict = {}
+    for ev in rel.events:
+        d = by_kind.setdefault(ev.kind, {"n": 0, "node_seconds": 0.0})
+        d["n"] += 1
+        dur = max(0.0, min(ev.t_up, h) - min(ev.t_down, h))
+        d["node_seconds"] += float(ev.nodes.sum()) * dur
+
+    out: Dict = {
+        "availability": {_res_name(r): float(avail[r])
+                         for r in range(nres)},
+        "downtime_node_seconds": {_res_name(r): float(down_node_s[r])
+                                  for r in range(nres)},
+        "n_events": rel.n_events,
+        "by_kind": by_kind,
+        "repair": {
+            "n_repairs": int(rel.repair_waits.shape[0]),
+            "mean_wait_s": float(rel.repair_waits.mean())
+            if rel.repair_waits.size else 0.0,
+            "max_wait_s": float(rel.repair_waits.max())
+            if rel.repair_waits.size else 0.0,
+            "queue_depth_max": rel.repair_depth_max,
+            "n_stragglers": rel.n_straggler_repairs,
+        },
+    }
+    rates = np.asarray(platform.cost_rates, np.float64)[:nres]
+    spot = np.asarray(rel.spot_nodes, np.float64)
+    od = base - spot
+    spot_cost = float((spot * rates).sum() * h / 3600.0 * rel.discount)
+    out["cost_split"] = {
+        "on_demand_cost": float((od * rates).sum() * h / 3600.0),
+        "spot_cost": spot_cost,
+        "spot_discount": float(rel.discount),
+        "spot_savings": float((spot * rates).sum() * h / 3600.0
+                              * (1.0 - rel.discount)),
+    }
+    if rel.evict_attempts is not None:
+        ev = np.asarray(rel.evict_attempts, np.int64)
+        hit = ev.sum(1) > 0                      # pipelines with evictions
+        evb: Dict = {"evicted_tasks": int(ev.sum()),
+                     "evicted_pipelines": int(hit.sum())}
+        done = getattr(tr, "completed", None) if tr is not None else None
+        if done is not None:
+            done = np.asarray(done, bool)[: hit.shape[0]]
+            evb["resumed_pipelines"] = int((hit & done).sum())
+        out["eviction"] = evb
+    return out
 
 
 def pipeline_spans(rec) -> Dict[str, np.ndarray]:

@@ -70,6 +70,19 @@ class FailureModel:
     the historical trace semantics exactly). Both engines shorten the
     attempt's recorded start/finish window accordingly, so per-attempt
     ``busy_node_seconds`` accounting stays exact.
+
+    **Composition with the reliability subsystem**
+    (:mod:`repro.reliability`): capacity-level effects compose additively —
+    :class:`OutageModel` deltas, maintenance drains, and compiled
+    reliability events (correlated domain outages, spot reclaims) all join
+    the engines' control stage as independent capacity deltas. Task-level
+    effects must NOT double-apply to one failure+retry cycle:
+    ``fail_holds_frac`` shortens the *failing* attempt's hold, while
+    :class:`repro.reliability.CheckpointSpec.ckpt_frac` shortens every
+    *retry* attempt (a checkpointed retrain re-runs only the lost
+    fraction). Configuring both on one experiment is rejected by
+    :func:`repro.reliability.check_no_double_apply` (called by the
+    engines before compiling) — pick one mechanism per experiment.
     """
 
     p_fail_by_type: Tuple[float, ...] = DEFAULT_P_FAIL

@@ -1,0 +1,16 @@
+"""Reliability subsystem: correlated failure domains, repair queues, spot
+eviction, and checkpointed retrains, compiled into the engines' control
+stage (see :mod:`repro.reliability.specs` for the declarative layer and
+:mod:`repro.reliability.compile` for the tensor lowering)."""
+from repro.reliability.compile import (CompiledReliability, RelEvent,
+                                       check_no_double_apply,
+                                       compile_reliability)
+from repro.reliability.specs import (CheckpointSpec, DomainOutageModel,
+                                     ReliabilitySpec, RepairSpec,
+                                     SpotPoolSpec, TopologySpec)
+
+__all__ = [
+    "TopologySpec", "DomainOutageModel", "RepairSpec", "SpotPoolSpec",
+    "CheckpointSpec", "ReliabilitySpec", "CompiledReliability", "RelEvent",
+    "compile_reliability", "check_no_double_apply",
+]

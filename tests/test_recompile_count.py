@@ -16,25 +16,25 @@ from repro.core.experiment import Sweep
 
 
 def test_mixed_sweep_compiles_exactly_once():
-    """The 16-point capacity+controller+trigger+probe grid: one
+    """The 32-point capacity+controller+trigger+probe+reliability grid: one
     simulate_ensemble call, one new jit-cache entry. A unique workload
     size keeps the cache cold for this test regardless of suite order."""
     base = dataclasses.replace(smoke_spec(engine="jax"),
                                workload=smoke_workload(n=43))
     sweep = dataclasses.replace(smoke_sweep(), base=base)
-    assert len(sweep.points()) == 16
+    assert len(sweep.points()) == 32
 
     size_before = vdes.simulate_ensemble._cache_size()
     with capture_calls("simulate_ensemble") as calls:
         results = sweep.run()
     size_after = vdes.simulate_ensemble._cache_size()
 
-    assert len(results) == 16
+    assert len(results) == 32
     assert len(calls) == 1, "grid must lower to ONE simulate_ensemble call"
     assert size_after - size_before == 1, \
         "exactly one XLA compilation for the whole mixed grid"
     # every axis value rides the batch tensors of that one call
-    assert calls[0].args[0].shape[0] == 16
+    assert calls[0].args[0].shape[0] == 32
 
 
 def test_audit_clean_on_production_sweep_path():

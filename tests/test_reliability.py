@@ -1,0 +1,315 @@
+"""Reliability subsystem: compile invariants, numpy-vs-JAX twin parity,
+repair-queue delays on the realized timeline, eviction/checkpoint task
+effects, composition with maintenance drains, and the double-apply guard.
+
+Property tests run under hypothesis when installed and skip cleanly
+otherwise; every property also has a seeded deterministic twin so the
+invariants are exercised either way."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.analysis.harness import (smoke_platform, smoke_reliability,
+                                    smoke_spec, smoke_workload)
+from repro.core import des, vdes
+from repro.core.experiment import run_experiment
+from repro.ops.accounting import availability_summary, realized_schedule
+from repro.reliability import (CheckpointSpec, DomainOutageModel,
+                               ReliabilitySpec, RepairSpec, SpotPoolSpec,
+                               TopologySpec, check_no_double_apply,
+                               compile_reliability)
+
+HORIZON = 300.0
+
+
+def _compile(seed=0, **kw):
+    rel = dataclasses.replace(smoke_reliability(), **kw)
+    return compile_reliability(rel, smoke_workload(), smoke_platform(),
+                               HORIZON, seed=seed)
+
+
+# ------------------------------------------------------------ compile layer
+
+def _check_compile_invariants(rel):
+    base = rel.base_caps
+    if rel.n_events:
+        assert (np.diff(rel.times) > 0).all(), "strictly increasing grid"
+        assert np.array_equal(rel.times,
+                              rel.times.astype(np.float32)), "f32 grid"
+        cum = rel.cum_deltas()
+        assert (cum <= 0).all(), "reliability only removes capacity"
+        assert (base[None, :] + cum >= 0).all(), \
+            "overlap clamp: effective capacity never below zero"
+    for ev in rel.events:
+        assert ev.t_up >= ev.t_down
+        assert (ev.nodes >= 0).all() and (ev.nodes <= base).all()
+        assert ev.repair_wait >= 0.0
+
+
+def test_compile_invariants_seeded():
+    for seed in range(8):
+        _check_compile_invariants(_compile(seed=seed))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 4),
+       st.floats(40.0, 400.0), st.floats(10.0, 120.0))
+def test_compile_invariants_property(seed, zones, racks, mtbf, mttr):
+    rel = ReliabilitySpec(
+        topology=TopologySpec(zones=zones, racks_per_zone=racks),
+        outages=DomainOutageModel(zone_mtbf_s=mtbf, rack_mtbf_s=mtbf,
+                                  mttr_s=mttr),
+        repair=RepairSpec(crews=1), time_quantum_s=1.0)
+    c = compile_reliability(rel, None, smoke_platform(), HORIZON, seed=seed)
+    _check_compile_invariants(c)
+
+
+def test_compile_is_deterministic_per_seed():
+    a, b, c = _compile(seed=3), _compile(seed=3), _compile(seed=4)
+    assert np.array_equal(a.times, b.times)
+    assert np.array_equal(a.deltas, b.deltas)
+    assert np.array_equal(a.evict_attempts, b.evict_attempts)
+    assert not np.array_equal(a.times, c.times)
+
+
+def test_all_none_spec_compiles_empty():
+    rel = ReliabilitySpec(outages=None, repair=None, spot=None)
+    c = compile_reliability(rel, smoke_workload(), smoke_platform(), HORIZON)
+    assert c.n_events == 0 and c.evict_attempts is None
+
+
+# ------------------------------------------------------------- twin parity
+
+def test_engine_twin_parity_bit_exact():
+    """numpy f64 heap vs JAX f32 while_loop: wave-for-wave identical
+    start/finish/waves AND identical fired reliability event records, on
+    the integer-grid (time_quantum_s=1) parity configuration."""
+    wl, plat = smoke_workload(), smoke_platform()
+    rel = _compile(seed=0)
+    assert rel.n_events > 0
+    a = des.simulate(wl, plat, reliability=rel)
+    b = vdes.simulate_to_trace(wl, plat, reliability=rel)
+    for k in ("start", "finish", "ready"):
+        assert np.array_equal(getattr(a, k), getattr(b, k),
+                              equal_nan=True), k
+    assert a.waves == b.waves
+    assert np.array_equal(a.rel_times, b.rel_times)
+    assert np.array_equal(a.rel_caps, b.rel_caps)
+
+
+def test_disabled_reliability_is_bitwise_noop():
+    wl, plat = smoke_workload(), smoke_platform()
+    empty = compile_reliability(
+        ReliabilitySpec(outages=None, repair=None), wl, plat, HORIZON)
+    a = des.simulate(wl, plat)
+    b = des.simulate(wl, plat, reliability=empty)
+    c = vdes.simulate_to_trace(wl, plat, reliability=empty)
+    for k in ("start", "finish"):
+        assert np.array_equal(getattr(a, k), getattr(b, k), equal_nan=True)
+        assert np.array_equal(getattr(a, k), getattr(c, k), equal_nan=True)
+    assert b.rel_times is None and c.rel_times is None
+
+
+def test_full_spec_summary_parity():
+    """The whole experiment path (scenario + controller + fleet + probe +
+    reliability) agrees across engines, including the availability block."""
+    s_np = run_experiment(smoke_spec(engine="numpy"))
+    s_jx = run_experiment(smoke_spec(engine="jax"))
+    assert s_np.summary["mean_wait_s"] == s_jx.summary["mean_wait_s"]
+    assert s_np.summary["availability"] == s_jx.summary["availability"]
+    names = [n for n in s_jx.timeline.channels if n.startswith("rel_delta")]
+    assert names == ["rel_delta:a", "rel_delta:b"]
+
+
+# ------------------------------------------- repair queue: delayed returns
+
+def _congested():
+    """Outage pressure far above one crew's service rate, so returns queue."""
+    return ReliabilitySpec(
+        topology=TopologySpec(zones=2, racks_per_zone=2),
+        outages=DomainOutageModel(zone_mtbf_s=60.0, rack_mtbf_s=40.0,
+                                  mttr_s=40.0),
+        repair=RepairSpec(crews=1, repair_time_s=40.0),
+        time_quantum_s=1.0)
+
+
+def test_repair_queue_delays_capacity_return():
+    plat = smoke_platform()
+    slow = compile_reliability(_congested(), None, plat, HORIZON, seed=1)
+    fast = compile_reliability(
+        dataclasses.replace(_congested(), repair=RepairSpec(
+            crews=16, repair_time_s=40.0)), None, plat, HORIZON, seed=1)
+    assert slow.repair_waits.max() > 0.0, "1 crew must queue"
+    assert fast.repair_waits.max() == 0.0, "16 crews never queue"
+    assert slow.repair_depth_max > fast.repair_depth_max
+    down_slow = availability_summary(slow, plat)["downtime_node_seconds"]
+    down_fast = availability_summary(fast, plat)["downtime_node_seconds"]
+    assert sum(down_slow.values()) > sum(down_fast.values()), \
+        "crew saturation must cost extra downtime"
+
+
+def test_repair_fifo_matches_single_station_queue():
+    """Compiled up-times are exactly the c-server FIFO finish times of the
+    chronological repair jobs — the engines' own queue discipline."""
+    rel = compile_reliability(_congested(), None, smoke_platform(),
+                              HORIZON, seed=1)
+    jobs = sorted(rel.events, key=lambda e: (e.t_down, e.kind, e.zone,
+                                             e.rack))
+    starts = np.array([e.t_down + e.repair_wait for e in jobs])
+    assert (np.diff(starts) >= 0).all(), "FIFO: service starts in order"
+
+
+def test_zone_outage_shows_delayed_return_on_realized_timeline():
+    """Acceptance criterion: the realized capacity timeline dips at the
+    outage and recovers only at the crew's finish time — every recovery
+    edge is a compiled (queue-delayed) up event, none is instantaneous."""
+    from repro.ops.scenario import compile_static
+    wl, plat = smoke_workload(), smoke_platform()
+    rel = compile_reliability(_congested(), wl, plat, HORIZON, seed=1)
+    tr = des.simulate(wl, plat, scenario=compile_static(wl, plat),
+                      reliability=rel)
+    sched = realized_schedule(tr, compile_static(wl, plat))
+    base = plat.capacities
+    assert (sched.caps < base[None, :]).any(), "outage must dip capacity"
+    # recovery edges (capacity increases) happen exactly at up events whose
+    # repair waited on the crew queue
+    rises = np.nonzero((np.diff(sched.caps, axis=0) > 0).any(1))[0] + 1
+    up_times = {float(np.float32(e.t_up)) for e in rel.events
+                if e.t_up < HORIZON}
+    for t in sched.times[rises]:
+        assert float(t) in up_times
+    delayed = {float(np.float32(e.t_up)) for e in rel.events
+               if e.repair_wait > 0 and e.t_up < HORIZON}
+    assert delayed & set(map(float, sched.times[rises])), \
+        "at least one recovery edge must be queue-delayed"
+
+
+# ------------------------------------- spot eviction & checkpointed retries
+
+def test_eviction_adds_attempts_and_accounts_resumes():
+    spec = dataclasses.replace(
+        smoke_spec(engine="numpy"),
+        reliability=dataclasses.replace(
+            smoke_reliability(),
+            spot=SpotPoolSpec(frac=0.4, evict_mtbe_s=60.0, reclaim_s=10.0,
+                              discount=0.3)))
+    res = run_experiment(spec)
+    av = res.summary["availability"]
+    assert av["eviction"]["evicted_tasks"] > 0
+    assert av["eviction"]["resumed_pipelines"] >= 0
+    assert res.summary["mean_attempts"] > 1.0, \
+        "evictions must surface as extra attempts"
+    assert av["cost_split"]["spot_cost"] > 0.0
+    assert av["cost_split"]["spot_savings"] > 0.0
+
+
+def test_checkpoint_scales_retry_durations():
+    """ckpt_frac=0.5 halves every retry attempt; total busy time drops
+    relative to full re-runs with the identical eviction draw."""
+    base = dataclasses.replace(
+        smoke_spec(engine="numpy"), fleet=None, trigger=None, probe=None,
+        scenario=None)
+    no_ck = dataclasses.replace(base, reliability=dataclasses.replace(
+        smoke_reliability(), outages=None, repair=None))
+    with_ck = dataclasses.replace(base, reliability=dataclasses.replace(
+        no_ck.reliability, checkpoint=CheckpointSpec(ckpt_frac=0.5)))
+    r0 = run_experiment(no_ck)
+    r1 = run_experiment(with_ck)
+    assert r0.summary["mean_attempts"] == r1.summary["mean_attempts"]
+    busy0 = np.nansum(r0.records.att_finish - r0.records.att_start)
+    busy1 = np.nansum(r1.records.att_finish - r1.records.att_start)
+    assert busy1 < busy0, "checkpointed retries must occupy less"
+    # retry slots run exactly (1 - ckpt_frac) of the base duration
+    durs0 = (r0.records.att_finish - r0.records.att_start)
+    durs1 = (r1.records.att_finish - r1.records.att_start)
+    retried = np.asarray(r0.records.attempts) > 1
+    assert np.allclose(durs1[retried, 1], 0.5 * durs0[retried, 1])
+
+
+def test_checkpoint_injector_bridges_to_training_launcher():
+    from repro.checkpoint.manager import FaultInjector
+    ck = CheckpointSpec(ckpt_frac=0.5, fault_step_stride=30.0)
+    rel = compile_reliability(
+        dataclasses.replace(_congested(), checkpoint=ck), None,
+        smoke_platform(), HORIZON, seed=1)
+    inj = ck.injector(rel)
+    assert isinstance(inj, FaultInjector)
+    assert inj.fail_at == {int(e.t_down // 30.0) for e in rel.events}
+    step = next(iter(inj.fail_at))
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        inj.maybe_fail(step)
+
+
+def test_straggler_monitor_flags_slow_repairs():
+    """Repair durations stream through the training launcher's
+    StragglerMonitor; a deterministic outlier must be flagged."""
+    found = any(_compile(seed=s).n_straggler_repairs > 0
+                for s in range(30))
+    assert found, "30 seeds of Exp(30s) repairs should include a straggler"
+
+
+def test_double_apply_guard():
+    from repro.ops.failures import FailureModel
+    from repro.ops.scenario import Scenario
+    rel = ReliabilitySpec(checkpoint=CheckpointSpec(ckpt_frac=0.5))
+    bad = Scenario(failures=FailureModel(fail_holds_frac=0.5))
+    with pytest.raises(ValueError, match="double-apply"):
+        check_no_double_apply(rel, bad)
+    check_no_double_apply(rel, Scenario())                 # frac = 1.0: ok
+    check_no_double_apply(ReliabilitySpec(), bad)          # no ckpt: ok
+    spec = dataclasses.replace(smoke_spec(engine="numpy"), scenario=bad,
+                               reliability=rel)
+    with pytest.raises(ValueError, match="double-apply"):
+        run_experiment(spec)
+
+
+# ----------------------------------------------- composition & batching
+
+def test_composes_with_maintenance_windows():
+    """Maintenance drains (schedule) + reliability events (control stage)
+    compose additively, identically in both engines."""
+    from repro.ops.capacity import MaintenanceWindows
+    from repro.ops.scenario import Scenario
+    scen = Scenario(name="maint", capacity=MaintenanceWindows(
+        windows=((100.0, 200.0, 0, 0.5),)))
+    spec = dataclasses.replace(
+        smoke_spec(engine="numpy"), scenario=scen, fleet=None, trigger=None)
+    r_np = run_experiment(spec)
+    r_jx = run_experiment(dataclasses.replace(spec, engine="jax"))
+    assert r_np.summary["mean_wait_s"] == r_jx.summary["mean_wait_s"]
+    assert r_np.summary["availability"] == r_jx.summary["availability"]
+    # probe cap channel reflects BOTH the drain and reliability deltas
+    cap = r_jx.timeline.channel("cap:a")
+    rd = r_jx.timeline.channel("rel_delta:a")
+    t = r_jx.timeline.times
+    drained = (t >= 100.0) & (t < 200.0)
+    base_a = 3
+    expect = np.where(drained, round(base_a * 0.5), base_a) + rd
+    assert np.array_equal(cap, expect)
+
+
+def test_sweep_padding_rows_are_inert():
+    """A mixed sweep (reliability on/off) runs as one batch; the off point
+    is bit-identical to running it alone without any reliability axis."""
+    from repro.core.experiment import Sweep
+    base = dataclasses.replace(smoke_spec(engine="jax"),
+                               workload=smoke_workload(n=37))
+    mixed = Sweep(base, {"reliability": [None, smoke_reliability()]}).run()
+    solo = run_experiment(dataclasses.replace(base, reliability=None))
+    assert mixed[0].summary["mean_wait_s"] == solo.summary["mean_wait_s"]
+    assert "availability" not in mixed[0].summary
+    assert "availability" in mixed[1].summary
+
+
+def test_compact_and_stream_engines_reject_reliability():
+    spec = smoke_spec(engine="jax-compact")
+    with pytest.raises(NotImplementedError, match="compaction"):
+        run_experiment(spec)
+    from repro.analysis.harness import smoke_stream_spec
+    stream = dataclasses.replace(smoke_stream_spec(),
+                                 reliability=smoke_reliability())
+    with pytest.raises(ValueError, match="jax-stream"):
+        run_experiment(stream)
